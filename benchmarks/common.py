@@ -1,0 +1,98 @@
+"""Shared Monte-Carlo machinery for the paper's error analysis (Sec. 5.1).
+
+Protocol (faithful to the paper):
+  - N_SAMPLES random 4x4 matrices per dynamic-range point r; entries have
+    magnitude in [2^-r, 2^r] (log-uniform), random sign;
+  - QRD with Q computed by augmenting rows with I (e = 8 elements/row);
+  - SNR_dB = 10 log10(sum A^2 / sum (A - QR)^2), reconstruction in float64;
+  - reference: jnp.linalg.qr in single precision ("Matlab qr").
+
+The paper uses 10,000 samples; default here is 2,000 for CPU-CI speed
+(REPRO_BENCH_SAMPLES=10000 or --full restores the paper's count).  (N, iters)
+are traced scalars, so an entire Fig. 9-style sweep reuses ONE compilation
+per architecture variant.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (GivensConfig, GivensUnit, qr_cordic, qr_fixed,
+                        qr_givens_float, qr_jnp, snr_db)
+
+N_SAMPLES = int(os.environ.get("REPRO_BENCH_SAMPLES", "2000"))
+R_SET = tuple(int(x) for x in os.environ.get(
+    "REPRO_BENCH_RSET", "1,5,10,15,20").split(","))
+
+
+def gen_matrices(seed: int, r: float, n: int = None, m: int = 4):
+    """(n, m, m) float64 with |a_ij| log-uniform in [2^-r, 2^r]."""
+    n = N_SAMPLES if n is None else n
+    rng = np.random.default_rng(seed)
+    mag = np.exp2(rng.uniform(-r, r, size=(n, m, m)))
+    sign = rng.choice([-1.0, 1.0], size=(n, m, m))
+    return sign * mag
+
+
+@functools.lru_cache(maxsize=32)
+def _sweep_fn(cfg: GivensConfig):
+    """One jitted (A, N, iters) -> mean SNR function per unit variant."""
+    unit = GivensUnit(cfg)
+
+    @jax.jit
+    def run(A, N, iters):
+        Q, R = qr_cordic(A, unit, N=N, iters=iters)
+        return jnp.mean(snr_db(A, Q, R))
+
+    return run
+
+
+def snr_cordic(cfg: GivensConfig, A, N=None, iters=None) -> float:
+    N = cfg.n if N is None else N
+    iters = (GivensConfig(**{**cfg.__dict__, "n": int(N)}).default_iters()
+             if iters is None else iters)
+    return float(_sweep_fn(cfg)(A, jnp.asarray(N), jnp.asarray(iters)))
+
+
+@jax.jit
+def _snr_jnp(A):
+    Q, R = qr_jnp(A, jnp.float32)
+    return jnp.mean(snr_db(A, Q, R))
+
+
+def snr_reference(A) -> float:
+    return float(_snr_jnp(A))
+
+
+@functools.partial(jax.jit, static_argnames=("width", "iters"))
+def _snr_fixed(A, width, iters, scale_exp):
+    Q, R = qr_fixed(A, width, iters, scale_exp)
+    return jnp.mean(snr_db(A, Q, R))
+
+
+def snr_fixed(A, width=32, iters=27, scale_exp=0) -> float:
+    return float(_snr_fixed(A, width, iters, jnp.asarray(scale_exp)))
+
+
+def mean_snr_over_r(fn, seed0=0, r_set=None) -> float:
+    """Paper-style summary: mean SNR across the dynamic-range sweep."""
+    r_set = R_SET if r_set is None else r_set
+    vals = [fn(gen_matrices(seed0 + i, r)) for i, r in enumerate(r_set)]
+    return float(np.mean(vals))
+
+
+def timed(fn, *args, reps=3):
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def csv_row(name, us_per_call, derived):
+    print(f"{name},{us_per_call:.3f},{derived}")

@@ -1,0 +1,68 @@
+"""Tables 6-7 — throughput/latency/area vs prior FP CORDIC designs.
+
+The initiation-interval model is exact (it is architectural, not
+technological):
+    ours          II = e                     (vectoring/rotation overlapped)
+    FP CORDIC[32] II = 69 + e                (angle before rotations)
+    FP CORDIC[21] II = 212 + 224 e           (word-serial)
+    7x7 QRD [30]  II = 364
+Throughput at each design's reported fmax reproduces the paper's MOp/s
+column; we also measure our emulation's actual throughput on this CPU
+(vectorized over a batch of rotations — the "spatial" analogue of the
+pipeline) and the Pallas-kernel (interpret mode) rotations/s.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import csv_row, timed
+
+E = 8  # elements per row (4x4 QRD with Q, as in the paper)
+
+DESIGNS = {
+    # name: (fmax MHz, latency cycles, II(e) lambda)
+    "fp_cordic_[21]": (67.1, 224, lambda e: 212 + 224 * e),
+    "fp_cordic_[32]": (173.3, 138, lambda e: 69 + e),
+    "hub_fp_rotator (ours)": (255.8, 60, lambda e: e),
+}
+PAPER_MOPS = {"fp_cordic_[21]": 0.033, "fp_cordic_[32]": 2.25,
+              "hub_fp_rotator (ours)": 31.97}
+
+
+def measured_kernel_rate(batch=512, L=128, iters=24):
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    x = (np.random.default_rng(0).uniform(-1.5, 1.5, (2, batch, L))
+         * 2 ** 24).astype(np.int32)
+    xj, yj = jnp.asarray(x[0]), jnp.asarray(x[1])
+
+    def run():
+        return ops.givens_rotate_rows_fixed(xj, yj, iters=iters, hub=True)
+
+    sec = timed(run)
+    return batch / sec
+
+
+def main(full=False):
+    print("# table6: design,fmax_mhz,latency_cyc,II_e8,mops_model,mops_paper")
+    rows = []
+    for name, (fmax, lat, ii) in DESIGNS.items():
+        mops = fmax / ii(E)
+        rows.append((name, mops))
+        print(f"{name},{fmax},{lat},{ii(E)},{mops:.3f},{PAPER_MOPS[name]}")
+    ours = dict(rows)["hub_fp_rotator (ours)"]
+    gen = dict(rows)["fp_cordic_[32]"]
+    print(f"# speedup vs [32]: {ours/gen:.1f}x (paper: ~15x)")
+    print("# table7: design,precision,luts_paper")
+    for n, l in [("fp_cordic_[21]", 11718), ("fp_cordic_[32]", 22189),
+                 ("hub_fp_rotator", 8463)]:
+        print(f"{n},double,{l}")
+
+    rate = measured_kernel_rate()
+    csv_row("table6_7_throughput", 1e6 / rate,
+            f"model_speedup_vs_[32]={ours/gen:.1f}x;"
+            f"pallas_interp_rot_per_s={rate:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""QRD-RLS adaptive beamforming — the paper's own application domain.
+
+A narrowband uniform linear array receives a desired signal plus two
+interferers; the beamformer weights solve the recursive least-squares
+problem.  Instead of forming the (ill-conditioned) covariance matrix, the
+numerically-robust QRD-RLS update triangularizes the forgetting-factor-
+weighted data matrix with Givens rotations — each new snapshot is annihilated
+into R by exactly the rotations the paper's unit computes (vectoring on the
+leading pair, sigma-replay across the row).
+
+    PYTHONPATH=src python examples/adaptive_beamforming.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import GivensConfig, GivensUnit, qr_givens_float
+
+N_ANT = 8          # array elements
+SNAPSHOTS = 200
+LAMBDA = 0.99      # forgetting factor
+
+
+def steering(theta_deg, n=N_ANT):
+    d = 0.5  # half-wavelength spacing
+    k = 2 * np.pi * d * np.sin(np.deg2rad(theta_deg))
+    return np.exp(1j * k * np.arange(n))
+
+
+def qrd_rls_update(R, z, x, d, lam, unit=None, rot_fn=None):
+    """One QRD-RLS step: rotate snapshot x (and target d) into (R | z).
+
+    Complex arithmetic is carried as interleaved real rotations; with
+    `unit` given, the rotations run on the paper's bit-accurate CORDIC
+    engine (rot_fn = jitted unit.rotate_rows), else in f64 Givens.
+    """
+    R = np.sqrt(lam) * R
+    z = np.sqrt(lam) * z
+    work = np.concatenate([R, z[:, None]], axis=1)         # (n, n+1)
+    row = np.concatenate([x, [d]])                         # (n+1,)
+    for k in range(R.shape[0]):
+        a, b = work[k, k], row[k]
+        if unit is None:
+            r = np.hypot(a, b)
+            if r == 0:
+                continue
+            c, s = a / r, b / r
+            wk = c * work[k] + s * row
+            row = -s * work[k] + c * row
+            work[k] = wk
+        else:
+            # roll so the pivot column leads: one fixed shape -> one compile
+            xr, yr = rot_fn(
+                unit.encode(jnp.asarray(np.roll(work[k], -k))),
+                unit.encode(jnp.asarray(np.roll(row, -k))))
+            work[k] = np.roll(np.asarray(unit.decode(xr)), k)
+            rolled = np.array(unit.decode(yr))  # writable copy
+            rolled[0] = 0.0
+            row = np.roll(rolled, k)
+    return work[:, :-1], work[:, -1]
+
+
+def main(use_cordic=True):
+    rng = np.random.default_rng(0)
+    a_sig = steering(10.0)
+    a_i1 = steering(-40.0)
+    a_i2 = steering(55.0)
+
+    # real-valued formulation: stack real/imag parts
+    def snap():
+        s = rng.normal() * 1.0
+        i1 = rng.normal() * 3.0
+        i2 = rng.normal() * 3.0
+        noise = (rng.normal(size=N_ANT) + 1j * rng.normal(size=N_ANT)) * 0.1
+        x = s * a_sig + i1 * a_i1 + i2 * a_i2 + noise
+        return np.concatenate([x.real, x.imag]), s
+
+    n = 2 * N_ANT
+    R = np.eye(n) * 1e-3
+    z = np.zeros(n)
+    unit = GivensUnit(GivensConfig(hub=True, n=26)) if use_cordic else None
+    import jax
+    rot_fn = jax.jit(unit.rotate_rows) if unit else None
+
+    errs = []
+    for t in range(SNAPSHOTS):
+        x, d = snap()
+        R, z = qrd_rls_update(R, z, x, d, LAMBDA, unit=unit, rot_fn=rot_fn)
+        # back-substitute for the weights and measure output error
+        w = np.linalg.solve(R + 1e-12 * np.eye(n), z)
+        errs.append((x @ w - d) ** 2)
+        if (t + 1) % 100 == 0:
+            print(f"step {t+1:4d}: MSE(last 50) = "
+                  f"{np.mean(errs[-50:]):.4f}")
+
+    mse_end = np.mean(errs[-50:])
+    sig_power = 1.0          # var(s); interferers are 9x stronger each
+    rejection_db = 10 * np.log10(sig_power / mse_end)
+    print(f"\nQRD-RLS beamformer ({'CORDIC-HUB unit' if use_cordic else 'f64'}):"
+          f" residual MSE {mse_end:.5f} vs signal power {sig_power:.1f} "
+          f"-> {rejection_db:.1f} dB interference rejection")
+    assert mse_end < 0.05 * sig_power
+    return mse_end
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""repro — a JAX training/serving framework built around the paper
+
+    Hormigo & Muñoz, "Efficient Floating-Point Givens Rotation Unit",
+    Circuits, Systems, and Signal Processing (2020).
+
+Layout:
+    repro.core      bit-accurate emulation of the FP Givens rotation unit
+                    (block-FP CORDIC, sigma-bit reuse, HUB format) + QRD engine
+    repro.kernels   Pallas TPU kernels for the CORDIC Givens rotator
+    repro.models    the ten assigned LM-family architectures
+    repro.optim     AdamW + QMuon (Givens-QR orthogonalized updates)
+    repro.data      deterministic shardable data pipeline
+    repro.checkpoint, repro.runtime   fault-tolerance substrate
+    repro.configs   per-architecture configs (--arch selectable)
+    repro.launch    mesh / dryrun / train / serve entry points
+"""
+import jax
+
+# The bit-accurate arithmetic emulation in repro.core requires 64-bit integer
+# lanes (internal significands up to ~48 bits).  All model/launch code pins
+# dtypes explicitly (bf16/f32/int32), so enabling x64 globally is safe.
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+from .registry import (ARCH_IDS, SHAPES, applicable_cells, get_config,
+                       reduce_config, shape_of)
+
+__all__ = ["ARCH_IDS", "SHAPES", "get_config", "reduce_config",
+           "applicable_cells", "shape_of"]

@@ -1,0 +1,17 @@
+"""command-r-35b [dense]: 40L d_model=8192 64H (GQA kv=8) d_ff=22528
+vocab=256000, GQA, no-bias. [hf:CohereForAI/c4ai-command-r-v01]
+"""
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-35b",
+    family="lm",
+    n_layers=40,
+    d_model=8192,
+    vocab=256000,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=22528,
+    head_dim=128,
+    rope_theta=10000.0,
+)

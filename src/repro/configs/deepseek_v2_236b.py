@@ -1,0 +1,22 @@
+"""deepseek-v2-236b [moe]: 60L d_model=5120 128H d_ff(expert)=1536 vocab=102400,
+MoE 160e top-6, MLA kv_lora=512, 2 shared + 160 routed. [arXiv:2405.04434; hf]
+"""
+from repro.models import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    family="lm",
+    n_layers=60,
+    d_model=5120,
+    vocab=102400,
+    n_heads=128,
+    n_kv_heads=128,           # MLA: every head has its own (latent) KV
+    d_ff=12288,               # the single leading dense layer
+    head_dim=128,
+    rope_theta=10000.0,
+    mla=MLAConfig(q_lora=1536, kv_lora=512, qk_nope=128, qk_rope=64, v_dim=128),
+    moe=MoEConfig(n_experts=160, top_k=6, d_expert=1536,
+                  n_shared=2, d_shared=2 * 1536, router_scale=16.0),
+    first_dense=1,
+    kv_chunk=512,             # 128 heads x 32k prefill: keep score tiles small
+)

@@ -1,0 +1,20 @@
+"""llama-3.2-vision-90b [vlm]: 100L d_model=8192 64H (GQA kv=8) d_ff=28672
+vocab=128256, gated cross-attn image layers every 5th; vision frontend is a
+STUB (input_specs provides patch embeddings). [hf:meta-llama/Llama-3.2-*-Vision]
+"""
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    n_layers=100,            # 80 self + 20 gated cross layers
+    d_model=8192,
+    vocab=128256,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28672,
+    head_dim=128,
+    rope_theta=500000.0,
+    cross_every=5,
+    n_image_tokens=6144,     # stub: 6k precomputed patch embeddings
+)

@@ -1,0 +1,16 @@
+"""mamba2-780m [ssm]: 48L d_model=1536 (attn-free) vocab=50280 ssm_state=128,
+SSD (state-space duality). [arXiv:2405.21060]
+"""
+from repro.models import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m",
+    family="ssm",
+    n_layers=48,
+    d_model=1536,
+    vocab=50280,
+    d_ff=0,                      # attention-free, no MLP
+    ssm=SSMConfig(d_state=128, expand=2, head_dim=64, n_groups=1,
+                  conv_width=4, chunk=128),
+    subquadratic=True,           # O(1) decode state => runs long_500k
+)

@@ -1,0 +1,23 @@
+"""recurrentgemma-2b [hybrid]: 26L d_model=2560 10H (MQA kv=1) d_ff=7680
+vocab=256000, RG-LRU + local attention, pattern (rec, rec, attn).
+[arXiv:2402.19427]
+"""
+from repro.models import ModelConfig, RGLRUConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    vocab=256000,
+    n_heads=10,
+    n_kv_heads=1,
+    d_ff=7680,
+    head_dim=256,
+    window=2048,                 # local attention
+    pattern=("rec", "rec", "attn"),
+    rglru=RGLRUConfig(lru_width=2560, conv_width=4),
+    mlp_act="gelu",              # GeGLU
+    embed_scale=True,
+    subquadratic=True,           # bounded state => runs long_500k
+)

@@ -1,0 +1,115 @@
+"""Architecture / shape registry: --arch <id> --shape <cell> resolution.
+
+Shape cells (assignment):
+    train_4k     seq=4096    global_batch=256   (train_step)
+    prefill_32k  seq=32768   global_batch=32    (prefill)
+    decode_32k   seq=32768   global_batch=128   (serve_step, 1 new token)
+    long_500k    seq=524288  global_batch=1     (serve_step; sub-quadratic only)
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.models import ModelConfig
+
+_MODULES = {
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe_42b",
+    "whisper-medium": "whisper_medium",
+    "stablelm-1.6b": "stablelm_1_6b",
+    "command-r-35b": "command_r_35b",
+    "starcoder2-7b": "starcoder2_7b",
+    "qwen3-8b": "qwen3_8b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "llama-3.2-vision-90b": "llama32_vision_90b",
+    "mamba2-780m": "mamba2_780m",
+}
+ARCH_IDS = tuple(_MODULES)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str        # 'train' | 'prefill' | 'decode'
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def shape_of(name: str) -> ShapeCell:
+    return SHAPES[name]
+
+
+def applicable(cfg: ModelConfig, cell: ShapeCell) -> bool:
+    """Assignment rules: long_500k only for sub-quadratic archs; decode only
+    for archs with a decoder (all ten here have one)."""
+    if cell.name == "long_500k" and not cfg.subquadratic:
+        return False
+    if cell.kind == "decode" and not cfg.has_decoder:
+        return False
+    return True
+
+
+def applicable_cells():
+    """All runnable (arch, shape) pairs — the dry-run/roofline cell list."""
+    out = []
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        for s in SHAPES.values():
+            if applicable(cfg, s):
+                out.append((a, s.name))
+    return out
+
+
+def reduce_config(cfg: ModelConfig) -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests (per the assignment)."""
+    r = {
+        "d_model": 128,
+        "vocab": 512,
+        "n_heads": 4,
+        "n_kv_heads": min(max(cfg.n_kv_heads, 1), 2) if cfg.n_heads else 0,
+        "d_ff": 256 if cfg.d_ff else 0,
+        "head_dim": 32,
+        "kv_chunk": 64,
+        "window": 16 if cfg.window else None,
+        "n_image_tokens": 64,
+        "enc_seq": 32,
+    }
+    if cfg.family == "vlm":
+        r["n_layers"] = 4
+        r["cross_every"] = 2
+    elif cfg.family == "hybrid":
+        r["n_layers"] = 5          # 1 full (rec,rec,attn) period + 2 tail
+    elif cfg.family == "encdec":
+        r["n_layers"] = 2
+        r["enc_layers"] = 2
+    else:
+        r["n_layers"] = 2
+    if cfg.moe:
+        r["moe"] = dataclasses.replace(
+            cfg.moe, n_experts=8, top_k=2, d_expert=64,
+            d_shared=64 if cfg.moe.n_shared else 0)
+    if cfg.mla:
+        r["mla"] = dataclasses.replace(
+            cfg.mla, q_lora=64, kv_lora=32, qk_nope=16, qk_rope=16, v_dim=16)
+        r["head_dim"] = 32
+        r["n_kv_heads"] = 4        # MLA: kv heads == heads
+    if cfg.ssm:
+        r["ssm"] = dataclasses.replace(cfg.ssm, d_state=16, head_dim=16,
+                                       chunk=8)
+    if cfg.rglru:
+        r["rglru"] = dataclasses.replace(cfg.rglru, lru_width=128)
+    return dataclasses.replace(cfg, **r)

@@ -1,0 +1,18 @@
+"""stablelm-1.6b [dense]: 24L d_model=2048 32H d_ff=5632 vocab=100352,
+partial rotary (25%). [hf:stabilityai/stablelm-2-1_6b]
+"""
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-1.6b",
+    family="lm",
+    n_layers=24,
+    d_model=2048,
+    vocab=100352,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=5632,
+    head_dim=64,
+    rotary_pct=0.25,
+    norm="ln",
+)

@@ -1,0 +1,22 @@
+"""starcoder2-7b [dense]: 32L d_model=4608 36H (GQA kv=4) d_ff=18432
+vocab=49152, GQA, RoPE. [arXiv:2402.19173]
+"""
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-7b",
+    family="lm",
+    n_layers=32,
+    d_model=4608,
+    vocab=49152,
+    n_heads=36,
+    n_kv_heads=4,
+    d_ff=18432,
+    head_dim=128,
+    rope_theta=100000.0,
+    norm="ln",
+    attn_bias=True,
+    mlp_gated=False,
+    mlp_act="gelu",
+    mlp_bias=True,
+)

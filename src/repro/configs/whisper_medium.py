@@ -1,0 +1,24 @@
+"""whisper-medium [audio]: 24L(enc)+24L(dec) d_model=1024 16H d_ff=4096
+vocab=51865, enc-dec, conv frontend is a STUB (input_specs provides frame
+embeddings). [arXiv:2212.04356]
+"""
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="encdec",
+    n_layers=24,             # decoder depth
+    enc_layers=24,
+    enc_seq=1500,            # 30 s of audio at 50 Hz after the conv stub
+    d_model=1024,
+    vocab=51865,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    head_dim=64,
+    norm="ln",
+    attn_bias=True,
+    mlp_gated=False,
+    mlp_act="gelu",
+    mlp_bias=True,
+)

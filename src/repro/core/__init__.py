@@ -1,0 +1,21 @@
+# The paper's primary contribution: a bit-accurate, fully-vectorized JAX
+# emulation of the floating-point Givens rotation unit (block-FP CORDIC with
+# sigma-bit reuse, conventional + HUB datapaths) and the QRD engines built on
+# it.  See DESIGN.md §1-§3.
+from .formats import (FloatFormat, HALF, SINGLE, DOUBLE,
+                      encode_ieee, decode_ieee, encode_hub, decode_hub)
+from .givens import GivensConfig, GivensUnit
+from .qrd import (QRDEngine, qr_cordic, qr_givens_float, qr_jnp, qr_fixed,
+                  snr_db, givens_schedule)
+from .hub import hub_quantize, hub_error_bound
+from . import cordic, converters
+
+__all__ = [
+    "FloatFormat", "HALF", "SINGLE", "DOUBLE",
+    "encode_ieee", "decode_ieee", "encode_hub", "decode_hub",
+    "GivensConfig", "GivensUnit",
+    "QRDEngine", "qr_cordic", "qr_givens_float", "qr_jnp", "qr_fixed",
+    "snr_db", "givens_schedule",
+    "hub_quantize", "hub_error_bound",
+    "cordic", "converters",
+]

@@ -1,0 +1,179 @@
+"""Fixed-point CORDIC core with sigma-bit reuse (Z-datapath elimination).
+
+This is the heart of the paper's Givens rotator (Sec. 3.2 / Fig. 3): the
+classic X-Y CORDIC datapath, *without* a Z (angle) datapath.  In vectoring
+mode the per-microrotation direction bits sigma_i (plus one coarse "flip" bit
+for x<0 pre-rotation) are produced; in rotation mode the stored bits replay
+the exact same micro-rotation sequence on further element pairs of the rows.
+
+Arithmetic conventions
+----------------------
+Values are w-bit two's-complement integers carried in int64 lanes, with
+F = N - 2 fraction bits and w = N + 2 total bits (the paper appends two
+integer growth bits for the CORDIC gain, Sec. 5.2).
+
+- Conventional mode: right shifts truncate (floor), subtraction is exact
+  two's complement (x + ~y + 1).
+- HUB mode (Sec. 4.2 / Fig. 6): every stored value carries an implicit LSB
+  (ILSB) of weight half an LSB.  The shifted operand is implicitly
+  rounded-to-nearest by the truncating shift, and the adder carry-in is the
+  (n+1)-th MSB of the shifted coordinate:
+      add:  x + (y >> i) + c        c = 1 if i == 0 else bit_{i-1}(y)
+      sub:  x + ~(y >> i) + (1 - c)
+  (negation of a HUB number is pure bit inversion — the ILSB absorbs the +1).
+
+`iters` and `N` may be traced scalars: a single jit specialization then
+serves every (N, iters) sweep point of the paper's error analysis (Fig. 9).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "MAX_ITERS", "cordic_gain", "gain_comp_constant", "fixmul",
+    "vectoring", "rotation", "vectoring_rotation",
+]
+
+MAX_ITERS = 60
+
+# K(k) = prod_{i<k} sqrt(1 + 2^-2i); GAIN_TABLE[k] is the gain after k
+# micro-rotations.  float64, exact enough for any comp constant below.
+_g = np.cumprod([np.sqrt(1.0 + 2.0 ** (-2.0 * i)) for i in range(MAX_ITERS)])
+GAIN_TABLE = np.concatenate([[1.0], _g])
+
+
+def cordic_gain(iters: int) -> float:
+    return float(GAIN_TABLE[iters])
+
+
+def gain_comp_constant(iters, p):
+    """Integer compensation constant: round(2^p / K(iters)).
+
+    `iters` may be traced; `p` may be traced (int64).
+    """
+    inv_gain = 1.0 / jnp.asarray(GAIN_TABLE, jnp.float64)[iters]
+    return jnp.rint(inv_gain * jnp.exp2(p.astype(jnp.float64))).astype(jnp.int64)
+
+
+def fixmul(v, comp, p, round_nearest):
+    """(v * comp) >> p for w-bit v and ~p-bit comp without int64 overflow.
+
+    Splits v into 16-bit low / high halves so partial products stay < 2^63.
+    Requires p > 16 (always true here: p >= 24).
+    `round_nearest=True` adds half an LSB before the final shift (round half
+    up — the cheap multiplier rounding); HUB mode passes False (truncation is
+    round-to-nearest for HUB).
+    """
+    v = jnp.asarray(v, jnp.int64)
+    v_lo = v & 0xFFFF
+    v_hi = v >> 16  # arithmetic; keeps the sign
+    acc = v_hi * comp + ((v_lo * comp) >> 16)
+    sh = p - 16
+    if round_nearest:
+        acc = acc + (jnp.asarray(1, jnp.int64) << (sh - 1))
+    return acc >> sh
+
+
+def _negate(v, hub: bool):
+    return ~v if hub else -v
+
+
+def _carry_bit(y, i):
+    """HUB carry-in: ILSB (1) at i == 0, else bit (i-1) of the pre-shift y."""
+    return jnp.where(i == 0, jnp.asarray(1, jnp.int64), (y >> jnp.maximum(i - 1, 0)) & 1)
+
+
+def _microrotation(x, y, i, d_pos, hub: bool):
+    """One micro-rotation:  x' = x - d*(y>>i),  y' = y + d*(x>>i).
+
+    d_pos is a boolean lane: True => d = +1, False => d = -1.
+    """
+    ys = y >> i
+    xs = x >> i
+    if hub:
+        cy = _carry_bit(y, i)
+        cx = _carry_bit(x, i)
+        x_sub = x + ~ys + (1 - cy)   # x - (y>>i)
+        x_add = x + ys + cy          # x + (y>>i)
+        y_add = y + xs + cx          # y + (x>>i)
+        y_sub = y + ~xs + (1 - cx)   # y - (x>>i)
+    else:
+        x_sub = x - ys
+        x_add = x + ys
+        y_add = y + xs
+        y_sub = y - xs
+    x_new = jnp.where(d_pos, x_sub, x_add)
+    y_new = jnp.where(d_pos, y_add, y_sub)
+    return x_new, y_new
+
+
+def vectoring(x, y, iters, hub: bool):
+    """Vectoring mode: drive y -> 0, recording direction bits.
+
+    Returns (x_rot, y_rot, flip, sigmas):
+      flip   : int64 0/1 — coarse pi pre-rotation applied when x < 0
+      sigmas : int64 bitmask; bit i == 1 means d_i = +1 (y was negative)
+    Gain compensation is NOT applied here (see `apply_gain`).
+    """
+    x = jnp.asarray(x, jnp.int64)
+    y = jnp.asarray(y, jnp.int64)
+    flip = (x < 0).astype(jnp.int64)
+    x = jnp.where(flip == 1, _negate(x, hub), x)
+    y = jnp.where(flip == 1, _negate(y, hub), y)
+
+    def body(i, carry):
+        cx, cy, sig = carry
+        d_pos = cy < 0
+        nx, ny = _microrotation(cx, cy, i, d_pos, hub)
+        sig = sig | (d_pos.astype(jnp.int64) << i)
+        return nx, ny, sig
+
+    sig0 = jnp.zeros_like(x)
+    x, y, sigmas = jax.lax.fori_loop(0, iters, body, (x, y, sig0))
+    return x, y, flip, sigmas
+
+
+def rotation(x, y, flip, sigmas, iters, hub: bool):
+    """Rotation mode: replay the stored (flip, sigma) micro-rotation sequence."""
+    x = jnp.asarray(x, jnp.int64)
+    y = jnp.asarray(y, jnp.int64)
+    x = jnp.where(flip == 1, _negate(x, hub), x)
+    y = jnp.where(flip == 1, _negate(y, hub), y)
+
+    def body(i, carry):
+        cx, cy = carry
+        d_pos = ((sigmas >> i) & 1) == 1
+        return _microrotation(cx, cy, i, d_pos, hub)
+
+    x, y = jax.lax.fori_loop(0, iters, body, (x, y))
+    return x, y
+
+
+def apply_gain(x, y, iters, w, hub: bool):
+    """Compensate the CORDIC gain: multiply by round(2^p / K(iters)) >> p.
+
+    p is chosen so the partial products stay inside int64: p = 78 - w capped
+    to 46 (comp error ~2^-p, far below the N-bit LSB for every supported N).
+    """
+    w = jnp.asarray(w, jnp.int64)
+    p = jnp.minimum(jnp.asarray(78, jnp.int64) - w, jnp.asarray(46, jnp.int64))
+    comp = gain_comp_constant(iters, p)
+    return (fixmul(x, comp, p, round_nearest=not hub),
+            fixmul(y, comp, p, round_nearest=not hub))
+
+
+def vectoring_rotation(x_lead, y_lead, x_rest, y_rest, iters, w, hub: bool):
+    """Full Givens rotation of two rows in the fixed-point domain.
+
+    (x_lead, y_lead): the leading element pair (batched arbitrarily).
+    (x_rest, y_rest): remaining element pairs, with one extra trailing axis
+                      that the sigma state broadcasts across.
+    Returns rotated (r_lead, y0_lead, x_rest', y_rest') with gain compensated.
+    """
+    xl, yl, flip, sig = vectoring(x_lead, y_lead, iters, hub)
+    xr, yr = rotation(x_rest, y_rest, flip[..., None], sig[..., None], iters, hub)
+    xl, yl = apply_gain(xl, yl, iters, w, hub)
+    xr, yr = apply_gain(xr, yr, iters, w, hub)
+    return xl, yl, xr, yr

@@ -1,0 +1,149 @@
+"""Floating-point formats and packed-integer codecs.
+
+The paper's unit operates on IEEE754-like numbers (no NaN/Inf/subnormals) and
+on HUB (Half-Unit-Biased) floating-point numbers [Hormigo & Villalba, IEEE TC
+2016].  Both are carried here as *packed* int64 words with the layout
+
+        [ sign(1) | exponent(e) | mantissa(m) ]
+
+- Conventional decode:  (-1)^s * (1 + M/2^m)            * 2^(E - bias)
+- HUB decode:           (-1)^s * (1 + M/2^m + 2^-(m+1)) * 2^(E - bias)
+  (the extra 2^-(m+1) term is the Implicit LSB, always 1)
+- E == 0 encodes exact zero in either format (subnormals unsupported,
+  matching the paper's converters).
+
+Encoding from binary64 uses round-to-nearest-even for the conventional format
+and plain truncation for HUB (truncation *is* round-to-nearest for HUB).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "FloatFormat", "HALF", "SINGLE", "DOUBLE",
+    "encode_ieee", "decode_ieee", "encode_hub", "decode_hub",
+    "pack_fields", "unpack_fields",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatFormat:
+    """An IEEE754-like storage format: 1 sign, `exp_bits`, `man_bits`."""
+
+    exp_bits: int
+    man_bits: int
+    name: str = ""
+
+    @property
+    def bias(self) -> int:
+        return (1 << (self.exp_bits - 1)) - 1
+
+    @property
+    def max_exp_raw(self) -> int:
+        # Largest *raw* exponent we emit; the all-ones code is avoided so the
+        # packed space stays NaN/Inf-free (the converters saturate instead).
+        return (1 << self.exp_bits) - 2
+
+    @property
+    def total_bits(self) -> int:
+        return 1 + self.exp_bits + self.man_bits
+
+    def __post_init__(self):
+        # 64 fits: the sign bit may occupy bit 63 (int64 wraps are benign —
+        # packed words are bit patterns, all field accesses go through masks).
+        if self.total_bits > 64:
+            raise ValueError("packed format must fit int64")
+
+
+HALF = FloatFormat(5, 10, "half")
+SINGLE = FloatFormat(8, 23, "single")
+DOUBLE = FloatFormat(11, 52, "double")
+
+
+def pack_fields(sign, exp_raw, man, fmt: FloatFormat):
+    """Assemble packed int64 words from (sign, raw exponent, mantissa)."""
+    sign = jnp.asarray(sign, jnp.int64)
+    exp_raw = jnp.asarray(exp_raw, jnp.int64)
+    man = jnp.asarray(man, jnp.int64)
+    return (sign << (fmt.exp_bits + fmt.man_bits)) | (exp_raw << fmt.man_bits) | man
+
+
+def unpack_fields(packed, fmt: FloatFormat):
+    """Split packed words into (sign, raw exponent, mantissa)."""
+    packed = jnp.asarray(packed, jnp.int64)
+    man = packed & ((1 << fmt.man_bits) - 1)
+    exp_raw = (packed >> fmt.man_bits) & ((1 << fmt.exp_bits) - 1)
+    sign = (packed >> (fmt.exp_bits + fmt.man_bits)) & 1
+    return sign, exp_raw, man
+
+
+def _split_finite(x):
+    """x (float64) -> sign, unbiased exponent, significand in [1, 2).
+
+    Zero maps to (sign, None-marker) via the `is_zero` mask returned.
+    """
+    x = jnp.asarray(x, jnp.float64)
+    sign = (jnp.signbit(x)).astype(jnp.int64)
+    ax = jnp.abs(x)
+    is_zero = ax == 0.0
+    # frexp: ax = f * 2^e with f in [0.5, 1)  ->  significand 2f in [1,2).
+    f, e = jnp.frexp(jnp.where(is_zero, 1.0, ax))
+    return sign, (e - 1).astype(jnp.int64), 2.0 * f, is_zero
+
+
+def encode_ieee(x, fmt: FloatFormat):
+    """binary64 -> packed conventional word (RNE; saturates, flushes to 0)."""
+    sign, e, sig, is_zero = _split_finite(x)
+    scale = np.float64(1 << fmt.man_bits)
+    man = jnp.rint((sig - 1.0) * scale).astype(jnp.int64)  # RNE
+    # Mantissa rounding may carry out (sig ~ 2.0).
+    carry = man >> fmt.man_bits
+    man = jnp.where(carry > 0, 0, man)
+    e = e + carry
+    exp_raw = e + fmt.bias
+    underflow = exp_raw < 1
+    overflow = exp_raw > fmt.max_exp_raw
+    exp_raw = jnp.clip(exp_raw, 1, fmt.max_exp_raw)
+    man = jnp.where(overflow, (1 << fmt.man_bits) - 1, man)
+    packed = pack_fields(sign, exp_raw, man, fmt)
+    return jnp.where(is_zero | underflow, sign << (fmt.exp_bits + fmt.man_bits), packed)
+
+
+def decode_ieee(packed, fmt: FloatFormat):
+    """packed conventional word -> binary64."""
+    sign, exp_raw, man = unpack_fields(packed, fmt)
+    sig = 1.0 + man.astype(jnp.float64) / np.float64(1 << fmt.man_bits)
+    val = jnp.ldexp(sig, (exp_raw - fmt.bias).astype(jnp.int32))
+    val = jnp.where(exp_raw == 0, 0.0, val)
+    return jnp.where(sign == 1, -val, val)
+
+
+def encode_hub(x, fmt: FloatFormat):
+    """binary64 -> packed HUB word.
+
+    Round-to-nearest for HUB is *truncation* of the mantissa field.
+    """
+    sign, e, sig, is_zero = _split_finite(x)
+    scale = np.float64(1 << fmt.man_bits)
+    man = jnp.floor((sig - 1.0) * scale).astype(jnp.int64)  # truncate == RN(HUB)
+    man = jnp.clip(man, 0, (1 << fmt.man_bits) - 1)  # sig==2.0 cannot occur (frexp)
+    exp_raw = e + fmt.bias
+    underflow = exp_raw < 1
+    overflow = exp_raw > fmt.max_exp_raw
+    exp_raw = jnp.clip(exp_raw, 1, fmt.max_exp_raw)
+    man = jnp.where(overflow, (1 << fmt.man_bits) - 1, man)
+    packed = pack_fields(sign, exp_raw, man, fmt)
+    return jnp.where(is_zero | underflow, sign << (fmt.exp_bits + fmt.man_bits), packed)
+
+
+def decode_hub(packed, fmt: FloatFormat):
+    """packed HUB word -> binary64 (includes the ILSB term 2^-(m+1))."""
+    sign, exp_raw, man = unpack_fields(packed, fmt)
+    scale = np.float64(1 << fmt.man_bits)
+    sig = 1.0 + (man.astype(jnp.float64) + 0.5) / scale
+    val = jnp.ldexp(sig, (exp_raw - fmt.bias).astype(jnp.int32))
+    val = jnp.where(exp_raw == 0, 0.0, val)
+    return jnp.where(sign == 1, -val, val)

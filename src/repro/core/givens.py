@@ -1,0 +1,136 @@
+"""The FP Givens rotation unit (paper Fig. 1): converters + fixed-point core.
+
+`GivensUnit` wires the input converter, the sigma-reusing CORDIC rotator and
+the output converter into the paper's two operations:
+
+  vector(x, y)            -> (r, y0, state)   # vectoring: compute the angle
+  rotate(x, y, state)     -> (x', y')         # rotation: replay the angle
+
+Both operate on *packed* FP words (see repro.core.formats) and are fully
+vectorized: any batch shape works, and `rotate` broadcasts one state over a
+trailing axis of row elements — exactly the unit's pipeline overlap, in space
+instead of time.
+
+The unit is bit-accurate w.r.t. the architectures of Figs. 2-7; `N` and
+`iters` may be traced scalars so parameter sweeps reuse one compilation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import converters as conv
+from . import cordic
+from .formats import (FloatFormat, SINGLE, encode_hub, encode_ieee,
+                      decode_hub, decode_ieee)
+
+__all__ = ["GivensConfig", "GivensUnit", "RotationState"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GivensConfig:
+    """Implementation parameters of the unit (paper Sec. 5 sweep space)."""
+
+    fmt: FloatFormat = SINGLE
+    n: int = 26                 # internal significand width N
+    iters: int | None = None    # CORDIC micro-rotations; None -> paper default
+    hub: bool = False           # conventional (IEEE-like) vs HUB datapath
+    input_rounding: str = "trunc"   # IEEE input converter: 'rne' | 'trunc'
+    unbiased: bool = True           # HUB converters: unbiased extension
+    detect_identity: bool = True    # HUB input converter: detect exact 1.0
+
+    def default_iters(self) -> int:
+        # Fig. 9: conventional peaks at N-3 micro-rotations, HUB at N-2.
+        return self.n - 2 if self.hub else self.n - 3
+
+    def resolved_iters(self) -> int:
+        return self.default_iters() if self.iters is None else self.iters
+
+    def validate(self):
+        if self.n < self.fmt.man_bits + 2:
+            raise ValueError("need N >= man_bits + 2 for a lossless expand")
+        if self.n + 3 > 53:
+            raise ValueError("bit-accurate emulation supports N <= 50 "
+                             "(int64 lanes + exact float64 ilog2)")
+        if self.input_rounding not in ("rne", "trunc"):
+            raise ValueError(self.input_rounding)
+
+
+# (flip, sigmas) from vectoring — the entire "Z coordinate" of the unit.
+RotationState = Any
+
+
+class GivensUnit:
+    """Callable facade over the converter + CORDIC pipeline."""
+
+    def __init__(self, config: GivensConfig):
+        config.validate()
+        self.cfg = config
+
+    # -- packed codec helpers -------------------------------------------------
+    def encode(self, x):
+        f = encode_hub if self.cfg.hub else encode_ieee
+        return f(x, self.cfg.fmt)
+
+    def decode(self, packed):
+        f = decode_hub if self.cfg.hub else decode_ieee
+        return f(packed, self.cfg.fmt)
+
+    # -- converter plumbing ---------------------------------------------------
+    def _to_fixed(self, xp, yp, N):
+        if self.cfg.hub:
+            return conv.input_convert_hub(
+                xp, yp, self.cfg.fmt, N,
+                unbiased=self.cfg.unbiased,
+                detect_identity=self.cfg.detect_identity)
+        return conv.input_convert_ieee(
+            xp, yp, self.cfg.fmt, N, rounding=self.cfg.input_rounding)
+
+    def _to_float(self, v, m_exp, N):
+        if self.cfg.hub:
+            return conv.output_convert_hub(
+                v, m_exp, self.cfg.fmt, N, unbiased=self.cfg.unbiased)
+        return conv.output_convert_ieee(v, m_exp, self.cfg.fmt, N)
+
+    # -- the two operations of the unit --------------------------------------
+    def vector(self, xp, yp, N=None, iters=None):
+        """Vectoring: returns (r_packed, y_packed≈0, state)."""
+        N = jnp.asarray(self.cfg.n if N is None else N, jnp.int64)
+        iters = jnp.asarray(self.cfg.resolved_iters() if iters is None else iters,
+                            jnp.int64)
+        xf, yf, m_exp = self._to_fixed(xp, yp, N)
+        xr, yr, flip, sig = cordic.vectoring(xf, yf, iters, self.cfg.hub)
+        xr, yr = cordic.apply_gain(xr, yr, iters, N + 2, self.cfg.hub)
+        return (self._to_float(xr, m_exp, N),
+                self._to_float(yr, m_exp, N),
+                (flip, sig))
+
+    def rotate(self, xp, yp, state, N=None, iters=None):
+        """Rotation: replay `state` on another element pair of the rows."""
+        N = jnp.asarray(self.cfg.n if N is None else N, jnp.int64)
+        iters = jnp.asarray(self.cfg.resolved_iters() if iters is None else iters,
+                            jnp.int64)
+        flip, sig = state
+        xf, yf, m_exp = self._to_fixed(xp, yp, N)
+        xr, yr = cordic.rotation(xf, yf, flip, sig, iters, self.cfg.hub)
+        xr, yr = cordic.apply_gain(xr, yr, iters, N + 2, self.cfg.hub)
+        return (self._to_float(xr, m_exp, N),
+                self._to_float(yr, m_exp, N))
+
+    def rotate_rows(self, row_x, row_y, N=None, iters=None):
+        """Full Givens rotation of two packed rows (..., e).
+
+        Vectoring on element 0, rotation broadcast over elements 1..e-1 —
+        the paper's one-element-per-cycle pipeline, vectorized in space.
+        Returns the rotated rows; row_y[..., 0] is the (near-)zeroed entry.
+        """
+        rx0, ry0, state = self.vector(row_x[..., 0], row_y[..., 0], N, iters)
+        flip, sig = state
+        rx, ry = self.rotate(row_x[..., 1:], row_y[..., 1:],
+                             (flip[..., None], sig[..., None]), N, iters)
+        return (jnp.concatenate([rx0[..., None], rx], axis=-1),
+                jnp.concatenate([ry0[..., None], ry], axis=-1))

@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the paper's CORDIC Givens rotator:
+#   cordic_givens.py  pl.pallas_call kernels (vectoring / rotation / fused)
+#   ops.py            jitted public wrappers (padding, interpret auto-select)
+#   ref.py            pure-jnp oracles (tests assert exact integer equality)
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,215 @@
+"""Pallas TPU kernels for the fixed-point CORDIC Givens rotator.
+
+TPU adaptation of the paper's pipeline (DESIGN.md §2): the FPGA's
+one-element-per-cycle pipeline becomes lane-parallel integer arithmetic on
+the VPU.  Two kernels:
+
+  vectoring kernel : a (TB, 1) tile of leading element pairs; each lane runs
+                     the full micro-rotation recurrence and packs its sigma
+                     direction bits into one int32 word (+ a flip bit).
+                     "Compute the tiny control word once."
+  rotation kernel  : a (TB, TL) tile of row elements; the per-row sigma words
+                     (one int32 per row, VMEM (TB,1) column) broadcast across
+                     the 128-lane axis and the recurrence replays in parallel.
+                     "Broadcast it across the wide vector."
+
+Datapath: int32, w = N + 2 bits (N <= 28; N = 26 is the paper's recommended
+single-precision config).  The CORDIC gain is compensated in-kernel with a
+15x15-bit partial-product multiply (Q30 constant) so every intermediate fits
+int32 — the same reasoning as the paper's "compensation in the embedded
+multipliers".
+
+Both kernels carry a static `hub` flag switching the add/sub arithmetic to
+Half-Unit-Biased semantics (negate-by-inversion + the Fig. 6 carry-in rule).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.cordic import GAIN_TABLE
+
+__all__ = ["vectoring_call", "rotation_call", "fused_call", "comp_q30",
+           "TILE_B", "TILE_L"]
+
+TILE_B = 8     # sublane tile (int32 native tile is (8, 128))
+TILE_L = 128   # lane tile
+
+
+def comp_q30(iters: int) -> int:
+    """Gain compensation constant in Q30: round(2^30 / K(iters))."""
+    return int(np.rint(2.0 ** 30 / GAIN_TABLE[iters]))
+
+
+def _gain_mul_q30(v, comp: int):
+    """(v * comp) >> 30 with all partial products inside int32.
+
+    v: w-bit int32 (|v| < 2^29); comp: Q30 constant < 2^30.
+    Split both into 15-bit halves; truncating partial shifts lose < 1 LSB.
+    """
+    c_hi = comp >> 15
+    c_lo = comp & 0x7FFF
+    v_hi = v >> 15          # arithmetic: keeps the sign
+    v_lo = v & 0x7FFF
+    return (v_hi * c_hi
+            + ((v_hi * c_lo) >> 15)
+            + ((v_lo * c_hi) >> 15)
+            + ((v_lo * c_lo) >> 30))
+
+
+def _microrotation(x, y, i: int, d_pos, hub: bool):
+    """x' = x - d*(y>>i), y' = y + d*(x>>i); d_pos lanes: d = +1."""
+    ys = y >> i
+    xs = x >> i
+    if hub:
+        cy = jnp.int32(1) if i == 0 else (y >> (i - 1)) & 1
+        cx = jnp.int32(1) if i == 0 else (x >> (i - 1)) & 1
+        x_sub = x + ~ys + (1 - cy)
+        x_add = x + ys + cy
+        y_add = y + xs + cx
+        y_sub = y + ~xs + (1 - cx)
+    else:
+        x_sub = x - ys
+        x_add = x + ys
+        y_add = y + xs
+        y_sub = y - xs
+    return (jnp.where(d_pos, x_sub, x_add),
+            jnp.where(d_pos, y_add, y_sub))
+
+
+def _negate(v, hub: bool):
+    return ~v if hub else -v
+
+
+# ---------------------------------------------------------------------------
+# Vectoring kernel
+# ---------------------------------------------------------------------------
+def _vectoring_kernel(x_ref, y_ref, xo_ref, yo_ref, flip_ref, sig_ref,
+                      *, iters: int, hub: bool, comp: int):
+    x = x_ref[...]
+    y = y_ref[...]
+    flip = (x < 0)
+    x = jnp.where(flip, _negate(x, hub), x)
+    y = jnp.where(flip, _negate(y, hub), y)
+    sig = jnp.zeros_like(x)
+    for i in range(iters):          # static unroll == the FPGA pipeline depth
+        d_pos = y < 0
+        x, y = _microrotation(x, y, i, d_pos, hub)
+        sig = sig | (d_pos.astype(jnp.int32) << i)
+    xo_ref[...] = _gain_mul_q30(x, comp)
+    yo_ref[...] = _gain_mul_q30(y, comp)
+    flip_ref[...] = flip.astype(jnp.int32)
+    sig_ref[...] = sig
+
+
+def vectoring_call(x, y, *, iters: int, hub: bool, interpret: bool = True):
+    """x, y: (B, 1) int32 block-FP significands -> (xr, yr, flip, sigma).
+
+    B must be a multiple of TILE_B (ops.py pads).
+    """
+    B = x.shape[0]
+    assert x.shape == (B, 1) and B % TILE_B == 0 and iters <= 30
+    grid = (B // TILE_B,)
+    spec = pl.BlockSpec((TILE_B, 1), lambda b: (b, 0))
+    out_shape = [jax.ShapeDtypeStruct((B, 1), jnp.int32)] * 4
+    kernel = functools.partial(_vectoring_kernel, iters=iters, hub=hub,
+                               comp=comp_q30(iters))
+    return pl.pallas_call(
+        kernel, grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[spec, spec, spec, spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, y)
+
+
+# ---------------------------------------------------------------------------
+# Rotation kernel
+# ---------------------------------------------------------------------------
+def _rotation_kernel(flip_ref, sig_ref, x_ref, y_ref, xo_ref, yo_ref,
+                     *, iters: int, hub: bool, comp: int):
+    x = x_ref[...]
+    y = y_ref[...]
+    flip = flip_ref[...] != 0           # (TB, 1) -> broadcasts over lanes
+    sig = sig_ref[...]
+    x = jnp.where(flip, _negate(x, hub), x)
+    y = jnp.where(flip, _negate(y, hub), y)
+    for i in range(iters):
+        d_pos = ((sig >> i) & 1) == 1   # (TB, 1) control word, lane-broadcast
+        x, y = _microrotation(x, y, i, d_pos, hub)
+    xo_ref[...] = _gain_mul_q30(x, comp)
+    yo_ref[...] = _gain_mul_q30(y, comp)
+
+
+def rotation_call(x, y, flip, sigma, *, iters: int, hub: bool,
+                  interpret: bool = True, tile_l: int = TILE_L):
+    """x, y: (B, L) int32; flip, sigma: (B, 1) int32 -> rotated (B, L)."""
+    B, L = x.shape
+    assert B % TILE_B == 0 and L % tile_l == 0 and iters <= 30
+    grid = (B // TILE_B, L // tile_l)
+    tile = pl.BlockSpec((TILE_B, tile_l), lambda b, l: (b, l))
+    ctrl = pl.BlockSpec((TILE_B, 1), lambda b, l: (b, 0))
+    out_shape = [jax.ShapeDtypeStruct((B, L), jnp.int32)] * 2
+    kernel = functools.partial(_rotation_kernel, iters=iters, hub=hub,
+                               comp=comp_q30(iters))
+    return pl.pallas_call(
+        kernel, grid=grid,
+        in_specs=[ctrl, ctrl, tile, tile],
+        out_specs=[tile, tile],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(flip, sigma, x, y)
+
+
+# ---------------------------------------------------------------------------
+# Fused kernel (beyond-paper §Perf iteration): vectoring + rotation in one
+# pass.  The separate-kernel pipeline writes the rows to HBM between the
+# phases; here each (TB, L) row block stays in VMEM — sigma is derived from
+# the leading column and replayed over the whole block before a single
+# write-back.  HBM traffic per element drops 2x (one read + one write).
+# ---------------------------------------------------------------------------
+def _fused_kernel(x_ref, y_ref, xo_ref, yo_ref,
+                  *, iters: int, hub: bool, comp: int):
+    x = x_ref[...]
+    y = y_ref[...]
+    # vectoring on the leading column only (control-word phase)
+    xl = x[:, :1]
+    yl = y[:, :1]
+    flip = xl < 0
+    xl = jnp.where(flip, _negate(xl, hub), xl)
+    yl = jnp.where(flip, _negate(yl, hub), yl)
+    sig = jnp.zeros_like(xl)
+    for i in range(iters):
+        d_pos = yl < 0
+        xl, yl = _microrotation(xl, yl, i, d_pos, hub)
+        sig = sig | (d_pos.astype(jnp.int32) << i)
+    # rotation of the whole block with the broadcast control words
+    x = jnp.where(flip, _negate(x, hub), x)
+    y = jnp.where(flip, _negate(y, hub), y)
+    for i in range(iters):
+        d_pos = ((sig >> i) & 1) == 1
+        x, y = _microrotation(x, y, i, d_pos, hub)
+    xo_ref[...] = _gain_mul_q30(x, comp)
+    yo_ref[...] = _gain_mul_q30(y, comp)
+
+
+def fused_call(x, y, *, iters: int, hub: bool, interpret: bool = True):
+    """x, y: (B, L) int32 full rows (element 0 = leading pair) -> rotated."""
+    B, L = x.shape
+    assert B % TILE_B == 0 and iters <= 30
+    grid = (B // TILE_B,)
+    tile = pl.BlockSpec((TILE_B, L), lambda b: (b, 0))
+    out_shape = [jax.ShapeDtypeStruct((B, L), jnp.int32)] * 2
+    kernel = functools.partial(_fused_kernel, iters=iters, hub=hub,
+                               comp=comp_q30(iters))
+    return pl.pallas_call(
+        kernel, grid=grid,
+        in_specs=[tile, tile],
+        out_specs=[tile, tile],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, y)

@@ -1,0 +1,96 @@
+"""Jitted public wrappers over the Pallas CORDIC Givens kernels.
+
+`givens_rotate_rows_fixed` is the kernel-level analogue of
+`GivensUnit.rotate_rows`: vectoring on the leading element pair of every
+row-pair, rotation of all remaining elements with the broadcast sigma words.
+Padding to the (8, 128) int32 tile is handled here; callers pass any (B, L).
+
+On CPU (this container) the kernels run in interpret mode; on TPU they
+compile to Mosaic.  `interpret=None` auto-selects.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import cordic_givens as k
+
+__all__ = ["vectoring_fixed", "rotation_fixed", "givens_rotate_rows_fixed"]
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return interpret
+
+
+def _pad_to(x, mult, axis):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "hub", "interpret"))
+def vectoring_fixed(x, y, *, iters=24, hub=False, interpret=None):
+    """(B,) int32 leading pairs -> (xr, yr, flip, sigma), each (B,)."""
+    interpret = _auto_interpret(interpret)
+    B = x.shape[0]
+    xp = _pad_to(x.astype(jnp.int32)[:, None], k.TILE_B, 0)
+    yp = _pad_to(y.astype(jnp.int32)[:, None], k.TILE_B, 0)
+    xr, yr, flip, sig = k.vectoring_call(xp, yp, iters=iters, hub=hub,
+                                         interpret=interpret)
+    return xr[:B, 0], yr[:B, 0], flip[:B, 0], sig[:B, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "hub", "interpret"))
+def rotation_fixed(x, y, flip, sigma, *, iters=24, hub=False, interpret=None):
+    """(B, L) int32 rows + (B,) control words -> rotated (B, L) pair."""
+    interpret = _auto_interpret(interpret)
+    B, L = x.shape
+    xp = _pad_to(_pad_to(x.astype(jnp.int32), k.TILE_B, 0), k.TILE_L, 1)
+    yp = _pad_to(_pad_to(y.astype(jnp.int32), k.TILE_B, 0), k.TILE_L, 1)
+    fp = _pad_to(flip.astype(jnp.int32)[:, None], k.TILE_B, 0)
+    sp = _pad_to(sigma.astype(jnp.int32)[:, None], k.TILE_B, 0)
+    xr, yr = k.rotation_call(xp, yp, fp, sp, iters=iters, hub=hub,
+                             interpret=interpret)
+    return xr[:B, :L], yr[:B, :L]
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "hub", "interpret"))
+def givens_rotate_rows_fixed(x_rows, y_rows, *, iters=24, hub=False,
+                             interpret=None):
+    """Full fixed-point Givens rotation of B row pairs of length L.
+
+    x_rows, y_rows: (B, L) int32 block-FP significands (element 0 is the
+    leading pair).  Returns rotated rows; y[:, 0] is the zeroed entry's
+    residual (callers typically force it to 0 structurally).
+    """
+    interpret = _auto_interpret(interpret)
+    xl, yl, flip, sig = vectoring_fixed(x_rows[:, 0], y_rows[:, 0],
+                                        iters=iters, hub=hub,
+                                        interpret=interpret)
+    xr, yr = rotation_fixed(x_rows[:, 1:], y_rows[:, 1:], flip, sig,
+                            iters=iters, hub=hub, interpret=interpret)
+    return (jnp.concatenate([xl[:, None], xr], axis=1),
+            jnp.concatenate([yl[:, None], yr], axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "hub", "interpret"))
+def givens_rotate_rows_fused(x_rows, y_rows, *, iters=24, hub=False,
+                             interpret=None):
+    """Fused single-pass variant (§Perf): rows stay in VMEM across the
+    vectoring and rotation phases — one HBM read + one write per element.
+    Bit-identical to `givens_rotate_rows_fixed` (the rotation of the leading
+    pair by its own sigma IS the vectoring result)."""
+    interpret = _auto_interpret(interpret)
+    B, L = x_rows.shape
+    xp = _pad_to(x_rows.astype(jnp.int32), k.TILE_B, 0)
+    yp = _pad_to(y_rows.astype(jnp.int32), k.TILE_B, 0)
+    xr, yr = k.fused_call(xp, yp, iters=iters, hub=hub, interpret=interpret)
+    return xr[:B], yr[:B]

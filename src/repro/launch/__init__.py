@@ -1,0 +1,2 @@
+# Launch layer: production mesh, GSPMD sharding rules, jitted step builders,
+# the multi-pod dry-run driver and the roofline analyzer.

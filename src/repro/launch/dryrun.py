@@ -1,0 +1,214 @@
+import os
+# 512 fake host devices for the production meshes (must precede ANY jax
+# import).  The disabled passes are CPU-pipeline loop-hoists that widen the
+# bf16 remat stack to f32 — an artifact a TPU compile does not have; with
+# them off, memory_analysis tracks the TPU-relevant footprint more closely.
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion,"
+    "while-loop-expensive-invariant-code-motion,convert-mover")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces:
+  - proof the sharding config is coherent (compile succeeds),
+  - memory_analysis (bytes/device — proves it fits),
+  - cost_analysis (FLOPs / bytes accessed — feeds the roofline),
+  - per-device collective wire bytes parsed from the post-SPMD HLO.
+
+Results are cached in dryrun_results.json keyed by (arch, shape, mesh, tag)
+so re-runs only compile what changed.  The 512 fake host devices exist ONLY
+here (the env var above precedes every jax import, pinning the device count
+before backend init).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import applicable_cells, get_config, shape_of
+from repro.launch.hlo import collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__),
+                            "..", "..", "..", "dryrun_results.json")
+
+
+def _mesh_name(multi_pod):
+    return "2x16x16" if multi_pod else "16x16"
+
+
+def _sharded_bytes(struct_tree, spec_tree, mesh):
+    """Analytic per-device bytes of a struct tree under its partition specs."""
+    import numpy as np
+    from jax.sharding import PartitionSpec
+
+    total = 0
+    for leaf, spec in zip(jax.tree.leaves(struct_tree),
+                          jax.tree.leaves(spec_tree,
+                                          is_leaf=lambda x: isinstance(
+                                              x, PartitionSpec))):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        shards = 1
+        for s in spec:
+            if s is None:
+                continue
+            for ax in (s if isinstance(s, tuple) else (s,)):
+                shards *= mesh.shape[ax]
+        total += n * leaf.dtype.itemsize / shards
+    return int(total)
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, tag: str = "base"):
+    cfg = get_config(arch)
+    cell = shape_of(shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh:
+        fn, args = build_cell(cfg, cell, mesh)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    rec = {"arch": arch, "shape": shape, "mesh": _mesh_name(multi_pod),
+           "tag": tag, "ok": True,
+           "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
+           "n_devices": mesh.devices.size}
+
+    # analytic per-device parameter bytes (independent of compiler artifacts)
+    try:
+        from repro.launch import sharding as shd_mod
+        from repro.launch.steps import _params_struct
+        ps = _params_struct(cfg)
+        rec["param_bytes_per_device"] = _sharded_bytes(
+            ps, shd_mod.param_specs(ps, mesh), mesh)
+        rec["n_params"] = cfg.param_count()
+        rec["n_params_active"] = cfg.active_param_count()
+    except Exception as e:
+        rec["param_bytes_error"] = f"{type(e).__name__}: {e}"
+
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes")
+            if hasattr(mem, k)}
+        arg = rec["memory"].get("argument_size_in_bytes", 0)
+        alias = rec["memory"].get("alias_size_in_bytes", 0)
+        tmp = rec["memory"].get("temp_size_in_bytes", 0)
+        out = rec["memory"].get("output_size_in_bytes", 0)
+        # live bytes/device: args + temps + (outputs not aliased to args)
+        rec["bytes_per_device"] = int(arg + tmp + max(out - alias, 0))
+    except Exception as e:  # CPU backend may not implement everything
+        rec["memory_error"] = f"{type(e).__name__}: {e}"
+
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        rec["flops_per_device"] = float(cost.get("flops", 0.0))
+        rec["hbm_bytes_per_device"] = float(cost.get("bytes accessed", 0.0))
+    except Exception as e:
+        rec["cost_error"] = f"{type(e).__name__}: {e}"
+
+    try:
+        txt = compiled.as_text()
+        rec["collectives"] = collective_bytes(txt)
+        rec["hlo_chars"] = len(txt)
+    except Exception as e:
+        rec["collective_error"] = f"{type(e).__name__}: {e}"
+    rec["t_total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def load_results():
+    if os.path.exists(RESULTS_PATH):
+        with open(RESULTS_PATH) as f:
+            return json.load(f)
+    return {}
+
+
+def save_results(res):
+    with open(RESULTS_PATH, "w") as f:
+        json.dump(res, f, indent=1, sort_keys=True)
+
+
+def key_of(arch, shape, multi_pod, tag):
+    return f"{arch}|{shape}|{_mesh_name(multi_pod)}|{tag}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--tag", default="base")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--opt", action="append", default=[],
+                    help="perf knob, e.g. --opt seq_parallel (see steps.OPTIONS)")
+    args = ap.parse_args()
+
+    from repro.launch import steps as steps_mod
+    for k in args.opt:
+        if "=" in k:
+            k, v = k.split("=")
+            assert k in steps_mod.OPTIONS, k
+            steps_mod.OPTIONS[k] = int(v)
+        else:
+            assert k in steps_mod.OPTIONS, k
+            steps_mod.OPTIONS[k] = True
+
+    if args.all:
+        cells = applicable_cells()
+    else:
+        cells = [(args.arch, args.shape)]
+    meshes = [False, True]
+    if args.single_pod_only:
+        meshes = [False]
+    if args.multi_pod_only:
+        meshes = [True]
+    if args.multi_pod and not args.all:
+        meshes = [True]
+
+    results = load_results()
+    for (arch, shape) in cells:
+        for mp in meshes:
+            k = key_of(arch, shape, mp, args.tag)
+            if not args.force and k in results and results[k].get("ok"):
+                print(f"SKIP {k} (cached)")
+                continue
+            print(f"RUN  {k} ...", flush=True)
+            try:
+                rec = run_cell(arch, shape, mp, args.tag)
+                cb = rec.get("collectives", {}).get("total", 0)
+                print(f"  ok: {rec['t_total_s']}s, "
+                      f"{rec.get('flops_per_device', 0):.3e} flops/dev, "
+                      f"{rec.get('bytes_per_device', 0)/2**30:.2f} GiB/dev, "
+                      f"{cb/2**20:.1f} MiB collective", flush=True)
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape, "mesh": _mesh_name(mp),
+                       "tag": args.tag, "ok": False,
+                       "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:]}
+                print(f"  FAIL: {type(e).__name__}: {str(e)[:200]}", flush=True)
+            results[k] = rec
+            save_results(results)
+    n_ok = sum(1 for r in results.values() if r.get("ok"))
+    print(f"\n{n_ok}/{len(results)} cells ok -> {os.path.abspath(RESULTS_PATH)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Post-SPMD HLO analysis: collective byte counting + roofline terms.
+
+`collective_bytes(hlo_text)` parses the partitioned module and sums, per
+collective opcode, the bytes each device moves on the wire:
+
+    all-gather          out_bytes * (n-1)/n
+    all-reduce          2 * bytes * (n-1)/n        (ring: RS + AG phases)
+    reduce-scatter      in_bytes * (n-1)/n  ==  out_bytes * (n-1)
+    all-to-all          bytes * (n-1)/n
+    collective-permute  bytes
+
+where n is the replica-group size parsed from the op (n = 1 groups are
+dropped — XLA sometimes emits degenerate collectives).  These are the
+standard ring/bidirectional cost models; they are what feeds the
+"collective term" of the roofline (EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+import numpy as np
+
+__all__ = ["collective_bytes", "DTYPE_BYTES", "parse_shape_bytes"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+        "collective-permute")
+
+
+def parse_shape_bytes(shape_str: str) -> int:
+    """Total bytes of all arrays in a result type like
+    'bf16[8,128]' or '(bf16[8,128], f32[4])'."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota format [num_groups,group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("},")[0].strip("{}")
+        return len([x for x in first.split(",") if x.strip() != ""])
+    return 0
+
+
+def collective_bytes(hlo_text: str):
+    """-> dict: opcode -> per-device wire bytes (summed over ops), plus
+    'total' and 'ops' (op count by opcode)."""
+    per = defaultdict(float)
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.startswith("//") or " = " not in s:
+            continue
+        lhs, rhs = s.split(" = ", 1)
+        # opcode sits between the result type (which may carry a layout
+        # annotation, e.g. `f32[8,16]{1,0}`) and the operand list:
+        #   %x = f32[8,16]{1,0} all-reduce(%y), replica_groups=...
+        opcode = None
+        for op in _OPS:
+            if re.search(rf"(?:^|[)}}\]]\s*){op}(?:-start)?\(", rhs):
+                opcode = op
+                break
+        if opcode is None:
+            continue
+        shape_part = rhs.split(opcode)[0]
+        out_bytes = parse_shape_bytes(shape_part)
+        n = _group_size(rhs)
+        if n <= 1:
+            continue
+        frac = (n - 1) / n
+        if opcode == "all-gather":
+            b = out_bytes * frac
+        elif opcode == "all-reduce":
+            b = 2.0 * out_bytes * frac
+        elif opcode == "reduce-scatter":
+            b = out_bytes * (n - 1)
+        elif opcode == "all-to-all":
+            b = out_bytes * frac
+        else:  # collective-permute
+            b = out_bytes
+        per[opcode] += b
+        counts[opcode] += 1
+    out = dict(per)
+    out["total"] = float(sum(per.values()))
+    out["ops"] = dict(counts)
+    return out

@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Single pod:  (16, 16)    axes ("data", "model")   = 256 chips (one v5e pod)
+Multi-pod:   (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+
+Defined as a *function* so importing this module never touches jax device
+state (the dry-run pins XLA_FLAGS before any jax initialization).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "data_axes", "dp_size"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """The batch/FSDP axes: everything except 'model'."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def dp_size(mesh) -> int:
+    n = 1
+    for a in data_axes(mesh):
+        n *= mesh.shape[a]
+    return n

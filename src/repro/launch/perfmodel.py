@@ -1,0 +1,188 @@
+"""Analytic per-cell performance model (FLOPs, HBM traffic, collectives).
+
+Why analytic: the CPU dry-run pipeline makes two compiler artifacts
+unavoidable — (a) `cost_analysis()` does not count library-call dots, and
+(b) ops inside `while` (scan) bodies are counted once instead of
+trip-count times.  The sharding *structure* (what is gathered/reduced, by
+whom, how often) is fully determined by the dry-run's partitioning, so the
+three roofline terms are derived here from first principles and
+cross-checked against the post-SPMD HLO (per-body collective shapes match;
+see EXPERIMENTS.md §Roofline notes).
+
+All quantities are per device per step, on a mesh with `dp` data shards and
+`tp` model shards (n_dev = dp * tp).
+
+FLOPs (forward):
+    matmul     2 * N_active * tokens / n_dev
+    attention  4 * B*S^2/2 * H*dh / n_dev  (causal)        [train/prefill]
+               4 * B*S_cache * H*dh / n_dev                [decode]
+    ssd        4 * B*S*H*hd*(chunk/2 + d_state) / n_dev
+train = fwd * (1 fwd + 2 bwd + 1 remat-replay) = 4x fwd.
+
+HBM traffic:
+    weights    2*N_total/tp read per pass (TP-resident after FSDP gather;
+               MoE reads ALL experts — capacity slots are dense)
+    optimizer  20 * N_total / n_dev (m,v f32 r+w, p r+w, grads)
+    residuals  layer-stack saved by scan+remat: L*B/dp*S*D*2 (w+r)
+               (/tp when sequence-parallel)
+    logits     3 passes * B/dp * S * V/tp * 4
+    kv/state   cache bytes read once per decode step
+
+Collectives (wire bytes, ring-model):
+    FSDP AG    passes * 2*N_total/tp * (dp-1)/dp
+    grad RS+AG 2 * 2*N_total/tp  (reduce-scatter + opt all-gather)
+    TP AR      2 * n_ar_per_layer * L * (B/dp * S * D * 2) * (tp-1)/tp
+               (n_ar = 2 fwd + 2 bwd, halved to RS+AG pairs under SP)
+    MoE A2A    2 passes * top_k * B/dp * S * D * 2  (dispatch + combine)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.configs import get_config, shape_of
+
+PEAK_FLOPS = 197e12     # bf16/chip, v5e-class target
+HBM_BW = 819e9          # bytes/s/chip
+ICI_BW = 50e9           # bytes/s/link
+
+
+@dataclasses.dataclass
+class CellModel:
+    flops_pd: float
+    hbm_pd: float
+    coll_pd: float
+    model_flops: float          # global useful FLOPs (6/2 * N_active * D)
+    hlo_flops_global: float
+
+    @property
+    def t_compute(self):
+        return self.flops_pd / PEAK_FLOPS
+
+    @property
+    def t_memory(self):
+        return self.hbm_pd / HBM_BW
+
+    @property
+    def t_collective(self):
+        return self.coll_pd / ICI_BW
+
+    @property
+    def dominant(self):
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound(self):
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+
+def _attn_layers(cfg):
+    if cfg.family == "ssm":
+        return 0
+    if cfg.family == "hybrid":
+        per = cfg.pattern
+        return sum(1 for i in range(cfg.n_layers)
+                   if per[i % len(per)] == "attn")
+    if cfg.family == "encdec":
+        return cfg.enc_layers + 2 * cfg.n_layers  # self + cross
+    return cfg.n_layers
+
+
+def build(arch: str, shape: str, *, dp=16, tp=16, pods=1,
+          seq_parallel=False, remat_passes=1.0, fsdp_passes=3.0,
+          grad_bytes=2.0, moe_capacity_factor=None) -> CellModel:
+    cfg = get_config(arch)
+    cell = shape_of(shape)
+    n_dev = dp * tp * pods
+    dp_t = dp * pods                      # total data shards (pod x data)
+    B, S = cell.batch, cell.seq
+    D = cfg.d_model
+    L = cfg.n_layers + (cfg.enc_layers or 0)
+    N_act = cfg.active_param_count()
+    N_tot = cfg.param_count()
+    H = max(cfg.n_heads, 1)
+    dh = cfg.head_dim_()
+    is_train = cell.kind == "train"
+    is_decode = cell.kind == "decode"
+    tokens = B * (1 if is_decode else S)
+    B_loc = B / min(dp_t, B)
+
+    # ---- FLOPs ----
+    fwd = 2.0 * N_act * tokens
+    n_attn = _attn_layers(cfg)
+    if is_decode:
+        kv_span = min(S, cfg.window) if cfg.window else S
+        fwd += 4.0 * B * kv_span * H * dh * n_attn
+    elif n_attn:
+        span = min(S, cfg.window) if cfg.window else S
+        fwd += 4.0 * B * S * span / 2 * H * dh * n_attn / max(
+            1, (1 if cfg.family != "encdec" else 2))
+    if cfg.ssm:
+        hd = cfg.ssm.head_dim
+        Hs = cfg.ssm.n_heads(D)
+        fwd += 4.0 * tokens * Hs * hd * (cfg.ssm.chunk / 2 + cfg.ssm.d_state)
+    if cfg.moe and moe_capacity_factor is None:
+        moe_capacity_factor = cfg.moe.capacity_factor
+    if cfg.moe:
+        # capacity padding: expert slots are computed dense
+        moe_l = cfg.n_layers - cfg.first_dense
+        expert_fwd = 2.0 * (cfg.moe.top_k * 3 * D * cfg.moe.d_expert) \
+            * tokens * moe_l / cfg.n_layers
+        fwd += expert_fwd * (moe_capacity_factor - 1.0)
+
+    passes = (3.0 + remat_passes) if is_train else 1.0
+    flops_global = fwd * passes
+    flops_pd = flops_global / n_dev
+
+    # ---- HBM traffic ----
+    w_read = 2.0 * N_tot / tp                      # per pass, per device
+    hbm = passes * w_read
+    if is_train:
+        hbm += 20.0 * N_tot / n_dev                # optimizer + grads f32
+        sp = tp if seq_parallel else 1
+        hbm += 2.0 * L * B_loc * S * D * 2.0 / sp  # saved residual stack w+r
+        hbm += 3.0 * B_loc * S * (cfg.vocab / tp) * 4.0   # logits fwd+bwd
+    else:
+        hbm += tokens / max(B, 1) * B_loc * S * D * 2.0 / max(n_dev // tp, 1)
+    if is_decode:
+        # read the whole KV/state cache once per token
+        if cfg.family == "ssm":
+            Hs = cfg.ssm.n_heads(D)
+            cache = B * cfg.n_layers * Hs * cfg.ssm.d_state \
+                * cfg.ssm.head_dim * 4.0
+        elif cfg.mla:
+            cache = B * S * cfg.n_layers * (cfg.mla.kv_lora
+                                            + cfg.mla.qk_rope) * 2.0
+        else:
+            kv_span = min(S, cfg.window) if cfg.window else S
+            cache = B * kv_span * 2 * cfg.n_kv_heads * dh * 2.0 * n_attn
+        hbm += cache / n_dev * tp                  # batch-sharded only
+
+    # ---- Collectives ----
+    coll = 0.0
+    frac_dp = (dp_t - 1) / dp_t if dp_t > 1 else 0.0
+    frac_tp = (tp - 1) / tp if tp > 1 else 0.0
+    if is_train:
+        coll += fsdp_passes * (2.0 * N_tot / tp) * frac_dp      # FSDP AG
+        coll += 2.0 * grad_bytes * N_tot / tp * frac_dp         # grad RS+AG
+        n_ar = 2.0 if seq_parallel else 4.0   # SP: AR -> RS+AG pairs (half)
+        coll += 2.0 * n_ar * L * (B_loc * S * D * 2.0) * frac_tp * 1.5
+        if cfg.moe:
+            coll += 2.0 * passes * cfg.moe.top_k * B_loc * S * D * 2.0 \
+                * frac_tp
+    else:
+        # weights are TP-resident (no FSDP gather at serve time if cached),
+        # but TP all-reduces remain
+        n_ar = 2.0
+        coll += n_ar * L * (B_loc * (1 if is_decode else S) * D * 2.0) \
+            * frac_tp * 2.0
+        if cfg.moe:
+            coll += 2.0 * cfg.moe.top_k * B_loc * (1 if is_decode else S) \
+                * D * 2.0 * frac_tp
+
+    model_flops = (6.0 if is_train else 2.0) * N_act * tokens
+    return CellModel(flops_pd=flops_pd, hbm_pd=hbm, coll_pd=coll,
+                     model_flops=model_flops, hlo_flops_global=flops_global)

@@ -1,0 +1,112 @@
+"""Roofline analysis (EXPERIMENTS.md §Roofline).
+
+Combines the analytic per-cell performance model (launch/perfmodel.py, which
+encodes the partitioning the dry-run proved coherent) with the dry-run
+artifacts (per-device live bytes from memory_analysis, collective shapes from
+the post-SPMD HLO as a structural cross-check).
+
+Terms per (arch x shape), single-pod mesh:
+    t_compute    = FLOPs_pd / 197 TF/s      t_memory = HBM_pd / 819 GB/s
+    t_collective = wire_pd / 50 GB/s
+    roofline fraction = (MODEL_FLOPS / n_dev / peak) / max(term)
+    useful ratio      = MODEL_FLOPS / (HLO-equivalent FLOPs, global)
+
+    PYTHONPATH=src python -m repro.launch.roofline [--markdown] [--tag base]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.configs import applicable_cells
+from . import perfmodel
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__),
+                            "..", "..", "..", "dryrun_results.json")
+
+
+def load_record(results, arch, shape, mesh="16x16", tag="base"):
+    return results.get(f"{arch}|{shape}|{mesh}|{tag}")
+
+
+def analyze_cell(arch, shape, rec=None, **model_kw):
+    m = perfmodel.build(arch, shape, **model_kw)
+    out = {
+        "arch": arch, "shape": shape,
+        "t_compute_ms": m.t_compute * 1e3,
+        "t_memory_ms": m.t_memory * 1e3,
+        "t_collective_ms": m.t_collective * 1e3,
+        "dominant": m.dominant,
+        "model_flops": m.model_flops,
+        "useful_ratio": m.model_flops / m.hlo_flops_global,
+        "roofline_fraction": (m.model_flops / 256 / perfmodel.PEAK_FLOPS)
+        / m.bound,
+    }
+    if rec:
+        out["bytes_per_device_gib"] = (rec.get("bytes_per_device") or 0) / 2**30
+        out["fits_hbm16"] = (rec.get("bytes_per_device") or 0) < 16 * 2**30
+        out["hlo_collective_ops"] = rec.get("collectives", {}).get("ops", {})
+        out["compile_ok"] = rec.get("ok", False)
+    return out
+
+
+_HINTS = {
+    "compute": "compute-bound: raise per-device tile sizes / drop remat",
+    "memory": ("HBM-bound: weight reads dominate — raise arithmetic "
+               "intensity (bigger batch, fewer passes) or quantize weights"),
+    "collective": ("collective-bound: cut FSDP gather volume (fewer gather "
+                   "passes, SP halves TP traffic, int8 grad compression)"),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="base")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--sp", action="store_true",
+                    help="model sequence-parallel activations")
+    args = ap.parse_args()
+
+    results = {}
+    if os.path.exists(RESULTS_PATH):
+        with open(RESULTS_PATH) as f:
+            results = json.load(f)
+
+    rows = []
+    for arch, shape in applicable_cells():
+        rec = load_record(results, arch, shape, args.mesh, args.tag)
+        rows.append(analyze_cell(arch, shape, rec,
+                                 seq_parallel=args.sp))
+
+    if args.markdown:
+        print("| arch | shape | t_comp ms | t_mem ms | t_coll ms | dominant |"
+              " useful | roofline | GiB/dev | fits 16G |")
+        print("|---|---|---:|---:|---:|---|---:|---:|---:|---|")
+        for r in rows:
+            print(f"| {r['arch']} | {r['shape']} | {r['t_compute_ms']:.2f} | "
+                  f"{r['t_memory_ms']:.2f} | {r['t_collective_ms']:.2f} | "
+                  f"{r['dominant']} | {r['useful_ratio']*100:.0f}% | "
+                  f"{r['roofline_fraction']*100:.1f}% | "
+                  f"{r.get('bytes_per_device_gib', 0):.2f} | "
+                  f"{'y' if r.get('fits_hbm16') else 'N'} |")
+    else:
+        for r in rows:
+            print(f"{r['arch']:22s} {r['shape']:12s} "
+                  f"comp={r['t_compute_ms']:9.2f} mem={r['t_memory_ms']:9.2f} "
+                  f"coll={r['t_collective_ms']:9.2f} dom={r['dominant']:10s} "
+                  f"useful={r['useful_ratio']*100:4.0f}% "
+                  f"roofline={r['roofline_fraction']*100:5.1f}% "
+                  f"mem/dev={r.get('bytes_per_device_gib', 0):6.2f}GiB")
+        doms = {}
+        for r in rows:
+            doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+        print(f"\ndominant-term counts: {doms}")
+        for d, hint in _HINTS.items():
+            if doms.get(d):
+                print(f"  {d}: {hint}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,216 @@
+"""GSPMD sharding rules: params, optimizer state, batches, decode caches.
+
+Scheme (DESIGN.md §6): FSDP x TP.
+  - column-parallel projections (wq/wk/wv, mlp up/gate, ssm in_proj, ...):
+        (d_in, d_out) -> P(fsdp, "model")
+  - row-parallel projections (wo, mlp down, out_proj, ...):
+        (d_in, d_out) -> P("model", fsdp)
+  - MoE experts shard the expert axis over "model" (expert parallelism)
+    and an inner dim over fsdp.
+  - embeddings/lm_head shard the vocab over "model" and d_model over fsdp.
+  - norms, biases, gates, small per-head vectors: replicated.
+Rules are right-aligned to the leaf rank, so layer-stacked (L, ...) and
+period-stacked (P, k, ...) parameters inherit the same rule with leading
+None axes.
+
+fsdp = ("data",) on the single-pod mesh, ("pod", "data") on the multi-pod
+mesh — ZeRO-3-style sharding extends across pods; batch shards the same axes.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import data_axes, dp_size
+
+__all__ = ["param_specs", "opt_specs", "batch_specs", "cache_specs",
+           "to_shardings"]
+
+_FSDP = "__fsdp__"  # placeholder resolved to the mesh's data axes
+
+# last-path-component -> right-aligned partition rule
+_PARAM_RULES = {
+    # embeddings / head
+    "embed": ("model", _FSDP),
+    "lm_head": (_FSDP, "model"),
+    # attention
+    "wq": (_FSDP, "model"), "wk": (_FSDP, "model"), "wv": (_FSDP, "model"),
+    "wo": ("model", _FSDP),
+    "bq": ("model",), "bk": ("model",), "bv": ("model",),
+    # MLA
+    "q_down": (_FSDP, None), "q_up": (None, "model"),
+    "kv_down": (_FSDP, None), "k_up": (None, "model"),
+    "v_up": (None, "model"),
+    # MLP
+    "up": (_FSDP, "model"), "gate": (_FSDP, "model"),
+    "down": ("model", _FSDP),
+    "up_b": ("model",),
+    # MoE
+    "router": (_FSDP, None),
+    "w_gate": ("model", _FSDP, None), "w_up": ("model", _FSDP, None),
+    "w_down": ("model", None, _FSDP),
+    # SSM / RG-LRU
+    "in_proj": (_FSDP, "model"), "out_proj": ("model", _FSDP),
+    "in_x": (_FSDP, "model"), "in_y": (_FSDP, "model"),
+    "W_a": (None, "model"), "W_x": (None, "model"),
+    "Lambda": ("model",), "b_a": ("model",), "b_x": ("model",),
+    "conv_w": (None, "model"), "conv_b": ("model",),
+    "norm_w": ("model",),
+    "out": ("model", _FSDP),
+}
+
+
+def _key_name(entry) -> str:
+    if isinstance(entry, jax.tree_util.DictKey):
+        return str(entry.key)
+    if isinstance(entry, jax.tree_util.GetAttrKey):
+        return entry.name
+    return ""
+
+
+def _walk(tree, path):
+    """Follow a key path (Dict/Sequence entries) through a pytree."""
+    sub = tree
+    for entry in path:
+        if isinstance(entry, jax.tree_util.DictKey):
+            if not (isinstance(sub, dict) and entry.key in sub):
+                return None
+            sub = sub[entry.key]
+        elif isinstance(entry, jax.tree_util.SequenceKey):
+            if not isinstance(sub, (list, tuple)) or entry.idx >= len(sub):
+                return None
+            sub = sub[entry.idx]
+        else:
+            return None
+    return sub
+
+
+def _right_align(rule, ndim):
+    rule = tuple(rule)
+    if len(rule) > ndim:     # e.g. a scalar matched by name: replicate
+        return P()
+    return P(*((None,) * (ndim - len(rule)) + rule))
+
+
+def _resolve(spec: P, fsdp):
+    return P(*(fsdp if s == _FSDP else s for s in spec))
+
+
+def _mask_uneven(shape, spec: P, mesh) -> P:
+    """Drop sharding on dims the axis product doesn't divide evenly —
+    jit arguments require exact divisibility (unlike GSPMD intermediates)."""
+    out = []
+    for dim, s in zip(shape, spec):
+        if s is not None:
+            axes = s if isinstance(s, tuple) else (s,)
+            n = int(np.prod([mesh.shape[a] for a in axes]))
+            if dim % n != 0:
+                s = None
+        out.append(s)
+    return P(*out)
+
+
+def param_specs(params_struct, mesh):
+    """PartitionSpec tree for a params (or ShapeDtypeStruct) tree."""
+    fsdp = data_axes(mesh)
+
+    def one(path, leaf):
+        name = ""
+        for entry in reversed(path):
+            name = _key_name(entry)
+            if name:
+                break
+        rule = _PARAM_RULES.get(name)
+        if rule is None or leaf.ndim == 0:
+            return P()
+        spec = _resolve(_right_align(rule, leaf.ndim), fsdp)
+        return _mask_uneven(leaf.shape, spec, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, params_struct)
+
+
+def opt_specs(opt_struct, pspecs, mesh):
+    """Optimizer state follows its parameter's sharding (m/v mirror params)."""
+
+    def one(path, leaf):
+        names = [_key_name(e) for e in path]
+        if "step" in names or leaf.ndim == 0 or leaf.size == 0:
+            return P()
+        # adamw state: {'m': tree, 'v': tree, 'step'} — strip the head key
+        # and look the parameter up in pspecs by the remaining path.
+        sub = _walk(pspecs, path[1:])
+        return sub if isinstance(sub, P) else P()
+
+    return jax.tree_util.tree_map_with_path(one, opt_struct)
+
+
+def batch_specs(batch_struct, mesh):
+    """Shard the batch dim over the data axes (replicate if not divisible)."""
+    fsdp = data_axes(mesh)
+    n = dp_size(mesh)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return P()
+        b = leaf.shape[0]
+        lead = fsdp if b % n == 0 else None
+        return P(lead, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(one, batch_struct)
+
+
+# cache leaf-name -> (batch_axis_offset_from_right, rule right of batch)
+_CACHE_RULES = {
+    # (..., B, S, Hk, dh): shard batch + head_dim (kv heads are often < 16)
+    "k": (_FSDP, None, None, "model"),
+    "v": (_FSDP, None, None, "model"),
+    "cross_k": (_FSDP, None, None, "model"),
+    "cross_v": (_FSDP, None, None, "model"),
+    # MLA latent cache (..., B, S, lat)
+    "c_kv": (_FSDP, None, "model"),
+    "k_rope": (_FSDP, None, None),
+}
+
+
+def cache_specs(cache_struct, mesh):
+    fsdp = data_axes(mesh)
+    n = dp_size(mesh)
+
+    def one(path, leaf):
+        name = ""
+        for entry in reversed(path):
+            name = _key_name(entry)
+            if name and not name.isdigit():
+                break
+        if name in _CACHE_RULES:
+            rule = _CACHE_RULES[name]
+        elif name == "state" and leaf.ndim >= 4:   # ssm (..., B, H, N, hd)
+            rule = (_FSDP, "model", None, None)
+        elif name == "state":                       # rg-lru (..., B, w)
+            rule = (_FSDP, "model")
+        elif name == "conv":                        # (..., B, K-1, C)
+            rule = (_FSDP, None, "model")
+        else:
+            return P()
+        spec = _resolve(_right_align(rule, leaf.ndim), fsdp)
+        # batch divisibility: find the batch dim (first non-None entry)
+        resolved = []
+        for dim, s in zip(leaf.shape, spec):
+            if s is not None:
+                axes = s if isinstance(s, tuple) else (s,)
+                sz = int(np.prod([mesh.shape[a] for a in axes]))
+                if dim % sz != 0:
+                    s = None
+            resolved.append(s)
+        return P(*resolved)
+
+    return jax.tree_util.tree_map_with_path(one, cache_struct)
+
+
+def to_shardings(spec_tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

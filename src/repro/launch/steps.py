@@ -1,0 +1,202 @@
+"""Jitted step builders: train_step / prefill_step / serve_step per cell.
+
+`build_cell(cfg, cell, mesh)` returns (jitted_fn, arg_structs) where
+arg_structs are ShapeDtypeStructs — .lower(*arg_structs) never allocates, so
+a 236B-parameter train step lowers on a laptop (this is the dry-run path).
+The same builders drive real training/serving when given real arrays.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import (decode_step, init_decode_state, init_params,
+                          prefill, train_loss)
+from repro.models.partition import set_activation_axes
+from repro.optim import adamw_init, adamw_update, warmup_cosine
+from . import sharding as shd
+from .mesh import data_axes, dp_size
+
+
+# Perf knobs togglable per dry-run tag (see EXPERIMENTS.md §Perf).
+OPTIONS = {
+    "seq_parallel": False,   # Megatron-style SP: shard seq dim of residuals
+    "microbatch": 0,         # grad accumulation over k microbatches (0 = off)
+    "pure_dp": False,        # small models: replicate params, DP over all axes
+    "zero1": False,          # with pure_dp: shard optimizer state (ZeRO-1)
+}
+
+
+def _set_act_axes(mesh, batch: int):
+    """Enable batch-activation constraints when the batch is shardable."""
+    if OPTIONS["pure_dp"]:
+        axes = tuple(mesh.axis_names)
+        n = int(np.prod([mesh.shape[a] for a in axes]))
+        if batch % n == 0:
+            set_activation_axes(axes, tp_axis=None, tp_size=1,
+                                seq_parallel=False, dp_size=n)
+        else:
+            set_activation_axes(None)
+        return
+    if batch % dp_size(mesh) == 0:
+        set_activation_axes(data_axes(mesh), tp_axis="model",
+                            tp_size=mesh.shape["model"],
+                            seq_parallel=OPTIONS["seq_parallel"],
+                            dp_size=dp_size(mesh))
+    else:
+        set_activation_axes(None)
+
+__all__ = ["batch_struct", "build_train", "build_prefill", "build_decode",
+           "build_cell"]
+
+
+def batch_struct(cfg, batch: int, seq: int):
+    s = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if cfg.family == "encdec":
+        s["frames"] = jax.ShapeDtypeStruct((batch, cfg.enc_seq, cfg.d_model),
+                                           jnp.float32)
+    if cfg.family == "vlm":
+        s["image_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_image_tokens, cfg.d_model), jnp.float32)
+    return s
+
+
+def _params_struct(cfg):
+    return jax.eval_shape(functools.partial(init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def build_train(cfg, cell, mesh, *, lr=3e-4, donate=True):
+    _set_act_axes(mesh, cell.batch)
+    p_struct = _params_struct(cfg)
+    o_struct = jax.eval_shape(adamw_init, p_struct)
+    b_struct = batch_struct(cfg, cell.batch, cell.seq)
+    if OPTIONS["pure_dp"]:
+        all_axes = tuple(mesh.axis_names)
+        n_all = int(np.prod([mesh.shape[a] for a in all_axes]))
+        p_spec = jax.tree.map(lambda _: P(), p_struct)
+        if OPTIONS["zero1"]:
+            # ZeRO-1: shard f32 moments over all chips, on the first dim
+            # the axis product divides (layer-stacked dim 0 rarely does)
+            def z1(l):
+                for i, d in enumerate(l.shape):
+                    if d % n_all == 0:
+                        spec = [None] * l.ndim
+                        spec[i] = all_axes
+                        return P(*spec)
+                return P()
+            o_spec = jax.tree.map(z1, o_struct)
+        else:
+            o_spec = jax.tree.map(lambda _: P(), o_struct)
+        b_spec = jax.tree.map(
+            lambda l: P(all_axes, *([None] * (l.ndim - 1))), b_struct)
+    else:
+        p_spec = shd.param_specs(p_struct, mesh)
+        o_spec = shd.opt_specs(o_struct, p_spec, mesh)
+        b_spec = shd.batch_specs(b_struct, mesh)
+    scalar = P()
+    k_micro = OPTIONS["microbatch"]
+
+    def grads_of(params, batch):
+        def loss_fn(p):
+            loss, metrics = train_loss(cfg, p, batch)
+            return loss, metrics
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def step_fn(params, opt_state, batch, step):
+        if k_micro and cell.batch % k_micro == 0:
+            # gradient accumulation: scan over k microbatches; peak
+            # activation memory drops ~k-fold, FSDP gathers are hoisted
+            # out of the loop by XLA (loop-invariant params)
+            micro = jax.tree.map(
+                lambda x: x.reshape((k_micro, x.shape[0] // k_micro)
+                                    + x.shape[1:]), batch)
+
+            def body(acc, mb):
+                (loss, metrics), g = grads_of(params, mb)
+                acc = jax.tree.map(jnp.add, acc,
+                                   jax.tree.map(lambda x: x / k_micro, g))
+                return acc, loss
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, losses = jax.lax.scan(body, zeros, micro)
+            loss = jnp.mean(losses)
+            metrics = {}
+        else:
+            (loss, metrics), grads = grads_of(params, batch)
+        lr_t = warmup_cosine(step, peak_lr=lr, warmup_steps=100,
+                             total_steps=10000)
+        new_params, new_opt = adamw_update(grads, opt_state, params, lr=lr_t)
+        return new_params, new_opt, {"loss": loss, **metrics}
+
+    ns = lambda t: shd.to_shardings(t, mesh)
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(ns(p_spec), ns(o_spec), ns(b_spec), NamedSharding(mesh, scalar)),
+        out_shardings=(ns(p_spec), ns(o_spec), None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    args = (p_struct, o_struct, b_struct,
+            jax.ShapeDtypeStruct((), jnp.int32))
+    return jitted, args
+
+
+def build_prefill(cfg, cell, mesh):
+    _set_act_axes(mesh, cell.batch)
+    p_struct = _params_struct(cfg)
+    b_struct = batch_struct(cfg, cell.batch, cell.seq)
+    p_spec = shd.param_specs(p_struct, mesh)
+    b_spec = shd.batch_specs(b_struct, mesh)
+
+    def prefill_fn(params, batch):
+        logits, cache = prefill(cfg, params, batch, cell.seq)
+        return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+    ns = lambda t: shd.to_shardings(t, mesh)
+    jitted = jax.jit(prefill_fn,
+                     in_shardings=(ns(p_spec), ns(b_spec)),
+                     out_shardings=None)
+    return jitted, (p_struct, b_struct)
+
+
+def build_decode(cfg, cell, mesh):
+    """One serve_step: new token against a seq_len-deep cache."""
+    _set_act_axes(mesh, cell.batch)
+    p_struct = _params_struct(cfg)
+    c_struct = jax.eval_shape(
+        functools.partial(init_decode_state, cfg, cell.batch, cell.seq))
+    t_struct = jax.ShapeDtypeStruct((cell.batch, 1), jnp.int32)
+    p_spec = shd.param_specs(p_struct, mesh)
+    c_spec = shd.cache_specs(c_struct, mesh)
+    t_spec = shd.batch_specs({"t": t_struct}, mesh)["t"]
+
+    def serve_fn(params, token, cache, pos):
+        logits, new_cache = decode_step(cfg, params, token, cache, pos)
+        return jnp.argmax(logits, -1)[:, None].astype(jnp.int32), new_cache
+
+    ns = lambda t: shd.to_shardings(t, mesh)
+    jitted = jax.jit(
+        serve_fn,
+        in_shardings=(ns(p_spec), NamedSharding(mesh, t_spec), ns(c_spec),
+                      NamedSharding(mesh, P())),
+        out_shardings=(NamedSharding(mesh, t_spec), ns(c_spec)),
+        donate_argnums=(2,),
+    )
+    args = (p_struct, t_struct, c_struct, jax.ShapeDtypeStruct((), jnp.int32))
+    return jitted, args
+
+
+def build_cell(cfg, cell, mesh, **kw):
+    if cell.kind == "train":
+        return build_train(cfg, cell, mesh, **kw)
+    if cell.kind == "prefill":
+        return build_prefill(cfg, cell, mesh)
+    if cell.kind == "decode":
+        return build_decode(cfg, cell, mesh)
+    raise ValueError(cell.kind)

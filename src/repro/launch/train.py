@@ -1,0 +1,125 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b \
+        [--shape train_4k] [--steps N] [--reduced] [--devices K] \
+        [--opt seq_parallel] [--ckpt-dir DIR]
+
+On a real TPU slice this binds the production mesh; on CPU (this container)
+pass `--devices K --reduced` to run the same sharded step on K fake host
+devices with the reduced config (the integration path the tests exercise).
+The loop wires together every substrate layer: deterministic data, the
+sharded jitted step, async checkpointing with resume, preemption handling,
+and heartbeat reporting.
+"""
+import argparse
+import os
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the CPU-smoke reduced config")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="fake host devices (CPU bring-up); 0 = real devices")
+    ap.add_argument("--mesh", choices=("auto", "single", "multi"),
+                    default="auto")
+    ap.add_argument("--batch", type=int, default=0, help="override batch")
+    ap.add_argument("--seq", type=int, default=0, help="override seq")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--opt", action="append", default=[],
+                    help="perf knob (see steps.OPTIONS), e.g. seq_parallel")
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                                   f" --xla_force_host_platform_device_count="
+                                   f"{args.devices}")
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.checkpoint import CheckpointManager
+    from repro.configs import get_config, reduce_config, shape_of
+    from repro.configs.registry import ShapeCell
+    from repro.data import SyntheticLM
+    from repro.launch import steps as steps_mod
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import init_params
+    from repro.optim import adamw_init
+    from repro.runtime import ClusterMonitor, PreemptionHandler
+
+    for k in args.opt:
+        if "=" in k:
+            k, v = k.split("=")
+            steps_mod.OPTIONS[k] = int(v)
+        else:
+            steps_mod.OPTIONS[k] = True
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_config(cfg)
+    cell = shape_of(args.shape)
+    if args.batch or args.seq:
+        cell = ShapeCell(cell.name, cell.kind,
+                         args.seq or cell.seq, args.batch or cell.batch)
+
+    n_dev = len(jax.devices())
+    if args.mesh == "auto" and n_dev not in (256, 512):
+        # bring-up mesh: factor the available devices into (data, model)
+        model = 1
+        for m in (16, 8, 4, 2, 1):
+            if n_dev % m == 0:
+                model = m
+                break
+        mesh = jax.make_mesh((n_dev // model, model), ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    print(f"mesh: {dict(mesh.shape)}  arch: {cfg.name}  "
+          f"cell: {cell.name} (B={cell.batch}, S={cell.seq})")
+
+    with mesh:
+        fn, _ = steps_mod.build_train(cfg, cell, mesh, lr=args.lr)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        opt = adamw_init(params)
+        ds = SyntheticLM(vocab=cfg.vocab, seq=cell.seq,
+                         global_batch=cell.batch, seed=0)
+        mgr = CheckpointManager(args.ckpt_dir, keep=3) if args.ckpt_dir else None
+        preempt = PreemptionHandler()
+        monitor = ClusterMonitor(n_hosts=jax.process_count())
+
+        start = 0
+        if mgr:
+            got = mgr.restore_latest({"params": params, "opt": opt})
+            if got[0] is not None:
+                start, state, _ = got
+                params, opt = state["params"], state["opt"]
+                print(f"resumed at step {start}")
+
+        for s in range(start, args.steps):
+            batch = ds.batch(s)
+            extras = ds.extras(cfg, cell.batch)
+            batch.update(extras)
+            params, opt, metrics = fn(params, opt, batch,
+                                      jnp.asarray(s, jnp.int32))
+            monitor.record_heartbeat(jax.process_index(), s)
+            if (s + 1) % 10 == 0:
+                print(f"step {s+1:5d}  loss {float(metrics['loss']):.4f}")
+            if mgr and ((s + 1) % args.ckpt_every == 0 or preempt.should_stop):
+                mgr.save_async(s + 1, {"params": params, "opt": opt},
+                               extra={"data_step": s + 1})
+            if preempt.should_stop:
+                print("preemption: checkpointed, exiting 0")
+                break
+        if mgr:
+            mgr.wait()
+        print(f"done at step {s+1}, loss {float(metrics['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from .config import (MLAConfig, ModelConfig, MoEConfig, RGLRUConfig, SSMConfig)
+from .model import (decode_step, init_decode_state, init_params, prefill,
+                    train_loss)
+
+__all__ = ["ModelConfig", "MLAConfig", "MoEConfig", "RGLRUConfig", "SSMConfig",
+           "init_params", "train_loss", "prefill", "decode_step",
+           "init_decode_state"]

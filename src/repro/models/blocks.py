@@ -1,0 +1,286 @@
+"""Attention blocks: GQA self-attention, MLA (DeepSeek-V2), cross-attention.
+
+Each block exposes:
+    *_init(key, cfg, dtype)                       -> params
+    *_apply(x, p, cfg, ...)                       -> y          (train/prefill)
+    *_init_cache(batch, max_len, cfg, dtype)      -> cache
+    *_step(x1, cache, pos, p, cfg)                -> y, cache   (decode)
+
+`cfg` here is the model-level ModelConfig (models.config); blocks read the
+fields they need so one config object drives every family.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import (apply_rope, attention, chunked_attention,
+                     decode_attention, dense_init, rms_norm, rope_for_pos,
+                     rope_for_seq)
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 Multi-head Latent Attention dims."""
+    q_lora: int = 1536
+    kv_lora: int = 512
+    qk_nope: int = 128
+    qk_rope: int = 64
+    v_dim: int = 128
+
+
+# ---------------------------------------------------------------------------
+# GQA self-attention
+# ---------------------------------------------------------------------------
+def gqa_init(key, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    D, H, Hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_()
+    p = {"wq": dense_init(ks[0], D, H * dh, dtype),
+         "wk": dense_init(ks[1], D, Hk * dh, dtype),
+         "wv": dense_init(ks[2], D, Hk * dh, dtype),
+         "wo": dense_init(ks[3], H * dh, D, dtype)}
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((H * dh,), dtype)
+        p["bk"] = jnp.zeros((Hk * dh,), dtype)
+        p["bv"] = jnp.zeros((Hk * dh,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dtype)
+        p["k_norm"] = jnp.ones((dh,), dtype)
+    return p
+
+
+def _qkv(x, p, cfg):
+    B, S, _ = x.shape
+    H, Hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_()
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, dh)
+    k = k.reshape(B, S, Hk, dh)
+    v = v.reshape(B, S, Hk, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, {"w": p["q_norm"]})
+        k = rms_norm(k, {"w": p["k_norm"]})
+    return q, k, v
+
+
+def _rot_dim(cfg):
+    return int(cfg.head_dim_() * cfg.rotary_pct) // 2 * 2
+
+
+def gqa_apply(x, p, cfg, *, causal=True, positions=None, use_rope=True):
+    B, S, _ = x.shape
+    q, k, v = _qkv(x, p, cfg)
+    if use_rope:
+        pos = jnp.arange(S) if positions is None else positions
+        cos, sin = rope_for_seq(pos, _rot_dim(cfg), cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    o = chunked_attention(q, k, v, causal=causal, window=cfg.window,
+                          kv_chunk=cfg.kv_chunk)
+    return o.reshape(B, S, -1) @ p["wo"]
+
+
+def gqa_init_cache(batch, max_len, cfg, dtype):
+    Hk, dh = cfg.n_kv_heads, cfg.head_dim_()
+    # Sliding-window layers only ever need `window` cache slots.
+    slots = max_len if cfg.window is None else min(max_len, cfg.window)
+    return {"k": jnp.zeros((batch, slots, Hk, dh), dtype),
+            "v": jnp.zeros((batch, slots, Hk, dh), dtype)}
+
+
+def gqa_prefill_cache(x, p, cfg, max_len, dtype):
+    """Build the cache from a full prefill pass; returns (y, cache)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(x, p, cfg)
+    pos = jnp.arange(S)
+    cos, sin = rope_for_seq(pos, _rot_dim(cfg), cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    o = chunked_attention(q, k, v, causal=True, window=cfg.window,
+                          kv_chunk=cfg.kv_chunk)
+    y = o.reshape(B, S, -1) @ p["wo"]
+    cache = gqa_init_cache(B, max_len, cfg, k.dtype)
+    slots = cache["k"].shape[1]
+    take = min(S, slots)
+    cache = {"k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k[:, S - take:], 0, 1),
+             "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v[:, S - take:], 0, 1)}
+    return y, cache
+
+
+def gqa_step(x1, cache, pos, p, cfg):
+    """pos: scalar — current position (number of tokens already cached)."""
+    B = x1.shape[0]
+    q, k, v = _qkv(x1, p, cfg)
+    cos, sin = rope_for_pos(jnp.full((B,), pos), _rot_dim(cfg), cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    slots = cache["k"].shape[1]
+    # ring-buffer write for windowed layers, linear write otherwise
+    write_at = pos % slots if cfg.window is not None else pos
+    kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, write_at, 1)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, write_at, 1)
+    if cfg.window is None:
+        o = decode_attention(q, kc, vc, pos + 1)
+    else:
+        # ring buffer: every slot valid once pos >= slots; mask by age
+        k_pos = jnp.arange(slots)
+        age_ok = jnp.where(pos + 1 >= slots, jnp.ones((slots,), bool),
+                           k_pos <= pos)
+        scale = np.float32(1.0 / np.sqrt(cfg.head_dim_()))
+        Hk = cfg.n_kv_heads
+        G = cfg.n_heads // Hk
+        qg = q.reshape(B, 1, Hk, G, -1)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(F32), kc.astype(F32)) * scale
+        s = jnp.where(age_ok[None, None, None, None, :], s, -jnp.inf)
+        pr = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", pr, vc.astype(F32))
+        o = o.reshape(B, 1, cfg.n_heads, -1).astype(x1.dtype)
+    y = o.reshape(B, 1, -1) @ p["wo"]
+    return y, {"k": kc, "v": vc}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2) — latent KV compression
+# ---------------------------------------------------------------------------
+def mla_init(key, cfg, dtype):
+    m: MLAConfig = cfg.mla
+    ks = jax.random.split(key, 8)
+    D, H = cfg.d_model, cfg.n_heads
+    dqk = m.qk_nope + m.qk_rope
+    return {
+        "q_down": dense_init(ks[0], D, m.q_lora, dtype),
+        "q_norm": jnp.ones((m.q_lora,), dtype),
+        "q_up": dense_init(ks[1], m.q_lora, H * dqk, dtype),
+        "kv_down": dense_init(ks[2], D, m.kv_lora + m.qk_rope, dtype),
+        "kv_norm": jnp.ones((m.kv_lora,), dtype),
+        "k_up": dense_init(ks[3], m.kv_lora, H * m.qk_nope, dtype),
+        "v_up": dense_init(ks[4], m.kv_lora, H * m.v_dim, dtype),
+        "wo": dense_init(ks[5], H * m.v_dim, D, dtype),
+    }
+
+
+def _mla_q(x, p, cfg):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    ql = rms_norm(x @ p["q_down"], {"w": p["q_norm"]})
+    q = (ql @ p["q_up"]).reshape(B, S, H, m.qk_nope + m.qk_rope)
+    return q[..., :m.qk_nope], q[..., m.qk_nope:]
+
+
+def _mla_latent(x, p, cfg):
+    m = cfg.mla
+    kv = x @ p["kv_down"]
+    c_kv = rms_norm(kv[..., :m.kv_lora], {"w": p["kv_norm"]})
+    k_rope = kv[..., m.kv_lora:]                  # (B,S,rope) shared head
+    return c_kv, k_rope
+
+
+def mla_apply(x, p, cfg, *, positions=None):
+    """Prefill/train: expand the latent and run standard MHA (nope+rope)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope = _mla_q(x, p, cfg)
+    c_kv, k_rope = _mla_latent(x, p, cfg)
+    k_nope = (c_kv @ p["k_up"]).reshape(B, S, H, m.qk_nope)
+    v = (c_kv @ p["v_up"]).reshape(B, S, H, m.v_dim)
+    pos = jnp.arange(S) if positions is None else positions
+    cos, sin = rope_for_seq(pos, m.qk_rope, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)  # (B,S,1,rope)
+    k_rope = jnp.broadcast_to(k_rope, (B, S, H, m.qk_rope))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope], axis=-1)
+    o = chunked_attention(q, k, v, causal=True, kv_chunk=cfg.kv_chunk)
+    return o.reshape(B, S, -1) @ p["wo"]
+
+
+def mla_init_cache(batch, max_len, cfg, dtype):
+    m = cfg.mla
+    return {"c_kv": jnp.zeros((batch, max_len, m.kv_lora), dtype),
+            "k_rope": jnp.zeros((batch, max_len, m.qk_rope), dtype)}
+
+
+def mla_step(x1, cache, pos, p, cfg):
+    """Absorbed decode: scores and values computed in the 512-d latent space.
+
+    This is MLA's raison d'être — the KV cache is (kv_lora + qk_rope) wide
+    per token instead of 2 * H * head_dim.
+    """
+    m = cfg.mla
+    B = x1.shape[0]
+    H = cfg.n_heads
+    q_nope, q_rope = _mla_q(x1, p, cfg)                     # (B,1,H,*)
+    c_new, kr_new = _mla_latent(x1, p, cfg)
+    cos, sin = rope_for_pos(jnp.full((B,), pos), m.qk_rope, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    kr_new = apply_rope(kr_new[:, :, None, :], cos, sin)[:, :, 0, :]
+    c_kv = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_new, pos, 1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], kr_new, pos, 1)
+
+    W_uk = p["k_up"].reshape(m.kv_lora, H, m.qk_nope)
+    q_abs = jnp.einsum("bqhd,lhd->bqhl", q_nope.astype(F32),
+                       W_uk.astype(F32))                     # (B,1,H,kv_lora)
+    s = (jnp.einsum("bqhl,bkl->bhqk", q_abs, c_kv.astype(F32))
+         + jnp.einsum("bqhr,bkr->bhqk", q_rope.astype(F32), k_rope.astype(F32)))
+    s = s * np.float32(1.0 / np.sqrt(m.qk_nope + m.qk_rope))
+    valid = jnp.arange(c_kv.shape[1]) <= pos
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    pr = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqk,bkl->bqhl", pr, c_kv.astype(F32))  # latent context
+    W_uv = p["v_up"].reshape(m.kv_lora, H, m.v_dim)
+    o = jnp.einsum("bqhl,lhd->bqhd", ctx, W_uv.astype(F32))
+    y = o.reshape(B, 1, -1).astype(x1.dtype) @ p["wo"]
+    return y, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder / llama-vision gated layers)
+# ---------------------------------------------------------------------------
+def cross_init(key, cfg, dtype, gated=False):
+    ks = jax.random.split(key, 4)
+    D, H, Hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_()
+    p = {"wq": dense_init(ks[0], D, H * dh, dtype),
+         "wk": dense_init(ks[1], D, Hk * dh, dtype),
+         "wv": dense_init(ks[2], D, Hk * dh, dtype),
+         "wo": dense_init(ks[3], H * dh, D, dtype)}
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dtype)
+        p["k_norm"] = jnp.ones((dh,), dtype)
+    if gated:
+        p["gate_attn"] = jnp.zeros((), F32)
+        p["gate_mlp"] = jnp.zeros((), F32)
+    return p
+
+
+def cross_kv(mem, p, cfg):
+    """Precompute K/V from the encoder/vision memory (B, Sm, D)."""
+    B, Sm, _ = mem.shape
+    Hk, dh = cfg.n_kv_heads, cfg.head_dim_()
+    k = (mem @ p["wk"]).reshape(B, Sm, Hk, dh)
+    v = (mem @ p["wv"]).reshape(B, Sm, Hk, dh)
+    if cfg.qk_norm and "k_norm" in p:
+        k = rms_norm(k, {"w": p["k_norm"]})
+    return k, v
+
+
+def cross_apply(x, kv, p, cfg):
+    """x: (B,S,D) queries; kv: precomputed (k, v)."""
+    B, S, _ = x.shape
+    H, dh = cfg.n_heads, cfg.head_dim_()
+    q = (x @ p["wq"]).reshape(B, S, H, dh)
+    if cfg.qk_norm and "q_norm" in p:
+        q = rms_norm(q, {"w": p["q_norm"]})
+    k, v = kv
+    o = chunked_attention(q, k, v, causal=False, kv_chunk=cfg.kv_chunk) \
+        if k.shape[1] > cfg.kv_chunk else attention(q, k, v, causal=False)
+    return o.reshape(B, S, -1) @ p["wo"]

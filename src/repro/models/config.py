@@ -1,0 +1,142 @@
+"""ModelConfig — one declarative config drives all ten architectures."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax.numpy as jnp
+
+from .blocks import MLAConfig
+from .moe import MoEConfig
+from .rglru import RGLRUConfig
+from .ssm import SSMConfig
+
+__all__ = ["ModelConfig", "MLAConfig", "MoEConfig", "RGLRUConfig", "SSMConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # 'lm' | 'encdec' | 'vlm' | 'hybrid' | 'ssm'
+    n_layers: int
+    d_model: int
+    vocab: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    d_ff: int = 0
+    head_dim: int = 0               # 0 -> d_model // n_heads
+
+    # attention options
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    rotary_pct: float = 1.0
+    window: Optional[int] = None    # sliding-window self-attention
+    attn_bias: bool = False
+    kv_chunk: int = 1024            # flash chunk for long prefill
+
+    # mlp options
+    mlp_gated: bool = True
+    mlp_act: str = "silu"
+    mlp_bias: bool = False
+    norm: str = "rms"               # 'rms' | 'ln'
+    embed_scale: bool = False       # gemma-style sqrt(d_model) embed scaling
+
+    # family extensions
+    moe: Optional[MoEConfig] = None
+    first_dense: int = 0            # leading dense-FFN layers in an MoE model
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    pattern: Optional[Tuple[str, ...]] = None  # hybrid, e.g. ('rec','rec','attn')
+    cross_every: int = 0            # vlm: one gated cross block per N self blocks
+    enc_layers: int = 0             # encdec encoder depth
+    enc_seq: int = 1500             # whisper frame count (stub frontend)
+    n_image_tokens: int = 6144      # vlm stub patch-embedding count
+
+    # numerics
+    dtype: Any = jnp.bfloat16
+
+    # capability flags
+    subquadratic: bool = False      # may run the long_500k cell
+    has_decoder: bool = True        # encoder-only archs would set False
+
+    def head_dim_(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for roofline MODEL_FLOPS)."""
+        D, V, L = self.d_model, self.vocab, self.n_layers
+        total = V * D  # embed
+        total += V * D  # head (untied)
+        dh = self.head_dim_()
+
+        def attn_params():
+            if self.mla:
+                m = self.mla
+                dqk = m.qk_nope + m.qk_rope
+                return (D * m.q_lora + m.q_lora * self.n_heads * dqk
+                        + D * (m.kv_lora + m.qk_rope)
+                        + m.kv_lora * self.n_heads * (m.qk_nope + m.v_dim)
+                        + self.n_heads * m.v_dim * D)
+            return (D * self.n_heads * dh + 2 * D * self.n_kv_heads * dh
+                    + self.n_heads * dh * D)
+
+        def mlp_params(dff):
+            mult = 3 if self.mlp_gated else 2
+            return mult * D * dff
+
+        def moe_params():
+            m = self.moe
+            routed = m.n_experts * 3 * D * m.d_expert + D * m.n_experts
+            shared = (3 * D * m.d_shared) if m.n_shared else 0
+            return routed + shared
+
+        if self.family == "ssm":
+            s = self.ssm
+            d_in = s.d_inner(D)
+            conv_ch = d_in + 2 * s.n_groups * s.d_state
+            per = (D * (d_in + conv_ch + s.n_heads(D))  # in_proj
+                   + s.conv_width * conv_ch + d_in * D)
+            return total + L * per
+        if self.family == "hybrid":
+            n_attn = sum(1 for i in range(L)
+                         if self.pattern[i % len(self.pattern)] == "attn")
+            n_rec = L - n_attn
+            w = self.rglru.width(D)
+            rec = 2 * D * w + self.rglru.conv_width * w + 2 * w * w + w * D
+            per_mlp = mlp_params(self.d_ff)
+            return total + n_attn * (attn_params() + per_mlp) + n_rec * (rec + per_mlp)
+        if self.family == "encdec":
+            enc = self.enc_layers * (attn_params() + mlp_params(self.d_ff))
+            dec = L * (2 * attn_params() + mlp_params(self.d_ff))
+            return total + enc + dec
+        if self.family == "vlm":
+            period = self.cross_every
+            n_cross = L // period if period else 0
+            n_self = L - n_cross
+            per_mlp = mlp_params(self.d_ff)
+            return total + (n_self + n_cross) * (attn_params() + per_mlp)
+        # plain / moe lm
+        per_attn = attn_params()
+        if self.moe:
+            dense_l = self.first_dense
+            moe_l = L - dense_l
+            return (total + L * per_attn + dense_l * mlp_params(self.d_ff)
+                    + moe_l * moe_params())
+        return total + L * (per_attn + mlp_params(self.d_ff))
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top-k experts only)."""
+        if not self.moe:
+            return self.param_count()
+        m = self.moe
+        D, L = self.d_model, self.n_layers
+        moe_l = L - self.first_dense
+        routed_active = m.top_k * 3 * D * m.d_expert + D * m.n_experts
+        shared = (3 * D * m.d_shared) if m.n_shared else 0
+        full = self.param_count()
+        routed_total = m.n_experts * 3 * D * m.d_expert + D * m.n_experts
+        return full - moe_l * (routed_total + shared) \
+            + moe_l * (routed_active + shared)

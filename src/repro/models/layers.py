@@ -1,0 +1,276 @@
+"""Shared neural-net layers: norms, RoPE, MLPs, attention (incl. chunked
+flash-style attention for long-context prefill), depthwise causal conv.
+
+Conventions:
+  - activations are (B, S, D); attention heads are materialized as (B, S, H, Dh)
+  - params are plain nested dicts of jnp arrays (pytrees)
+  - every op takes an explicit compute dtype; accumulation/softmax in f32
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["rms_norm", "layer_norm", "apply_norm", "rope_table", "apply_rope",
+           "rope_for_seq", "rope_for_pos",
+           "mlp_init", "mlp_apply", "attention", "chunked_attention",
+           "decode_attention", "causal_conv1d", "causal_conv1d_step",
+           "dense_init", "norm_init"]
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = (1.0 / np.sqrt(d_in)) if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out), F32) * scale).astype(dtype)
+
+
+def norm_init(d, dtype, bias=False):
+    p = {"w": jnp.ones((d,), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rms_norm(x, p, eps=1e-6):
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["w"].astype(F32)).astype(x.dtype)
+
+
+def layer_norm(x, p, eps=1e-5):
+    xf = x.astype(F32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["w"].astype(F32)
+    if "b" in p:
+        y = y + p["b"].astype(F32)
+    return y.astype(x.dtype)
+
+
+def apply_norm(kind, x, p, eps=1e-6):
+    return rms_norm(x, p, eps) if kind == "rms" else layer_norm(x, p, eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_table(positions, rot_dim, theta=10000.0):
+    """positions: (...,) int -> (cos, sin) each (..., rot_dim/2), f32."""
+    half = rot_dim // 2
+    inv = 1.0 / (theta ** (np.arange(half, dtype=np.float32) * 2.0 / rot_dim))
+    ang = positions.astype(F32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, Dh); cos/sin broadcastable to (B, S, H, rot/2).
+
+    Rotates the first `rot` dims (half-split layout), passes the rest through.
+    Use `rope_for_seq` / `rope_for_pos` to build correctly-shaped tables.
+    """
+    assert cos.ndim == x.ndim, "use rope_for_seq/rope_for_pos"
+    rot = cos.shape[-1] * 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = jnp.split(xr.astype(F32), 2, axis=-1)
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    return jnp.concatenate([o1.astype(x.dtype), o2.astype(x.dtype), xp], axis=-1)
+
+
+def rope_for_seq(seq_positions, rot_dim, theta):
+    """(S,) positions -> cos/sin shaped (1, S, 1, rot/2) for (B,S,H,D) tensors."""
+    cos, sin = rope_table(seq_positions, rot_dim, theta)
+    return cos[None, :, None, :], sin[None, :, None, :]
+
+
+def rope_for_pos(positions, rot_dim, theta):
+    """(B,) per-sample positions -> cos/sin shaped (B, 1, 1, rot/2)."""
+    cos, sin = rope_table(positions, rot_dim, theta)
+    return cos[:, None, None, :], sin[:, None, None, :]
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def mlp_init(key, d_model, d_ff, dtype, gated=True, bias=False):
+    ks = jax.random.split(key, 3)
+    p = {"up": dense_init(ks[0], d_model, d_ff, dtype),
+         "down": dense_init(ks[1], d_ff, d_model, dtype)}
+    if gated:
+        p["gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    if bias:
+        p["up_b"] = jnp.zeros((d_ff,), dtype)
+        p["down_b"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def mlp_apply(x, p, act="silu"):
+    fn = jax.nn.gelu if act == "gelu" else jax.nn.silu
+    up = x @ p["up"]
+    if "up_b" in p:
+        up = up + p["up_b"]
+    if "gate" in p:
+        g = x @ p["gate"]
+        h = fn(g.astype(F32)).astype(x.dtype) * up
+    else:
+        h = fn(up.astype(F32)).astype(x.dtype)
+    out = h @ p["down"]
+    if "down_b" in p:
+        out = out + p["down_b"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# attention (dense, chunked-flash, decode)
+# ---------------------------------------------------------------------------
+def _gqa_scores(q, k, scale):
+    """q: (B,Sq,H,D), k: (B,Sk,Hk,D) -> scores (B, Hk, G, Sq, Sk), f32."""
+    B, Sq, H, D = q.shape
+    Hk = k.shape[2]
+    G = H // Hk
+    qg = q.reshape(B, Sq, Hk, G, D)
+    return jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(F32), k.astype(F32)) * scale
+
+
+def _gqa_out(probs, v):
+    """probs: (B,Hk,G,Sq,Sk) f32; v: (B,Sk,Hk,D) -> (B,Sq,H,D)."""
+    B, Hk, G, Sq, Sk = probs.shape
+    D = v.shape[-1]
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(F32))
+    return o.reshape(B, Sq, Hk * G, D)
+
+
+def _mask_bias(q_pos, k_pos, causal, window):
+    """-> additive bias (Sq, Sk), 0 where allowed, -inf where masked."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(F32)
+
+
+def attention(q, k, v, *, causal=True, window=None, q_pos=None, k_pos=None):
+    """Dense GQA attention. Positions default to iota (self-attention)."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    scale = np.float32(1.0 / np.sqrt(D))
+    q_pos = jnp.arange(Sq) if q_pos is None else q_pos
+    k_pos = jnp.arange(Sk) if k_pos is None else k_pos
+    s = _gqa_scores(q, k, scale)
+    s = s + _mask_bias(q_pos, k_pos, causal, window)[None, None, None]
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p, v).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None, kv_chunk=1024):
+    """Flash-style online-softmax attention: scan over KV chunks.
+
+    Memory is O(Sq * kv_chunk) instead of O(Sq * Sk); used whenever
+    Sk > kv_chunk (e.g. the 32k prefill cells).
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    if Sk <= kv_chunk or Sk % kv_chunk != 0:
+        # dense fallback (short KV, or KV not a chunk multiple e.g. whisper's
+        # 1500-frame encoder memory)
+        return attention(q, k, v, causal=causal, window=window)
+    Hk = k.shape[2]
+    G = H // Hk
+    nkv = Sk // kv_chunk
+    scale = np.float32(1.0 / np.sqrt(D))
+    qg = q.reshape(B, Sq, Hk, G, D).astype(F32)
+    kc = k.reshape(B, nkv, kv_chunk, Hk, k.shape[-1])
+    vc = v.reshape(B, nkv, kv_chunk, Hk, v.shape[-1])
+    q_pos = jnp.arange(Sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        j, kb, vb = inp
+        k_pos = j * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb.astype(F32)) * scale
+        bias = _mask_bias(q_pos, k_pos, causal, window)
+        s = s + bias[None, None, None]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard: fully-masked rows keep m = -inf; exp(-inf - -inf) -> use safe m
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        corr = jnp.exp(jnp.where(jnp.isneginf(m), m_safe, m) - m_safe)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vb.astype(F32))
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc), None
+
+    Dv = v.shape[-1]  # may differ from the q/k head dim (e.g. MLA 192 vs 128)
+    m0 = jnp.full((B, Hk, G, Sq), -jnp.inf, F32)
+    l0 = jnp.zeros((B, Hk, G, Sq), F32)
+    a0 = jnp.zeros((B, Hk, G, Sq, Dv), F32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.arange(nkv), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, -2, 1).reshape(B, Sq, Hk * G, Dv)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q1, k_cache, v_cache, cache_len, *, window=None):
+    """Single-position decode: q1 (B, 1, H, D) vs cache (B, Smax, Hk, D).
+
+    `cache_len` (scalar int) is the number of valid cache positions; the new
+    token's K/V must already be written at cache_len - 1.
+    """
+    B, _, H, D = q1.shape
+    Smax = k_cache.shape[1]
+    scale = np.float32(1.0 / np.sqrt(D))
+    s = _gqa_scores(q1, k_cache, scale)  # (B,Hk,G,1,Smax)
+    k_pos = jnp.arange(Smax)
+    ok = k_pos < cache_len
+    if window is not None:
+        ok &= k_pos > cache_len - 1 - window
+    s = jnp.where(ok[None, None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p, v_cache).astype(q1.dtype)
+
+
+# ---------------------------------------------------------------------------
+# depthwise causal conv (SSM / RG-LRU front conv)
+# ---------------------------------------------------------------------------
+def causal_conv1d(x, w, b=None):
+    """x: (B, S, C); w: (K, C) depthwise kernel -> (B, S, C), causal."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(F32), w.astype(F32)[:, None, :],
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=w.shape[1])
+    if b is not None:
+        out = out + b.astype(F32)
+    return out.astype(x.dtype)
+
+
+def causal_conv1d_step(x1, conv_state, w, b=None):
+    """Decode step. x1: (B, 1, C); conv_state: (B, K-1, C) past inputs.
+
+    Returns (y1, new_conv_state).
+    """
+    K = w.shape[0]
+    window = jnp.concatenate([conv_state, x1], axis=1)        # (B, K, C)
+    y = jnp.einsum("bkc,kc->bc", window.astype(F32), w.astype(F32))
+    if b is not None:
+        y = y + b.astype(F32)
+    new_state = window[:, 1:] if K > 1 else conv_state
+    return y[:, None, :].astype(x1.dtype), new_state

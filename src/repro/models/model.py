@@ -1,0 +1,817 @@
+"""Model assembly for the five families: lm / encdec / vlm / hybrid / ssm.
+
+Public API (all pure functions of (cfg, params, ...)):
+
+    init_params(cfg, key)                          -> params
+    train_loss(cfg, params, batch)                 -> (loss, metrics)
+    prefill(cfg, params, batch, max_len)           -> (last_logits, cache)
+    decode_step(cfg, params, token, cache, pos)    -> (logits, cache)
+    init_decode_state(cfg, batch, max_len, extras) -> cache (zeros; dry-run)
+
+Layers are stacked along a leading axis and driven with `lax.scan` so compile
+time is O(1) in depth; heterogeneous stacks (vlm periods, hybrid patterns)
+scan over the pattern period with a small Python loop inside.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import blocks, partition
+from .config import ModelConfig
+from .layers import (apply_norm, apply_rope, mlp_apply, mlp_init, norm_init,
+                     rope_for_seq)
+from .moe import load_balance_loss, moe_apply, moe_init
+from .rglru import (rglru_apply, rglru_init, rglru_init_cache, rglru_step)
+from .ssm import ssm_apply, ssm_init, ssm_init_cache, ssm_step
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+def _stack_init(fn, key, n):
+    """vmap an init fn over n layer keys -> params stacked on axis 0."""
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _embed(cfg: ModelConfig, params, tokens):
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * np.float32(np.sqrt(cfg.d_model))
+    return partition.constrain_batch(x.astype(cfg.dtype))
+
+
+def _logits(cfg: ModelConfig, params, x):
+    x = partition.constrain_batch(x)
+    h = apply_norm(cfg.norm, x, params["final_norm"])
+    return (h @ params["lm_head"]).astype(F32)
+
+
+def _xent(logits, labels, mask=None):
+    """logits (B,S,V) f32, labels (B,S) -> mean NLL."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def _shift_loss(cfg, params, x, tokens):
+    # Keep the full S extent (a [:, :-1] slice would make the seq dim uneven
+    # under sequence-parallel sharding); mask the final position instead.
+    logits = _logits(cfg, params, x)              # (B,S,V)
+    labels = jnp.roll(tokens, -1, axis=1)
+    S = tokens.shape[1]
+    mask = jnp.broadcast_to((jnp.arange(S) < S - 1)[None, :].astype(F32),
+                            labels.shape)
+    return _xent(logits, labels, mask=mask)
+
+
+def _remat(fn):
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+# ---------------------------------------------------------------------------
+# generic transformer layer (GQA or MLA attention + MLP or MoE)
+# ---------------------------------------------------------------------------
+def _lm_layer_init(cfg: ModelConfig, use_moe: bool):
+    def init(key):
+        ka, kf, _ = jax.random.split(key, 3)
+        p = {"norm1": norm_init(cfg.d_model, cfg.dtype, bias=cfg.norm == "ln"),
+             "norm2": norm_init(cfg.d_model, cfg.dtype, bias=cfg.norm == "ln")}
+        p["attn"] = (blocks.mla_init(ka, cfg, cfg.dtype) if cfg.mla
+                     else blocks.gqa_init(ka, cfg, cfg.dtype))
+        if use_moe:
+            p["moe"] = moe_init(kf, cfg.d_model, cfg.moe, cfg.dtype)
+        else:
+            p["mlp"] = mlp_init(kf, cfg.d_model, cfg.d_ff, cfg.dtype,
+                                gated=cfg.mlp_gated, bias=cfg.mlp_bias)
+        return p
+    return init
+
+
+def _lm_layer_apply(cfg: ModelConfig, p, x):
+    x = partition.constrain_batch(x)
+    h = apply_norm(cfg.norm, x, p["norm1"])
+    if cfg.mla:
+        a = blocks.mla_apply(h, p["attn"], cfg)
+    else:
+        a = blocks.gqa_apply(h, p["attn"], cfg, causal=True)
+    x = x + a
+    h = apply_norm(cfg.norm, x, p["norm2"])
+    if "moe" in p:
+        f, aux = moe_apply(h, p["moe"], cfg.moe)
+        return x + f, load_balance_loss(aux)
+    return x + mlp_apply(h, p["mlp"], act=cfg.mlp_act), jnp.zeros((), F32)
+
+
+def _lm_layer_prefill(cfg, p, x, max_len):
+    """Like apply, but also emits the layer's decode cache."""
+    x = partition.constrain_batch(x)
+    h = apply_norm(cfg.norm, x, p["norm1"])
+    if cfg.mla:
+        B, S, _ = h.shape
+        a = blocks.mla_apply(h, p["attn"], cfg)
+        c_kv, k_rope = blocks._mla_latent(h, p["attn"], cfg)
+        cache = blocks.mla_init_cache(B, max_len, cfg, cfg.dtype)
+        # note: k_rope in the cache must be rope-rotated; redo the rotation
+        cos, sin = rope_for_seq(jnp.arange(S), cfg.mla.qk_rope, cfg.rope_theta)
+        kr = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+        cache = {
+            "c_kv": jax.lax.dynamic_update_slice_in_dim(
+                cache["c_kv"], c_kv.astype(cfg.dtype), 0, 1),
+            "k_rope": jax.lax.dynamic_update_slice_in_dim(
+                cache["k_rope"], kr.astype(cfg.dtype), 0, 1),
+        }
+    else:
+        a, cache = blocks.gqa_prefill_cache(h, p["attn"], cfg, max_len, cfg.dtype)
+    x = x + a
+    h = apply_norm(cfg.norm, x, p["norm2"])
+    if "moe" in p:
+        f, _ = moe_apply(h, p["moe"], cfg.moe)
+        x = x + f
+    else:
+        x = x + mlp_apply(h, p["mlp"], act=cfg.mlp_act)
+    return x, cache
+
+
+def _lm_layer_step(cfg, p, x1, cache, pos):
+    x1 = partition.constrain_batch(x1)
+    h = apply_norm(cfg.norm, x1, p["norm1"])
+    if cfg.mla:
+        a, cache = blocks.mla_step(h, cache, pos, p["attn"], cfg)
+    else:
+        a, cache = blocks.gqa_step(h, cache, pos, p["attn"], cfg)
+    x1 = x1 + a
+    h = apply_norm(cfg.norm, x1, p["norm2"])
+    if "moe" in p:
+        f, _ = moe_apply(h, p["moe"], cfg.moe)
+        x1 = x1 + f
+    else:
+        x1 = x1 + mlp_apply(h, p["mlp"], act=cfg.mlp_act)
+    return x1, cache
+
+
+def _lm_cache_init(cfg, batch, max_len):
+    if cfg.mla:
+        return blocks.mla_init_cache(batch, max_len, cfg, cfg.dtype)
+    return blocks.gqa_init_cache(batch, max_len, cfg, cfg.dtype)
+
+
+# ===========================================================================
+# family: lm (dense + MoE, GQA + MLA)
+# ===========================================================================
+def _lm_init(cfg: ModelConfig, key):
+    ke, kh, k0, kl, kn = jax.random.split(key, 5)
+    params = {
+        "embed": (jax.random.normal(ke, (cfg.vocab, cfg.d_model), F32) * 0.02
+                  ).astype(cfg.dtype),
+        "lm_head": (jax.random.normal(kh, (cfg.d_model, cfg.vocab), F32)
+                    / np.sqrt(cfg.d_model)).astype(cfg.dtype),
+        "final_norm": norm_init(cfg.d_model, cfg.dtype, bias=cfg.norm == "ln"),
+    }
+    n_scan = cfg.n_layers - cfg.first_dense
+    if cfg.first_dense:
+        params["head_layers"] = _stack_init(
+            _lm_layer_init(cfg, use_moe=False), k0, cfg.first_dense)
+    params["layers"] = _stack_init(
+        _lm_layer_init(cfg, use_moe=cfg.moe is not None), kl, n_scan)
+    return params
+
+
+def _lm_forward(cfg, params, tokens, remat=True):
+    x = _embed(cfg, params, tokens)
+    layer = functools.partial(_lm_layer_apply, cfg)
+    if remat:
+        layer = _remat(layer)
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = layer(lp, x)
+        return (x, aux + a), None
+
+    aux = jnp.zeros((), F32)
+    if cfg.first_dense:
+        (x, aux), _ = jax.lax.scan(body, (x, aux), params["head_layers"])
+    (x, aux), _ = jax.lax.scan(body, (x, aux), params["layers"])
+    return x, aux
+
+
+def _lm_train_loss(cfg, params, batch):
+    x, aux = _lm_forward(cfg, params, batch["tokens"])
+    loss = _shift_loss(cfg, params, x, batch["tokens"])
+    metrics = {"xent": loss, "moe_aux": aux}
+    if cfg.moe:
+        loss = loss + 0.01 * aux / cfg.n_layers
+    return loss, metrics
+
+
+def _lm_prefill(cfg, params, batch, max_len):
+    tokens = batch["tokens"]
+    x = _embed(cfg, params, tokens)
+
+    def body(x, lp):
+        x, cache = _lm_layer_prefill(cfg, lp, x, max_len)
+        return x, cache
+
+    caches = {}
+    if cfg.first_dense:
+        x, caches["head"] = jax.lax.scan(body, x, params["head_layers"])
+    x, caches["main"] = jax.lax.scan(body, x, params["layers"])
+    logits = _logits(cfg, params, x[:, -1:])
+    return logits[:, 0], caches
+
+
+def _lm_decode_step(cfg, params, token, cache, pos):
+    x = _embed(cfg, params, token)
+
+    def body(x, inp):
+        lp, lc = inp
+        x, nc = _lm_layer_step(cfg, lp, x, lc, pos)
+        return x, nc
+
+    new_cache = {}
+    if cfg.first_dense:
+        x, new_cache["head"] = jax.lax.scan(
+            body, x, (params["head_layers"], cache["head"]))
+    x, new_cache["main"] = jax.lax.scan(body, x, (params["layers"], cache["main"]))
+    logits = _logits(cfg, params, x)
+    return logits[:, 0], new_cache
+
+
+def _lm_init_decode_state(cfg, batch, max_len, extras=None):
+    def one(_):
+        return _lm_cache_init(cfg, batch, max_len)
+    cache = {"main": jax.vmap(one)(jnp.arange(cfg.n_layers - cfg.first_dense))}
+    if cfg.first_dense:
+        cache["head"] = jax.vmap(one)(jnp.arange(cfg.first_dense))
+    return cache
+
+
+# ===========================================================================
+# family: ssm (Mamba-2)
+# ===========================================================================
+def _ssm_layer_init(cfg):
+    def init(key):
+        return {"norm": norm_init(cfg.d_model, cfg.dtype),
+                "mixer": ssm_init(key, cfg.d_model, cfg.ssm, cfg.dtype)}
+    return init
+
+
+def _ssm_init(cfg, key):
+    ke, kh, kl = jax.random.split(key, 3)
+    return {
+        "embed": (jax.random.normal(ke, (cfg.vocab, cfg.d_model), F32) * 0.02
+                  ).astype(cfg.dtype),
+        "lm_head": (jax.random.normal(kh, (cfg.d_model, cfg.vocab), F32)
+                    / np.sqrt(cfg.d_model)).astype(cfg.dtype),
+        "final_norm": norm_init(cfg.d_model, cfg.dtype),
+        "layers": _stack_init(_ssm_layer_init(cfg), kl, cfg.n_layers),
+    }
+
+
+def _ssm_train_loss(cfg, params, batch):
+    tokens = batch["tokens"]
+    x = _embed(cfg, params, tokens)
+
+    def layer(lp, x):
+        x = partition.constrain_batch(x)
+        h = apply_norm(cfg.norm, x, lp["norm"])
+        y, _cache = ssm_apply(h, lp["mixer"], cfg.ssm, cfg.d_model)
+        return x + y
+
+    f = _remat(layer)
+
+    def body(x, lp):
+        return f(lp, x), None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    loss = _shift_loss(cfg, params, x, tokens)
+    return loss, {"xent": loss}
+
+
+def _ssm_prefill(cfg, params, batch, max_len):
+    tokens = batch["tokens"]
+    x = _embed(cfg, params, tokens)
+
+    def body(x, lp):
+        x = partition.constrain_batch(x)
+        h = apply_norm(cfg.norm, x, lp["norm"])
+        y, cache = ssm_apply(h, lp["mixer"], cfg.ssm, cfg.d_model)
+        return x + y, cache
+
+    x, caches = jax.lax.scan(body, x, params["layers"])
+    logits = _logits(cfg, params, x[:, -1:])
+    return logits[:, 0], caches
+
+
+def _ssm_decode_step(cfg, params, token, cache, pos):
+    x = _embed(cfg, params, token)
+
+    def body(x, inp):
+        lp, st, cv = inp
+        x = partition.constrain_batch(x)
+        h = apply_norm(cfg.norm, x, lp["norm"])
+        y, nc = ssm_step(h, {"state": st, "conv": cv}, lp["mixer"],
+                         cfg.ssm, cfg.d_model)
+        return x + y, (nc["state"], nc["conv"])
+
+    x, (states, convs) = jax.lax.scan(
+        body, x, (params["layers"], cache["state"], cache["conv"]))
+    logits = _logits(cfg, params, x)
+    return logits[:, 0], {"state": states, "conv": convs}
+
+
+def _ssm_init_decode_state(cfg, batch, max_len, extras=None):
+    def one(_):
+        return ssm_init_cache(batch, cfg.d_model, cfg.ssm, cfg.dtype)
+    c = jax.vmap(one)(jnp.arange(cfg.n_layers))
+    return {"state": c["state"], "conv": c["conv"]}
+
+
+# ===========================================================================
+# family: hybrid (RecurrentGemma: pattern of rec/rec/attn blocks)
+# ===========================================================================
+def _hyb_block_init(cfg, kind):
+    def init(key):
+        kt, kf = jax.random.split(key)
+        p = {"norm1": norm_init(cfg.d_model, cfg.dtype),
+             "norm2": norm_init(cfg.d_model, cfg.dtype)}
+        if kind == "rec":
+            p["rec"] = rglru_init(kt, cfg.d_model, cfg.rglru, cfg.dtype)
+        else:
+            p["attn"] = blocks.gqa_init(kt, cfg, cfg.dtype)
+        p["mlp"] = mlp_init(kf, cfg.d_model, cfg.d_ff, cfg.dtype,
+                            gated=cfg.mlp_gated, bias=cfg.mlp_bias)
+        return p
+    return init
+
+
+def _hyb_layout(cfg):
+    period = cfg.pattern
+    n_full = cfg.n_layers // len(period)
+    tail = tuple(period[: cfg.n_layers % len(period)])
+    return period, n_full, tail
+
+
+def _hyb_init(cfg, key):
+    period, n_full, tail = _hyb_layout(cfg)
+    ke, kh, kp, kt = jax.random.split(key, 4)
+    params = {
+        "embed": (jax.random.normal(ke, (cfg.vocab, cfg.d_model), F32) * 0.02
+                  ).astype(cfg.dtype),
+        "lm_head": (jax.random.normal(kh, (cfg.d_model, cfg.vocab), F32)
+                    / np.sqrt(cfg.d_model)).astype(cfg.dtype),
+        "final_norm": norm_init(cfg.d_model, cfg.dtype),
+    }
+
+    def period_init(k):
+        ks = jax.random.split(k, len(period))
+        return {f"b{i}": _hyb_block_init(cfg, kind)(ks[i])
+                for i, kind in enumerate(period)}
+
+    params["periods"] = _stack_init(period_init, kp, n_full)
+    params["tail"] = [
+        _hyb_block_init(cfg, kind)(jax.random.fold_in(kt, i))
+        for i, kind in enumerate(tail)]
+    return params
+
+
+def _hyb_block_apply(cfg, kind, p, x):
+    x = partition.constrain_batch(x)
+    h = apply_norm(cfg.norm, x, p["norm1"])
+    if kind == "rec":
+        y, _ = rglru_apply(h, p["rec"], cfg.rglru, cfg.d_model)
+    else:
+        y = blocks.gqa_apply(h, p["attn"], cfg, causal=True)
+    x = x + y
+    h = apply_norm(cfg.norm, x, p["norm2"])
+    return x + mlp_apply(h, p["mlp"], act=cfg.mlp_act)
+
+
+def _hyb_train_loss(cfg, params, batch):
+    period, n_full, tail = _hyb_layout(cfg)
+    tokens = batch["tokens"]
+    x = _embed(cfg, params, tokens)
+
+    def period_apply(pp, x):
+        for i, kind in enumerate(period):
+            x = _hyb_block_apply(cfg, kind, pp[f"b{i}"], x)
+        return x
+
+    f = _remat(period_apply)
+
+    def body(x, pp):
+        return f(pp, x), None
+
+    x, _ = jax.lax.scan(body, x, params["periods"])
+    for p, kind in zip(params["tail"], tail):
+        x = _hyb_block_apply(cfg, kind, p, x)
+    loss = _shift_loss(cfg, params, x, tokens)
+    return loss, {"xent": loss}
+
+
+def _hyb_block_cache(cfg, kind, batch, max_len):
+    if kind == "rec":
+        return rglru_init_cache(batch, cfg.d_model, cfg.rglru, cfg.dtype)
+    return blocks.gqa_init_cache(batch, max_len, cfg, cfg.dtype)
+
+
+def _hyb_block_step(cfg, kind, p, x1, cache, pos):
+    x1 = partition.constrain_batch(x1)
+    h = apply_norm(cfg.norm, x1, p["norm1"])
+    if kind == "rec":
+        y, cache = rglru_step(h, cache, p["rec"], cfg.rglru, cfg.d_model)
+    else:
+        y, cache = blocks.gqa_step(h, cache, pos, p["attn"], cfg)
+    x1 = x1 + y
+    h = apply_norm(cfg.norm, x1, p["norm2"])
+    return x1 + mlp_apply(h, p["mlp"], act=cfg.mlp_act), cache
+
+
+def _hyb_decode_step(cfg, params, token, cache, pos):
+    period, n_full, tail = _hyb_layout(cfg)
+    x = _embed(cfg, params, token)
+
+    def body(x, inp):
+        pp, pc = inp
+        ncs = {}
+        for i, kind in enumerate(period):
+            x, nc = _hyb_block_step(cfg, kind, pp[f"b{i}"], x, pc[f"b{i}"], pos)
+            ncs[f"b{i}"] = nc
+        return x, ncs
+
+    x, new_periods = jax.lax.scan(body, x, (params["periods"], cache["periods"]))
+    new_tail = []
+    for p, kind, c in zip(params["tail"], tail, cache["tail"]):
+        x, nc = _hyb_block_step(cfg, kind, p, x, c, pos)
+        new_tail.append(nc)
+    logits = _logits(cfg, params, x)
+    return logits[:, 0], {"periods": new_periods, "tail": new_tail}
+
+
+def _hyb_init_decode_state(cfg, batch, max_len, extras=None):
+    period, n_full, tail = _hyb_layout(cfg)
+
+    def one(_):
+        return {f"b{i}": _hyb_block_cache(cfg, kind, batch, max_len)
+                for i, kind in enumerate(period)}
+
+    return {"periods": jax.vmap(one)(jnp.arange(n_full)),
+            "tail": [_hyb_block_cache(cfg, kind, batch, max_len)
+                     for kind in tail]}
+
+
+def _hyb_prefill(cfg, params, batch, max_len):
+    # Serving prefill for hybrids: run block-by-block, capturing states.
+    period, n_full, tail = _hyb_layout(cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = _embed(cfg, params, tokens)
+
+    def period_prefill(pp, x):
+        caches = {}
+        for i, kind in enumerate(period):
+            p = pp[f"b{i}"]
+            h = apply_norm(cfg.norm, x, p["norm1"])
+            if kind == "rec":
+                y, cache = rglru_apply(h, p["rec"], cfg.rglru, cfg.d_model)
+            else:
+                y, cache = blocks.gqa_prefill_cache(h, p["attn"], cfg,
+                                                    max_len, cfg.dtype)
+            x = x + y
+            h = apply_norm(cfg.norm, x, p["norm2"])
+            x = x + mlp_apply(h, p["mlp"], act=cfg.mlp_act)
+            caches[f"b{i}"] = cache
+        return x, caches
+
+    x, period_caches = jax.lax.scan(
+        lambda x, pp: period_prefill(pp, x), x, params["periods"])
+    tail_caches = []
+    for p, kind in zip(params["tail"], tail):
+        h = apply_norm(cfg.norm, x, p["norm1"])
+        if kind == "rec":
+            y, cache = rglru_apply(h, p["rec"], cfg.rglru, cfg.d_model)
+        else:
+            y, cache = blocks.gqa_prefill_cache(h, p["attn"], cfg,
+                                                max_len, cfg.dtype)
+        x = x + y
+        h = apply_norm(cfg.norm, x, p["norm2"])
+        x = x + mlp_apply(h, p["mlp"], act=cfg.mlp_act)
+        tail_caches.append(cache)
+    logits = _logits(cfg, params, x[:, -1:])
+    return logits[:, 0], {"periods": period_caches, "tail": tail_caches}
+
+
+# ===========================================================================
+# family: encdec (Whisper backbone; conv frontend is a stub)
+# ===========================================================================
+def _enc_layer_init(cfg):
+    def init(key):
+        ka, kf = jax.random.split(key)
+        return {"norm1": norm_init(cfg.d_model, cfg.dtype, bias=True),
+                "norm2": norm_init(cfg.d_model, cfg.dtype, bias=True),
+                "attn": blocks.gqa_init(ka, cfg, cfg.dtype),
+                "mlp": mlp_init(kf, cfg.d_model, cfg.d_ff, cfg.dtype,
+                                gated=False, bias=True)}
+    return init
+
+
+def _dec_layer_init(cfg):
+    def init(key):
+        ka, kc, kf = jax.random.split(key, 3)
+        return {"norm1": norm_init(cfg.d_model, cfg.dtype, bias=True),
+                "norm_x": norm_init(cfg.d_model, cfg.dtype, bias=True),
+                "norm2": norm_init(cfg.d_model, cfg.dtype, bias=True),
+                "attn": blocks.gqa_init(ka, cfg, cfg.dtype),
+                "cross": blocks.cross_init(kc, cfg, cfg.dtype),
+                "mlp": mlp_init(kf, cfg.d_model, cfg.d_ff, cfg.dtype,
+                                gated=False, bias=True)}
+    return init
+
+
+def _sinusoid(S, D):
+    pos = np.arange(S)[:, None]
+    dim = np.arange(D // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * dim / D)
+    return jnp.asarray(np.concatenate([np.sin(ang), np.cos(ang)], -1), F32)
+
+
+def _encdec_init(cfg, key):
+    ke, kh, k1, k2 = jax.random.split(key, 4)
+    return {
+        "embed": (jax.random.normal(ke, (cfg.vocab, cfg.d_model), F32) * 0.02
+                  ).astype(cfg.dtype),
+        "lm_head": (jax.random.normal(kh, (cfg.d_model, cfg.vocab), F32)
+                    / np.sqrt(cfg.d_model)).astype(cfg.dtype),
+        "final_norm": norm_init(cfg.d_model, cfg.dtype, bias=True),
+        "enc_final_norm": norm_init(cfg.d_model, cfg.dtype, bias=True),
+        "enc_layers": _stack_init(_enc_layer_init(cfg), k1, cfg.enc_layers),
+        "dec_layers": _stack_init(_dec_layer_init(cfg), k2, cfg.n_layers),
+    }
+
+
+def _encode(cfg, params, frames):
+    """frames: (B, enc_seq, D) — stub frontend output (pre-computed embeds)."""
+    S = frames.shape[1]
+    x = frames.astype(cfg.dtype) + _sinusoid(S, cfg.d_model).astype(cfg.dtype)
+
+    def layer(lp, x):
+        x = partition.constrain_batch(x)
+        h = apply_norm("ln", x, lp["norm1"])
+        a = blocks.gqa_apply(h, lp["attn"], cfg, causal=False, use_rope=False)
+        x = x + a
+        h = apply_norm("ln", x, lp["norm2"])
+        return x + mlp_apply(h, lp["mlp"], act="gelu")
+
+    f = _remat(layer)
+    x, _ = jax.lax.scan(lambda x, lp: (f(lp, x), None), x, params["enc_layers"])
+    return apply_norm("ln", x, params["enc_final_norm"])
+
+
+def _encdec_train_loss(cfg, params, batch):
+    mem = _encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    S = tokens.shape[1]
+    x = _embed(cfg, params, tokens) + _sinusoid(S, cfg.d_model).astype(cfg.dtype)
+
+    def layer(lp, x):
+        x = partition.constrain_batch(x)
+        h = apply_norm("ln", x, lp["norm1"])
+        x = x + blocks.gqa_apply(h, lp["attn"], cfg, causal=True, use_rope=False)
+        h = apply_norm("ln", x, lp["norm_x"])
+        kv = blocks.cross_kv(mem, lp["cross"], cfg)
+        x = x + blocks.cross_apply(h, kv, lp["cross"], cfg)
+        h = apply_norm("ln", x, lp["norm2"])
+        return x + mlp_apply(h, lp["mlp"], act="gelu")
+
+    f = _remat(layer)
+    x, _ = jax.lax.scan(lambda x, lp: (f(lp, x), None), x, params["dec_layers"])
+    loss = _shift_loss(cfg, params, x, tokens)
+    return loss, {"xent": loss}
+
+
+def _encdec_prefill(cfg, params, batch, max_len):
+    mem = _encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = _embed(cfg, params, tokens) + _sinusoid(S, cfg.d_model).astype(cfg.dtype)
+
+    def layer(x, lp):
+        x = partition.constrain_batch(x)
+        h = apply_norm("ln", x, lp["norm1"])
+        a, cache = blocks.gqa_prefill_cache(h, lp["attn"], cfg, max_len, cfg.dtype)
+        x = x + a
+        h = apply_norm("ln", x, lp["norm_x"])
+        kv = blocks.cross_kv(mem, lp["cross"], cfg)
+        x = x + blocks.cross_apply(h, kv, lp["cross"], cfg)
+        h = apply_norm("ln", x, lp["norm2"])
+        x = x + mlp_apply(h, lp["mlp"], act="gelu")
+        return x, {"self": cache, "cross_k": kv[0], "cross_v": kv[1]}
+
+    x, caches = jax.lax.scan(layer, x, params["dec_layers"])
+    logits = _logits(cfg, params, x[:, -1:])
+    return logits[:, 0], caches
+
+
+def _encdec_decode_step(cfg, params, token, cache, pos):
+    slots = cache["self"]["k"].shape[2]  # (L, B, slots, Hk, dh)
+    pe = _sinusoid(slots, cfg.d_model)   # static table, gathered at pos
+    x = _embed(cfg, params, token) + pe[pos][None, None, :].astype(cfg.dtype)
+
+    def layer(x, inp):
+        lp, lc = inp
+        x = partition.constrain_batch(x)
+        h = apply_norm("ln", x, lp["norm1"])
+        a, sc = blocks.gqa_step(h, lc["self"], pos, lp["attn"], cfg)
+        x = x + a
+        h = apply_norm("ln", x, lp["norm_x"])
+        x = x + blocks.cross_apply(h, (lc["cross_k"], lc["cross_v"]),
+                                   lp["cross"], cfg)
+        h = apply_norm("ln", x, lp["norm2"])
+        x = x + mlp_apply(h, lp["mlp"], act="gelu")
+        return x, {"self": sc, "cross_k": lc["cross_k"], "cross_v": lc["cross_v"]}
+
+    x, new_cache = jax.lax.scan(layer, x, (params["dec_layers"], cache))
+    logits = _logits(cfg, params, x)
+    return logits[:, 0], new_cache
+
+
+def _encdec_init_decode_state(cfg, batch, max_len, extras=None):
+    Hk, dh = cfg.n_kv_heads, cfg.head_dim_()
+
+    def one(_):
+        return {"self": blocks.gqa_init_cache(batch, max_len, cfg, cfg.dtype),
+                "cross_k": jnp.zeros((batch, cfg.enc_seq, Hk, dh), cfg.dtype),
+                "cross_v": jnp.zeros((batch, cfg.enc_seq, Hk, dh), cfg.dtype)}
+
+    return jax.vmap(one)(jnp.arange(cfg.n_layers))
+
+
+# ===========================================================================
+# family: vlm (Llama-3.2-Vision backbone: gated cross-attn every N layers)
+# ===========================================================================
+def _vlm_period_init(cfg):
+    n_self = cfg.cross_every - 1
+
+    def init(key):
+        ks, kc, kf = jax.random.split(key, 3)
+        p = {"self": _stack_init(_lm_layer_init(cfg, use_moe=False), ks, n_self)}
+        cross = {"norm1": norm_init(cfg.d_model, cfg.dtype),
+                 "norm2": norm_init(cfg.d_model, cfg.dtype),
+                 "attn": blocks.cross_init(kc, cfg, cfg.dtype, gated=True),
+                 "mlp": mlp_init(kf, cfg.d_model, cfg.d_ff, cfg.dtype,
+                                 gated=True)}
+        p["cross"] = cross
+        return p
+    return init
+
+
+def _vlm_init(cfg, key):
+    ke, kh, kp = jax.random.split(key, 3)
+    n_periods = cfg.n_layers // cfg.cross_every
+    return {
+        "embed": (jax.random.normal(ke, (cfg.vocab, cfg.d_model), F32) * 0.02
+                  ).astype(cfg.dtype),
+        "lm_head": (jax.random.normal(kh, (cfg.d_model, cfg.vocab), F32)
+                    / np.sqrt(cfg.d_model)).astype(cfg.dtype),
+        "final_norm": norm_init(cfg.d_model, cfg.dtype),
+        "periods": _stack_init(_vlm_period_init(cfg), kp, n_periods),
+    }
+
+
+def _vlm_cross_apply(cfg, p, x, img):
+    x = partition.constrain_batch(x)
+    h = apply_norm(cfg.norm, x, p["norm1"])
+    kv = blocks.cross_kv(img, p["attn"], cfg)
+    a = blocks.cross_apply(h, kv, p["attn"], cfg)
+    x = x + jnp.tanh(p["attn"]["gate_attn"]).astype(x.dtype) * a
+    h = apply_norm(cfg.norm, x, p["norm2"])
+    f = mlp_apply(h, p["mlp"], act=cfg.mlp_act)
+    return x + jnp.tanh(p["attn"]["gate_mlp"]).astype(x.dtype) * f
+
+
+def _vlm_train_loss(cfg, params, batch):
+    tokens = batch["tokens"]
+    img = batch["image_embeds"].astype(cfg.dtype)
+    x = _embed(cfg, params, tokens)
+    self_layer = _remat(functools.partial(_lm_layer_apply, cfg))
+
+    def period(pp, x):
+        def body(x, lp):
+            x, _ = self_layer(lp, x)
+            return x, None
+        x, _ = jax.lax.scan(body, x, pp["self"])
+        return _vlm_cross_apply(cfg, pp["cross"], x, img)
+
+    f = _remat(period)
+    x, _ = jax.lax.scan(lambda x, pp: (f(pp, x), None), x, params["periods"])
+    loss = _shift_loss(cfg, params, x, tokens)
+    return loss, {"xent": loss}
+
+
+def _vlm_prefill(cfg, params, batch, max_len):
+    tokens = batch["tokens"]
+    img = batch["image_embeds"].astype(cfg.dtype)
+    x = _embed(cfg, params, tokens)
+
+    def period(x, pp):
+        def body(x, lp):
+            return _lm_layer_prefill(cfg, lp, x, max_len)
+        x, self_caches = jax.lax.scan(body, x, pp["self"])
+        kv = blocks.cross_kv(img, pp["cross"]["attn"], cfg)
+        x = _vlm_cross_apply(cfg, pp["cross"], x, img)
+        return x, {"self": self_caches, "cross_k": kv[0], "cross_v": kv[1]}
+
+    x, caches = jax.lax.scan(period, x, params["periods"])
+    logits = _logits(cfg, params, x[:, -1:])
+    return logits[:, 0], caches
+
+
+def _vlm_decode_step(cfg, params, token, cache, pos):
+    x = _embed(cfg, params, token)
+
+    def period(x, inp):
+        pp, pc = inp
+
+        def body(carry, lp_lc):
+            x = carry
+            lp, lc = lp_lc
+            x, nc = _lm_layer_step(cfg, lp, x, lc, pos)
+            return x, nc
+
+        x, self_caches = jax.lax.scan(body, x, (pp["self"], pc["self"]))
+        h = apply_norm(cfg.norm, x, pp["cross"]["norm1"])
+        a = blocks.cross_apply(h, (pc["cross_k"], pc["cross_v"]),
+                               pp["cross"]["attn"], cfg)
+        x = x + jnp.tanh(pp["cross"]["attn"]["gate_attn"]).astype(x.dtype) * a
+        h = apply_norm(cfg.norm, x, pp["cross"]["norm2"])
+        f = mlp_apply(h, pp["cross"]["mlp"], act=cfg.mlp_act)
+        x = x + jnp.tanh(pp["cross"]["attn"]["gate_mlp"]).astype(x.dtype) * f
+        return x, {"self": self_caches, "cross_k": pc["cross_k"],
+                   "cross_v": pc["cross_v"]}
+
+    x, new_cache = jax.lax.scan(period, x, (params["periods"], cache))
+    logits = _logits(cfg, params, x)
+    return logits[:, 0], new_cache
+
+
+def _vlm_init_decode_state(cfg, batch, max_len, extras=None):
+    Hk, dh = cfg.n_kv_heads, cfg.head_dim_()
+    n_periods = cfg.n_layers // cfg.cross_every
+    n_self = cfg.cross_every - 1
+
+    def one(_):
+        def one_self(_):
+            return blocks.gqa_init_cache(batch, max_len, cfg, cfg.dtype)
+        return {"self": jax.vmap(one_self)(jnp.arange(n_self)),
+                "cross_k": jnp.zeros((batch, cfg.n_image_tokens, Hk, dh),
+                                     cfg.dtype),
+                "cross_v": jnp.zeros((batch, cfg.n_image_tokens, Hk, dh),
+                                     cfg.dtype)}
+
+    return jax.vmap(one)(jnp.arange(n_periods))
+
+
+# ===========================================================================
+# dispatch
+# ===========================================================================
+_FAMS = {
+    "lm": (_lm_init, _lm_train_loss, _lm_prefill, _lm_decode_step,
+           _lm_init_decode_state),
+    "ssm": (_ssm_init, _ssm_train_loss, _ssm_prefill, _ssm_decode_step,
+            _ssm_init_decode_state),
+    "hybrid": (_hyb_init, _hyb_train_loss, _hyb_prefill, _hyb_decode_step,
+               _hyb_init_decode_state),
+    "encdec": (_encdec_init, _encdec_train_loss, _encdec_prefill,
+               _encdec_decode_step, _encdec_init_decode_state),
+    "vlm": (_vlm_init, _vlm_train_loss, _vlm_prefill, _vlm_decode_step,
+            _vlm_init_decode_state),
+}
+
+
+def init_params(cfg: ModelConfig, key):
+    return _FAMS[cfg.family][0](cfg, key)
+
+
+def train_loss(cfg: ModelConfig, params, batch):
+    return _FAMS[cfg.family][1](cfg, params, batch)
+
+
+def prefill(cfg: ModelConfig, params, batch, max_len):
+    return _FAMS[cfg.family][2](cfg, params, batch, max_len)
+
+
+def decode_step(cfg: ModelConfig, params, token, cache, pos):
+    return _FAMS[cfg.family][3](cfg, params, token, cache, pos)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, extras=None):
+    return _FAMS[cfg.family][4](cfg, batch, max_len, extras)

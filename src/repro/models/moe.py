@@ -1,0 +1,155 @@
+"""Mixture-of-Experts FFN with group-local capacity dispatch (GShard-style).
+
+Exact top-k routing with a static per-group capacity.  Tokens are processed
+in G groups aligned with the data-parallel shards, so *every* data-dependent
+step (sort, rank, scatter) is group-local and GSPMD keeps it on-shard:
+
+  1. (B, S, d) -> (G, Tl, d); router + top-k per token,
+  2. rank each assignment within (group, expert) via a group-local sort,
+  3. scatter-ADD kept tokens into a dense (G, E, cap, d) buffer
+     (dropped assignments are zero-valued writes -> collision-safe),
+  4. relayout to (E, G*cap, d): with G sharded over the data axes and E over
+     "model", this resharding IS the expert-parallel all-to-all,
+  5. batched expert FFN, inverse relayout, gather + gate-weighted combine.
+
+Static shapes, no global sorts, no O(T*E*C) one-hots.  Supports shared
+(always-on) experts as in DeepSeek-V2.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import partition
+from .layers import dense_init, mlp_init, mlp_apply
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int               # per-expert FFN hidden size
+    n_shared: int = 0           # DeepSeek shared experts
+    d_shared: int = 0           # hidden size of the shared-expert MLP
+    capacity_factor: float = 1.25
+    router_scale: float = 1.0   # routed_scaling_factor (DeepSeek)
+    normalize_gates: bool = True
+
+    def capacity(self, tokens_per_group: int) -> int:
+        cap = int(np.ceil(self.top_k * tokens_per_group / self.n_experts
+                          * self.capacity_factor))
+        return max(8, -(-cap // 8) * 8)
+
+
+def moe_init(key, d_model, cfg: MoEConfig, dtype):
+    ks = jax.random.split(key, 5)
+    E, dff = cfg.n_experts, cfg.d_expert
+    s_in = 1.0 / np.sqrt(d_model)
+    s_ff = 1.0 / np.sqrt(dff)
+    p = {
+        "router": dense_init(ks[0], d_model, E, F32),  # router kept in f32
+        "w_gate": (jax.random.normal(ks[1], (E, d_model, dff), F32) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d_model, dff), F32) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, dff, d_model), F32) * s_ff).astype(dtype),
+    }
+    if cfg.n_shared:
+        p["shared"] = mlp_init(ks[4], d_model, cfg.d_shared, dtype, gated=True)
+    return p
+
+
+def _group_ranks(flat_e, E):
+    """flat_e: (G, A) expert ids -> rank of each assignment within its
+    (group, expert) queue; group-local (vmappable/shardable) ops only."""
+    G, A = flat_e.shape
+    order = jnp.argsort(flat_e, axis=1, stable=True)            # (G, A)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    ones = jnp.ones_like(flat_e)
+    counts = jax.vmap(
+        lambda fe, on: jax.ops.segment_sum(on, fe, num_segments=E)
+    )(flat_e, ones)                                              # (G, E)
+    starts = (jnp.cumsum(counts, axis=1) - counts).astype(jnp.int32)
+    ranks_sorted = (jnp.arange(A, dtype=jnp.int32)[None]
+                    - jnp.take_along_axis(starts, sorted_e, axis=1))
+    inv = jnp.argsort(order, axis=1)                             # inverse perm
+    return jnp.take_along_axis(ranks_sorted, inv, axis=1)        # (G, A)
+
+
+def moe_apply(x, p, cfg: MoEConfig):
+    """x: (B, S, d) -> (B, S, d); also returns aux router stats."""
+    B, S, d = x.shape
+    T = B * S
+    k = cfg.top_k
+    E = cfg.n_experts
+    G = partition.dp_groups()
+    if T % G != 0:
+        G = 1
+    Tl = T // G
+    cap = cfg.capacity(Tl)
+    xg = x.reshape(G, Tl, d)
+
+    logits = xg.astype(F32) @ p["router"]                # (G, Tl, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)                # (G, Tl, k)
+    if cfg.normalize_gates:
+        gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    gates = gates * cfg.router_scale
+
+    A = Tl * k
+    flat_e = eidx.reshape(G, A).astype(jnp.int32)
+    tok_of = jnp.repeat(jnp.arange(Tl, dtype=jnp.int32), k)  # same per group
+    ranks = _group_ranks(flat_e, E)
+    keep = ranks < cap
+    slot_c = jnp.minimum(ranks, cap - 1)
+
+    # --- dispatch: group-local scatter-add into (G, E, cap, d) ---
+    vals = xg[:, tok_of] * keep[..., None].astype(x.dtype)   # (G, A, d)
+    buf = jax.vmap(
+        lambda fe, sc, v: jnp.zeros((E, cap, d), x.dtype).at[fe, sc].add(v)
+    )(flat_e, slot_c, vals)
+    buf = partition.constrain(buf, "__dp__", None, None, None)
+
+    # --- all-to-all: (G:data, E, cap, d) -> (E:model, G*cap:data, d) ---
+    he = jnp.moveaxis(buf, 0, 1).reshape(E, G * cap, d)
+    he = partition.constrain(he, "model", "__dp__", None)
+
+    # --- batched expert FFN (SwiGLU) ---
+    g = jnp.einsum("ecd,edf->ecf", he, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", he, p["w_up"])
+    a = jax.nn.silu(g.astype(F32)).astype(x.dtype) * u
+    y = jnp.einsum("ecf,efd->ecd", a, p["w_down"])           # (E, G*cap, d)
+    y = partition.constrain(y, "model", "__dp__", None)
+
+    # --- inverse all-to-all + combine ---
+    yg = jnp.moveaxis(y.reshape(E, G, cap, d), 1, 0)          # (G, E, cap, d)
+    yg = partition.constrain(yg, "__dp__", None, None, None)
+    per_asn = jax.vmap(lambda yy, fe, sc: yy[fe, sc])(yg, flat_e, slot_c)
+    per_asn = per_asn * (gates.reshape(G, A, 1)
+                         * keep[..., None]).astype(x.dtype)
+    out = jax.vmap(
+        lambda v: jax.ops.segment_sum(v, tok_of, num_segments=Tl)
+    )(per_asn)                                                # (G, Tl, d)
+    out = out.reshape(B, S, d)
+
+    if cfg.n_shared:
+        out = out + mlp_apply(x, p["shared"])
+
+    counts_all = jax.ops.segment_sum(
+        jnp.ones((G * A,), F32), flat_e.reshape(-1), num_segments=E)
+    aux = {
+        # load-balance stats (Switch-style aux loss ingredients)
+        "router_frac": counts_all / (T * k),
+        "router_prob": jnp.mean(probs, axis=(0, 1)),
+        "dropped_frac": 1.0 - jnp.mean(keep.astype(F32)),
+    }
+    return out, aux
+
+
+def load_balance_loss(aux) -> jnp.ndarray:
+    """Switch-Transformer load-balance loss: E * sum(frac_e * prob_e)."""
+    E = aux["router_frac"].shape[0]
+    return E * jnp.sum(aux["router_frac"] * aux["router_prob"])

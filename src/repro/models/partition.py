@@ -1,0 +1,81 @@
+"""Activation sharding hints (GSPMD needs anchors, not just param shardings).
+
+Without constraints, the embedding gather creates a sharding conflict
+(tokens want batch-sharding, the table wants d_model-sharding) that the
+partitioner can resolve by *replicating the batch* — catastrophic for
+activation memory.  `constrain_batch` pins the canonical layout at block
+boundaries:
+
+  - batch over the data axes (DP/FSDP),
+  - optionally the sequence dim over the model axis (Megatron-style
+    sequence parallelism) — this shards the per-layer residuals that
+    scan+remat must keep alive, the largest train-time activation term;
+    GSPMD auto-inserts the all-gather before attention/MLP and the
+    reduce-scatter after, exactly like hand-written SP.
+
+The launch layer calls `set_activation_axes(...)` before tracing; model code
+stays mesh-agnostic (the hints are no-ops when unset).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_DP_AXES: Optional[Tuple[str, ...]] = None
+_TP_AXIS: Optional[str] = None
+_TP_SIZE: int = 1
+_DP_SIZE: int = 1
+_SEQ_PARALLEL: bool = False
+
+
+def set_activation_axes(dp_axes, tp_axis: Optional[str] = None,
+                        tp_size: int = 1, seq_parallel: bool = False,
+                        dp_size: int = 1):
+    """dp_axes: data axes for the batch dim (None disables all hints)."""
+    global _DP_AXES, _TP_AXIS, _TP_SIZE, _SEQ_PARALLEL, _DP_SIZE
+    _DP_AXES = tuple(dp_axes) if dp_axes else None
+    _TP_AXIS = tp_axis
+    _TP_SIZE = tp_size
+    _DP_SIZE = dp_size
+    _SEQ_PARALLEL = seq_parallel and tp_axis is not None
+
+
+def get_activation_axes():
+    return _DP_AXES
+
+
+def dp_groups() -> int:
+    """Number of data-parallel shards (MoE dispatch group count)."""
+    return _DP_SIZE if _DP_AXES is not None else 1
+
+
+def constrain_batch(x):
+    """Pin (B, S, ...) activations: batch->data [, seq->model if SP]."""
+    if _DP_AXES is None:
+        return x
+    if (_SEQ_PARALLEL and x.ndim >= 3 and x.shape[1] > 1
+            and x.shape[1] % _TP_SIZE == 0):
+        spec = P(_DP_AXES, _TP_AXIS, *([None] * (x.ndim - 2)))
+    else:
+        spec = P(_DP_AXES, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain(x, *spec_entries):
+    """Explicit spec; '__dp__' resolves to the data axes."""
+    if _DP_AXES is None:
+        return x
+    spec = P(*[(_DP_AXES if s == "__dp__" else s) for s in spec_entries])
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_moe(buf):
+    """(E, cap, d) dispatch buffer: experts over model (EP), slots over data."""
+    if _DP_AXES is None:
+        return buf
+    E, cap = buf.shape[0], buf.shape[1]
+    e_ax = _TP_AXIS if (_TP_AXIS and E % _TP_SIZE == 0) else None
+    c_ax = _DP_AXES if cap % max(_DP_SIZE, 1) == 0 else None
+    return jax.lax.with_sharding_constraint(buf, P(e_ax, c_ax, None))

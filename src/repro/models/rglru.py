@@ -1,0 +1,106 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Real-Gated Linear Recurrent Unit:
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)  (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Prefill uses an associative scan over the sequence; decode is a single gated
+state update (O(1) per token) — with the bounded local-attention window this
+is why recurrentgemma runs the `long_500k` cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import causal_conv1d, causal_conv1d_step, dense_init
+
+F32 = jnp.float32
+_C = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    lru_width: int = 0          # 0 -> d_model
+    conv_width: int = 4
+
+    def width(self, d_model):
+        return self.lru_width or d_model
+
+
+def rglru_init(key, d_model, cfg: RGLRUConfig, dtype):
+    ks = jax.random.split(key, 6)
+    w = cfg.width(d_model)
+    # Lambda init so that a^c in [0.9, 0.999] roughly (Griffin appendix)
+    u = jax.random.uniform(ks[0], (w,), F32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1(-ln u / c)
+    return {
+        "in_x": dense_init(ks[1], d_model, w, dtype),
+        "in_y": dense_init(ks[2], d_model, w, dtype),
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv_width, w), F32)
+                   / np.sqrt(cfg.conv_width)).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "W_a": dense_init(ks[4], w, w, F32),
+        "b_a": jnp.zeros((w,), F32),
+        "W_x": dense_init(ks[5], w, w, F32),
+        "b_x": jnp.zeros((w,), F32),
+        "Lambda": lam,
+        "out": dense_init(jax.random.fold_in(key, 7), w, d_model, dtype),
+    }
+
+
+def _gates(xc, p):
+    xf = xc.astype(F32)
+    r = jax.nn.sigmoid(xf @ p["W_a"] + p["b_a"])
+    i = jax.nn.sigmoid(xf @ p["W_x"] + p["b_x"])
+    log_a = -_C * jax.nn.softplus(p["Lambda"]) * r        # log decay, < 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * i * xf
+
+
+def rglru_apply(x, p, cfg: RGLRUConfig, d_model):
+    """Prefill/train forward. x: (B, S, D) -> (B, S, D), decode cache."""
+    S = x.shape[1]
+    xb = x @ p["in_x"]
+    yb = x @ p["in_y"]
+    xc = causal_conv1d(xb, p["conv_w"], p["conv_b"])
+    a, b = _gates(xc, p)                                   # (B,S,w) f32
+
+    # h_t = a_t h_{t-1} + b_t  via associative scan along S
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    out = (h.astype(x.dtype) * jax.nn.gelu(yb.astype(F32)).astype(x.dtype))
+    cache = {"state": h[:, -1],
+             "conv": xb[:, S - (cfg.conv_width - 1):]}
+    return out @ p["out"], cache
+
+
+def rglru_init_cache(batch, d_model, cfg: RGLRUConfig, dtype):
+    w = cfg.width(d_model)
+    return {
+        "state": jnp.zeros((batch, w), F32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    }
+
+
+def rglru_step(x1, cache, p, cfg: RGLRUConfig, d_model):
+    """Decode one token. x1: (B, 1, D). O(1) per token."""
+    xb = x1 @ p["in_x"]
+    yb = x1 @ p["in_y"]
+    xc, conv_state = causal_conv1d_step(xb, cache["conv"],
+                                        p["conv_w"], p["conv_b"])
+    a, b = _gates(xc[:, 0], p)                             # (B,w)
+    h = a * cache["state"] + b
+    out = (h[:, None].astype(x1.dtype)
+           * jax.nn.gelu(yb.astype(F32)).astype(x1.dtype))
+    return out @ p["out"], {"state": h, "conv": conv_state}

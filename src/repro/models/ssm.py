@@ -1,0 +1,217 @@
+"""Mamba-2 (SSD — state-space duality) block, arXiv:2405.21060.
+
+Training/prefill uses the chunked block decomposition: quadratic attention-like
+compute inside fixed-size chunks + a sequential inter-chunk state scan, giving
+O(S * chunk) work per head with an O(1)-per-token state.  Decode is a single
+state update — this is why mamba2 runs the `long_500k` cell that dense
+attention archs skip.
+
+Recurrence per head (h: (N, hd) state, per token t):
+    h_t = exp(a_t) * h_{t-1} + B_t (x_t * dt_t)^T
+    y_t = C_t @ h_t + D * x_t
+with a_t = A * dt_t (A < 0 scalar per head), B/C shared across heads per group.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import (causal_conv1d, causal_conv1d_step, dense_init, rms_norm)
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    conv_width: int = 4
+    chunk: int = 128
+
+    def d_inner(self, d_model):
+        return self.expand * d_model
+
+    def n_heads(self, d_model):
+        return self.d_inner(d_model) // self.head_dim
+
+
+def ssm_init(key, d_model, cfg: SSMConfig, dtype):
+    ks = jax.random.split(key, 4)
+    d_in = cfg.d_inner(d_model)
+    H = cfg.n_heads(d_model)
+    conv_ch = d_in + 2 * cfg.n_groups * cfg.d_state
+    # in_proj emits [z, xBC, dt]
+    d_proj = d_in + conv_ch + H
+    p = {
+        "in_proj": dense_init(ks[0], d_model, d_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_ch), F32)
+                   / np.sqrt(cfg.conv_width)).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(F32)),
+        "D": jnp.ones((H,), F32),
+        "dt_bias": jnp.full((H,), np.log(np.expm1(0.01)), F32),
+        "norm_w": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(ks[2], d_in, d_model, dtype),
+    }
+    return p
+
+
+def _split_proj(proj, d_in, conv_ch):
+    z = proj[..., :d_in]
+    xBC = proj[..., d_in:d_in + conv_ch]
+    dt = proj[..., d_in + conv_ch:]
+    return z, xBC, dt
+
+
+def _split_xbc(xBC, d_in, G, N):
+    x = xBC[..., :d_in]
+    Bm = xBC[..., d_in:d_in + G * N]
+    Cm = xBC[..., d_in + G * N:]
+    return x, Bm, Cm
+
+
+def _gated_norm(y, z, w):
+    return rms_norm(y * jax.nn.silu(z.astype(F32)).astype(y.dtype), {"w": w})
+
+
+def ssd_chunked(xdt, a, Bm, Cm, chunk):
+    """Chunked SSD scan.
+
+    xdt: (B, S, H, hd) inputs pre-multiplied by dt
+    a:   (B, S, H) per-step log decay (negative)
+    Bm, Cm: (B, S, G, N); heads are grouped H = G * (H//G)
+    Returns y (B, S, H, hd) and the final state (B, H, N, hd).
+    """
+    B_, S, H, hd = xdt.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    hpg = H // G
+    assert S % chunk == 0
+    nc = S // chunk
+    xc = xdt.reshape(B_, nc, chunk, H, hd).astype(F32)
+    ac = a.reshape(B_, nc, chunk, H).astype(F32)
+    Bc = Bm.reshape(B_, nc, chunk, G, N).astype(F32)
+    Cc = Cm.reshape(B_, nc, chunk, G, N).astype(F32)
+
+    cum = jnp.cumsum(ac, axis=2)                       # (B,nc,Q,H)
+    total = cum[:, :, -1, :]                           # (B,nc,H)
+
+    # ---- intra-chunk (quadratic within the chunk) ----
+    # scores[i,j] = (C_i . B_j) * exp(cum_i - cum_j) for j <= i
+    CB = jnp.einsum("bcqgn,bckgn->bcgqk", Cc, Bc)      # (B,nc,G,Q,Q)
+    dec = cum[..., None, :] - cum[:, :, None]          # cum_i - cum_j: (B,nc,Q[i],Q[j],H)? build explicitly
+    # build (B,nc,Q,Q,H): cum_i - cum_j
+    dec = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(dec), 0.0)
+    # expand CB over heads-per-group and apply decay
+    scores = CB[:, :, :, None, :, :]                   # (B,nc,G,1,Q,Q)
+    scores = jnp.broadcast_to(scores, (B_, nc, G, hpg, chunk, chunk))
+    Lh = jnp.moveaxis(L, -1, 2).reshape(B_, nc, G, hpg, chunk, chunk)
+    y_intra = jnp.einsum("bcghqk,bckghd->bcqghd",
+                         scores * Lh,
+                         xc.reshape(B_, nc, chunk, G, hpg, hd))
+
+    # ---- chunk-final local states ----
+    # S_local = sum_j exp(total - cum_j) * B_j x_j^T   -> (B,nc,H,N,hd)
+    w = jnp.exp(total[:, :, None, :] - cum)            # (B,nc,Q,H)
+    xw = xc * w[..., None]
+    S_local = jnp.einsum("bcqgn,bcqghd->bcghnd",
+                         Bc, xw.reshape(B_, nc, chunk, G, hpg, hd))
+
+    # ---- inter-chunk state scan ----
+    def body(S_prev, inp):
+        S_loc, tot = inp                                # (B,G,hpg,N,hd), (B,H)
+        toth = tot.reshape(B_, G, hpg)[..., None, None]
+        S_new = S_prev * jnp.exp(toth) + S_loc
+        return S_new, S_prev
+
+    S0 = jnp.zeros((B_, G, hpg, N, hd), F32)
+    S_final, S_ins = jax.lax.scan(
+        body, S0, (jnp.moveaxis(S_local, 1, 0), jnp.moveaxis(total, 1, 0)))
+    S_ins = jnp.moveaxis(S_ins, 0, 1)                   # state entering chunk c
+
+    # ---- inter-chunk contribution: y_i += C_i exp(cum_i) S_in ----
+    ci = jnp.exp(cum)                                   # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcqgn,bcghnd->bcqghd", Cc, S_ins)
+    y_inter = y_inter * ci.reshape(B_, nc, chunk, G, hpg)[..., None]
+
+    y = (y_intra + y_inter).reshape(B_, S, H, hd)
+    return y, S_final.reshape(B_, H, N, hd)
+
+
+def ssm_apply(x, p, cfg: SSMConfig, d_model):
+    """Training/prefill forward. x: (B, S, D) -> (B, S, D), final state."""
+    B, S, D = x.shape
+    d_in = cfg.d_inner(d_model)
+    H = cfg.n_heads(d_model)
+    G, N, hd = cfg.n_groups, cfg.d_state, cfg.head_dim
+    conv_ch = d_in + 2 * G * N
+
+    proj = x @ p["in_proj"]
+    z, xBC_pre, dt = _split_proj(proj, d_in, conv_ch)
+    xBC = causal_conv1d(xBC_pre, p["conv_w"], p["conv_b"])
+    xBC = jax.nn.silu(xBC.astype(F32)).astype(x.dtype)
+    xs, Bm, Cm = _split_xbc(xBC, d_in, G, N)
+
+    dtv = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])      # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                   # (H,)
+    a = A * dtv
+    xh = xs.reshape(B, S, H, hd)
+    xdt = xh.astype(F32) * dtv[..., None]
+    y, state = ssd_chunked(xdt, a, Bm.reshape(B, S, G, N),
+                           Cm.reshape(B, S, G, N), cfg.chunk)
+    y = y + p["D"][None, None, :, None] * xh.astype(F32)
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = _gated_norm(y, z, p["norm_w"])
+    # decode handoff: the conv state is the last (K-1) *pre-conv* inputs
+    cache = {"state": state, "conv": xBC_pre[:, S - (cfg.conv_width - 1):]}
+    return y @ p["out_proj"], cache
+
+
+def ssm_init_cache(batch, d_model, cfg: SSMConfig, dtype):
+    H = cfg.n_heads(d_model)
+    conv_ch = cfg.d_inner(d_model) + 2 * cfg.n_groups * cfg.d_state
+    return {
+        "state": jnp.zeros((batch, H, cfg.d_state, cfg.head_dim), F32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+    }
+
+
+def ssm_step(x1, cache, p, cfg: SSMConfig, d_model):
+    """Decode one token. x1: (B, 1, D) -> (B, 1, D), new cache. O(1) in S."""
+    B = x1.shape[0]
+    d_in = cfg.d_inner(d_model)
+    H = cfg.n_heads(d_model)
+    G, N, hd = cfg.n_groups, cfg.d_state, cfg.head_dim
+    conv_ch = d_in + 2 * G * N
+
+    proj = x1 @ p["in_proj"]
+    z, xBC, dt = _split_proj(proj, d_in, conv_ch)
+    xBC, conv_state = causal_conv1d_step(xBC, cache["conv"],
+                                         p["conv_w"], p["conv_b"])
+    xBC = jax.nn.silu(xBC.astype(F32)).astype(x1.dtype)
+    xs, Bm, Cm = _split_xbc(xBC, d_in, G, N)
+
+    dtv = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])[:, 0]   # (B,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(A * dtv)                                      # (B,H)
+    xh = xs.reshape(B, H, hd).astype(F32)
+    Bmg = Bm.reshape(B, G, N).astype(F32)
+    Cmg = Cm.reshape(B, G, N).astype(F32)
+    hpg = H // G
+
+    inp = jnp.einsum("bgn,bghd->bghnd", Bmg,
+                     (xh * dtv[..., None]).reshape(B, G, hpg, hd))
+    state = cache["state"].reshape(B, G, hpg, N, hd)
+    state = state * decay.reshape(B, G, hpg)[..., None, None] + inp
+    y = jnp.einsum("bgn,bghnd->bghd", Cmg, state).reshape(B, H, hd)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(B, 1, d_in).astype(x1.dtype)
+    y = _gated_norm(y, z, p["norm_w"])
+    out = y @ p["out_proj"]
+    return out, {"state": state.reshape(B, H, N, hd), "conv": conv_state}

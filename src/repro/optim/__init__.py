@@ -1,0 +1,10 @@
+from .adamw import adamw_init, adamw_update
+from .qmuon import qmuon_init, qmuon_update
+from .compress import (compressed_psum, cross_pod_grad_sync, dequantize_int8,
+                       ef_compress, ef_init, quantize_int8)
+from .schedule import constant, warmup_cosine
+
+__all__ = ["adamw_init", "adamw_update", "qmuon_init", "qmuon_update",
+           "compressed_psum", "cross_pod_grad_sync", "quantize_int8",
+           "dequantize_int8", "ef_compress", "ef_init",
+           "warmup_cosine", "constant"]

@@ -1,0 +1,39 @@
+"""AdamW with f32 moments over (possibly bf16) params. Pure-functional."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+    return {"m": zeros,
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1):
+    step = state["step"] + 1
+    t = step.astype(F32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, p):
+        g = g.astype(F32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        new_p = p.astype(F32) - lr * (u + weight_decay * p.astype(F32))
+        return new_p.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}

@@ -1,0 +1,5 @@
+from .cluster import (ClusterMonitor, ElasticPlan, PreemptionHandler,
+                      plan_elastic_mesh)
+
+__all__ = ["ClusterMonitor", "PreemptionHandler", "ElasticPlan",
+           "plan_elastic_mesh"]

@@ -1,0 +1,128 @@
+"""Cluster runtime: heartbeats, straggler detection, elastic re-mesh plans,
+preemption handling.
+
+This is the control-plane logic a 1000-node job needs; it is deliberately
+free of jax.distributed so it can be unit-tested in-process (the transport —
+GCS bucket, etcd, or the TPU coordination service — plugs in behind
+`record_heartbeat`).  The *data plane* consequences (rebuild the mesh, replay
+the data stream, restore the checkpoint) are all pure functions.
+
+Policies implemented:
+  - straggler detection by step-progress watermark (a host > `lag_steps`
+    behind the median is flagged; flagged twice in a row -> evict);
+  - fail-stop detection by heartbeat age;
+  - elastic re-mesh: keep the model axis intact (TP groups must be whole),
+    shrink the data(-parallel) axis to the largest full multiple that the
+    surviving hosts can populate, and re-balance data shards.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class HostState:
+    last_beat: float = 0.0
+    step: int = 0
+    flags: int = 0
+
+
+class ClusterMonitor:
+    """Tracks per-host heartbeats {host_id -> (time, step)}."""
+
+    def __init__(self, n_hosts: int, beat_timeout: float = 60.0,
+                 lag_steps: int = 50):
+        self.n_hosts = n_hosts
+        self.beat_timeout = beat_timeout
+        self.lag_steps = lag_steps
+        self.hosts: Dict[int, HostState] = {
+            h: HostState() for h in range(n_hosts)}
+
+    def record_heartbeat(self, host: int, step: int, now: Optional[float] = None):
+        now = time.monotonic() if now is None else now
+        st = self.hosts[host]
+        st.last_beat = now
+        st.step = step
+
+    def dead_hosts(self, now: Optional[float] = None) -> List[int]:
+        now = time.monotonic() if now is None else now
+        return [h for h, st in self.hosts.items()
+                if now - st.last_beat > self.beat_timeout]
+
+    def stragglers(self) -> List[int]:
+        steps = sorted(st.step for st in self.hosts.values())
+        median = steps[len(steps) // 2]
+        out = []
+        for h, st in self.hosts.items():
+            if median - st.step > self.lag_steps:
+                st.flags += 1
+                if st.flags >= 2:
+                    out.append(h)
+            else:
+                st.flags = 0
+        return out
+
+    def healthy_hosts(self, now: Optional[float] = None) -> List[int]:
+        bad = set(self.dead_hosts(now)) | set(self.stragglers())
+        return [h for h in range(self.n_hosts) if h not in bad]
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: tuple
+    axis_names: tuple
+    active_hosts: tuple
+    dropped_hosts: tuple
+    restore_required: bool
+
+
+def plan_elastic_mesh(alive_hosts: List[int], *, chips_per_host: int,
+                      model_parallel: int, pod_size: int = 0) -> ElasticPlan:
+    """Largest (data, model) mesh the surviving hosts can populate.
+
+    The model (TP) axis is never shrunk — a partial TP group cannot hold a
+    whole parameter shard set; instead whole TP groups are dropped from the
+    data axis.  If `pod_size` > 0 and more than one full pod survives, a
+    (pod, data, model) mesh is produced.
+    """
+    alive = sorted(alive_hosts)
+    total_chips = len(alive) * chips_per_host
+    data = total_chips // model_parallel
+    if data == 0:
+        raise RuntimeError("not enough chips for one model-parallel group")
+    used_chips = data * model_parallel
+    used_hosts = used_chips // chips_per_host
+    active = tuple(alive[:used_hosts])
+    dropped = tuple(h for h in alive if h not in active)
+    if pod_size and used_chips >= 2 * pod_size * model_parallel:
+        pods = used_chips // (pod_size * model_parallel)
+        return ElasticPlan((pods, pod_size, model_parallel),
+                           ("pod", "data", "model"),
+                           active, dropped, restore_required=True)
+    return ElasticPlan((data, model_parallel), ("data", "model"),
+                       active, dropped, restore_required=True)
+
+
+class PreemptionHandler:
+    """SIGTERM-aware graceful shutdown: flips a flag the train loop polls."""
+
+    def __init__(self, install: bool = True):
+        self._requested = False
+        if install:
+            try:
+                signal.signal(signal.SIGTERM, self._on_signal)
+            except ValueError:
+                pass  # not on the main thread (tests)
+
+    def _on_signal(self, signum, frame):
+        self._requested = True
+
+    def trigger(self):  # for tests
+        self._requested = True
+
+    @property
+    def should_stop(self) -> bool:
+        return self._requested

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# Make src/ importable regardless of how pytest is invoked.  NOTE: no
+# XLA_FLAGS here — tests must see the real single CPU device (the 512-device
+# override belongs exclusively to launch/dryrun.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

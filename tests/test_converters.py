@@ -1,0 +1,110 @@
+"""Input/output converter properties (block-FP <-> packed FP)."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SINGLE, encode_hub, encode_ieee
+from repro.core.converters import (input_convert_hub, input_convert_ieee,
+                                   output_convert_hub, output_convert_ieee)
+
+N = jnp.asarray(26, jnp.int64)
+F = 24  # N - 2
+
+VAL = st.floats(min_value=2.0 ** -20, max_value=2.0 ** 20,
+                allow_nan=False, allow_infinity=False)
+SVAL = st.tuples(st.sampled_from([-1.0, 1.0]), VAL).map(lambda t: t[0] * t[1])
+
+
+def _blockfp_value(sig, m_exp, hub):
+    """Decode an aligned significand + shared exponent back to float."""
+    sig = np.asarray(sig, np.float64)
+    if hub:
+        sig = sig + 0.5
+    return sig / 2.0 ** F * 2.0 ** (np.asarray(m_exp) - SINGLE.bias)
+
+
+@settings(max_examples=200, deadline=None)
+@given(SVAL, SVAL)
+def test_input_converter_ieee_accuracy(x, y):
+    xp = encode_ieee(np.float64(x), SINGLE)
+    yp = encode_ieee(np.float64(y), SINGLE)
+    xf, yf, me = input_convert_ieee(xp, yp, SINGLE, N, rounding="rne")
+    scale = 2.0 ** (float(me) - SINGLE.bias)
+    # block-FP alignment error <= 1 internal LSB + input rounding
+    tol = scale * 2.0 ** -(F - 1) + abs(x) * 2.0 ** -23
+    assert abs(_blockfp_value(xf, me, False) - x) <= tol
+    assert abs(_blockfp_value(yf, me, False) - y) <= tol
+
+
+@settings(max_examples=200, deadline=None)
+@given(SVAL, SVAL)
+def test_input_converter_hub_accuracy(x, y):
+    xp = encode_hub(np.float64(x), SINGLE)
+    yp = encode_hub(np.float64(y), SINGLE)
+    xf, yf, me = input_convert_hub(xp, yp, SINGLE, N)
+    scale = 2.0 ** (float(me) - SINGLE.bias)
+    tol = scale * 2.0 ** -(F - 1) + abs(x) * 2.0 ** -23
+    assert abs(_blockfp_value(xf, me, True) - x) <= tol
+    assert abs(_blockfp_value(yf, me, True) - y) <= tol
+
+
+def test_input_converter_shared_exponent_is_max():
+    xp = encode_ieee(np.float64(8.0), SINGLE)
+    yp = encode_ieee(np.float64(0.25), SINGLE)
+    _, _, me = input_convert_ieee(xp, yp, SINGLE, N)
+    assert int(me) - SINGLE.bias == 3
+
+
+def test_input_converter_far_exponents_flush_small():
+    xp = encode_ieee(np.float64(2.0 ** 30), SINGLE)
+    yp = encode_ieee(np.float64(2.0 ** -10), SINGLE)
+    xf, yf, me = input_convert_ieee(xp, yp, SINGLE, N)
+    assert int(yf) == 0  # shifted past the word width
+
+
+def test_identity_detection_makes_one_nearly_exact():
+    one = encode_hub(np.float64(1.0), SINGLE)
+    xf_det, _, me = input_convert_hub(one, one, SINGLE, N,
+                                      detect_identity=True)
+    # compare against HUBBasic (biased extension, no detection — Fig. 10)
+    xf_no, _, _ = input_convert_hub(one, one, SINGLE, N,
+                                    unbiased=False, detect_identity=False)
+    err_det = abs(_blockfp_value(xf_det, me, True) - 1.0)
+    err_no = abs(_blockfp_value(xf_no, me, True) - 1.0)
+    assert err_det < err_no
+    assert err_det <= 2.0 ** -(F + 1)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(min_value=-2 ** 27 + 1, max_value=2 ** 27 - 1),
+       st.integers(min_value=100, max_value=150))
+def test_output_converter_ieee_rne(sig, m_exp):
+    v = _blockfp_value(sig, m_exp, False)
+    packed = output_convert_ieee(jnp.asarray(sig, jnp.int64),
+                                 jnp.asarray(m_exp, jnp.int64), SINGLE, N)
+    from repro.core import decode_ieee
+    got = float(decode_ieee(packed, SINGLE))
+    if v == 0.0:
+        assert got == 0.0
+    else:
+        assert abs(got - v) <= abs(v) * 2.0 ** -24 * (1 + 1e-9)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(min_value=-2 ** 27 + 1, max_value=2 ** 27 - 1),
+       st.integers(min_value=100, max_value=150))
+def test_output_converter_hub_truncation_is_rn(sig, m_exp):
+    v = _blockfp_value(sig, m_exp, True)  # true value incl. internal ILSB
+    packed = output_convert_hub(jnp.asarray(sig, jnp.int64),
+                                jnp.asarray(m_exp, jnp.int64), SINGLE, N,
+                                unbiased=False)
+    from repro.core import decode_hub
+    got = float(decode_hub(packed, SINGLE))
+    assert abs(got - v) <= abs(v) * 2.0 ** -24 * (1 + 1e-9)
+
+
+def test_output_converter_underflow_flush():
+    packed = output_convert_ieee(jnp.asarray(3, jnp.int64),
+                                 jnp.asarray(2, jnp.int64), SINGLE, N)
+    from repro.core import decode_ieee
+    assert float(decode_ieee(packed, SINGLE)) == 0.0

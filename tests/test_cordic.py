@@ -1,0 +1,90 @@
+"""Fixed-point CORDIC core: vectoring, rotation, sigma reuse, gain."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cordic
+
+F = 24  # fraction bits (N=26 -> F=N-2)
+IT = 24
+W = jnp.asarray(28, jnp.int64)
+
+
+def fix(v):
+    return jnp.asarray(np.rint(np.asarray(v) * 2.0 ** F), jnp.int64)
+
+
+def unfix(v):
+    return np.asarray(v, np.float64) / 2.0 ** F
+
+
+COORD = st.floats(min_value=-1.9, max_value=1.9).filter(
+    lambda v: abs(v) > 1e-4)
+
+
+@settings(max_examples=100, deadline=None)
+@given(COORD, COORD, st.booleans())
+def test_vectoring_computes_hypot(x, y, hub):
+    it = jnp.asarray(IT, jnp.int64)
+    xr, yr, flip, sig = cordic.vectoring(fix(x), fix(y), it, hub)
+    xr, yr = cordic.apply_gain(xr, yr, it, W, hub)
+    r = unfix(xr)
+    assert abs(r - np.hypot(x, y)) < 2e-6
+    assert abs(unfix(yr)) < 4e-6
+
+
+@settings(max_examples=100, deadline=None)
+@given(COORD, COORD, COORD, COORD, st.booleans())
+def test_sigma_reuse_is_exact_same_rotation(x1, y1, x2, y2, hub):
+    """Z-datapath elimination: the replayed rotation equals the float
+    rotation by angle atan2 computed in vectoring (paper Sec. 3.2)."""
+    it = jnp.asarray(IT, jnp.int64)
+    _, _, flip, sig = cordic.vectoring(fix(x1), fix(y1), it, hub)
+    xr, yr = cordic.rotation(fix(x2), fix(y2), flip, sig, it, hub)
+    xr, yr = cordic.apply_gain(xr, yr, it, W, hub)
+    r = np.hypot(x1, y1)
+    c, s = x1 / r, y1 / r
+    # the angle quantization of vectoring scales with 1/|r1| (the leading
+    # pair's fixed-point LSB is a larger *relative* perturbation when the
+    # pair is small), and its effect scales with |v2|
+    tol = 4e-6 * (1.0 + 0.05 / r) * max(1.0, np.hypot(x2, y2))
+    assert abs(unfix(xr) - (c * x2 + s * y2)) < tol
+    assert abs(unfix(yr) - (-s * x2 + c * y2)) < tol
+
+
+@settings(max_examples=60, deadline=None)
+@given(COORD, COORD, st.booleans())
+def test_rotation_preserves_norm(x, y, hub):
+    it = jnp.asarray(IT, jnp.int64)
+    xr, yr, flip, sig = cordic.vectoring(fix(x), fix(y), it, hub)
+    xr, yr = cordic.apply_gain(xr, yr, it, W, hub)
+    n0 = np.hypot(x, y)
+    n1 = np.hypot(unfix(xr), unfix(yr))
+    assert abs(n1 - n0) / n0 < 1e-5
+
+
+def test_gain_table():
+    assert cordic.cordic_gain(0) == 1.0
+    assert abs(cordic.cordic_gain(24) - 1.6467602581210656) < 1e-12
+    # K(n) increases and converges
+    assert cordic.cordic_gain(40) > cordic.cordic_gain(10)
+    assert abs(cordic.cordic_gain(40) - cordic.cordic_gain(30)) < 1e-15
+
+
+def test_fixmul_matches_exact():
+    rng = np.random.default_rng(0)
+    v = jnp.asarray(rng.integers(-2 ** 27, 2 ** 27, 100), jnp.int64)
+    p = jnp.asarray(40, jnp.int64)
+    comp = jnp.asarray(int(0.607252935 * 2 ** 40), jnp.int64)
+    got = np.asarray(cordic.fixmul(v, comp, p, round_nearest=False))
+    exact = (np.asarray(v, object) * int(comp)) >> 40
+    assert np.max(np.abs(got - np.asarray(exact, np.int64))) <= 1
+
+
+def test_hub_negate_by_inversion():
+    """~x as a HUB value is exactly -x (the ILSB absorbs the +1)."""
+    x = np.array([5, -7, 123456, 0], np.int64)
+    real = x + 0.5
+    neg_stored = ~x
+    assert np.all((neg_stored + 0.5) == -real)

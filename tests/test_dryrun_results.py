@@ -1,0 +1,45 @@
+"""Validate the committed dry-run artifact (deliverable e evidence)."""
+import json
+import os
+
+import pytest
+
+PATH = os.path.join(os.path.dirname(__file__), "..", "dryrun_results.json")
+
+
+@pytest.fixture(scope="module")
+def results():
+    if not os.path.exists(PATH):
+        pytest.skip("dryrun_results.json not present (run launch.dryrun --all)")
+    with open(PATH) as f:
+        return json.load(f)
+
+
+def test_all_base_cells_compiled(results):
+    from repro.configs import applicable_cells
+    for arch, shape in applicable_cells():
+        for mesh in ("16x16", "2x16x16"):
+            key = f"{arch}|{shape}|{mesh}|base"
+            assert key in results, f"missing {key}"
+            assert results[key].get("ok"), f"{key}: {results[key].get('error')}"
+
+
+def test_collectives_present_on_all_train_cells(results):
+    for key, rec in results.items():
+        if not rec.get("ok") or rec["tag"] != "base":
+            continue
+        if rec["shape"].startswith("train"):
+            assert rec.get("collectives", {}).get("total", 0) > 0, key
+
+
+def test_perf_iterations_improved_memory(results):
+    """The §Perf tags must show the recorded improvements."""
+    base = results["deepseek-v2-236b|train_4k|16x16|base"]
+    opt = results.get("deepseek-v2-236b|train_4k|16x16|sp_mb8")
+    if opt and opt.get("ok"):
+        assert opt["bytes_per_device"] < 0.35 * base["bytes_per_device"]
+    b2 = results["mamba2-780m|train_4k|16x16|base"]
+    z1 = results.get("mamba2-780m|train_4k|16x16|dp_z1")
+    if z1 and z1.get("ok"):
+        assert z1["bytes_per_device"] < 16 * 2 ** 30      # fits HBM
+        assert z1["collectives"]["total"] < 0.25 * b2["collectives"]["total"]

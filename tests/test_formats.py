@@ -1,0 +1,79 @@
+"""Codec properties: packed IEEE-like and HUB formats."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (HALF, SINGLE, DOUBLE, decode_hub, decode_ieee,
+                        encode_hub, encode_ieee)
+
+FINITE = st.floats(min_value=2.0 ** -60, max_value=2.0 ** 60,
+                   allow_nan=False, allow_infinity=False)
+SIGNED = st.tuples(st.sampled_from([-1.0, 1.0]), FINITE).map(
+    lambda t: t[0] * t[1])
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(SIGNED, min_size=1, max_size=32))
+def test_ieee_roundtrip_error_bound(vals):
+    x = np.asarray(vals)
+    y = np.asarray(decode_ieee(encode_ieee(x, SINGLE), SINGLE))
+    rel = np.abs(y - x) / np.abs(x)
+    assert np.all(rel <= 2.0 ** -24)  # RNE half-ulp bound
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(SIGNED, min_size=1, max_size=32))
+def test_hub_roundtrip_error_bound(vals):
+    """Paper Sec. 4: HUB and RNE share the same worst-case bound."""
+    x = np.asarray(vals)
+    y = np.asarray(decode_hub(encode_hub(x, SINGLE), SINGLE))
+    rel = np.abs(y - x) / np.abs(x)
+    assert np.all(rel <= 2.0 ** -24)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(SIGNED, min_size=1, max_size=32))
+def test_hub_vs_ieee_complementary_error(vals):
+    """|e_hub| + |e_ieee| == half-ulp of the value (paper Sec. 4)."""
+    x = np.asarray(vals)
+    yi = np.asarray(decode_ieee(encode_ieee(x, SINGLE), SINGLE))
+    yh = np.asarray(decode_hub(encode_hub(x, SINGLE), SINGLE))
+    _, e = np.frexp(np.abs(x))
+    ulp_half = np.ldexp(2.0 ** -24, e - 1 + 1) / 2  # 2^-25 * 2^exp(1.x)
+    tol = np.ldexp(1.0, e - 1 - 24)  # half-ulp in absolute terms
+    s = np.abs(yi - x) + np.abs(yh - x)
+    # ties can make both errors land on the same side; allow <=
+    assert np.all(s <= tol * (1 + 1e-12))
+
+
+def test_zero_and_sign():
+    for enc, dec in ((encode_ieee, decode_ieee), (encode_hub, decode_hub)):
+        p = enc(np.array([0.0, -0.0, 1.0, -1.0]), SINGLE)
+        v = np.asarray(dec(p, SINGLE))
+        assert v[0] == 0.0 and v[1] == 0.0
+        assert v[2] > 0 and v[3] < 0
+
+
+def test_hub_one_is_not_exact():
+    """HUB cannot represent exact 1.0 (ILSB) — motivates identity detection."""
+    v = float(decode_hub(encode_hub(np.array(1.0), SINGLE), SINGLE))
+    assert v != 1.0
+    assert abs(v - 1.0) <= 2.0 ** -24
+
+
+@pytest.mark.parametrize("fmt", [HALF, SINGLE, DOUBLE])
+def test_formats_pack_unpack(fmt):
+    x = np.array([1.5, -2.25, 3.0e2, -1.0e-3])
+    y = np.asarray(decode_ieee(encode_ieee(x, fmt), fmt))
+    assert np.allclose(y, x, rtol=2.0 ** -fmt.man_bits)
+
+
+def test_saturation_and_flush():
+    # beyond range: saturate (no inf), tiny: flush to zero
+    big = np.array([1e300])
+    tiny = np.array([1e-300])
+    for enc, dec in ((encode_ieee, decode_ieee), (encode_hub, decode_hub)):
+        vb = np.asarray(dec(enc(big, SINGLE), SINGLE))
+        vt = np.asarray(dec(enc(tiny, SINGLE), SINGLE))
+        assert np.isfinite(vb).all()
+        assert vt[0] == 0.0

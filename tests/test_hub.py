@@ -1,0 +1,43 @@
+"""HUB numerics-primitive layer properties (hypothesis)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hub_quantize, hub_error_bound
+
+VALS = st.floats(min_value=1e-30, max_value=1e30,
+                 allow_nan=False, allow_infinity=False)
+
+
+@settings(max_examples=300, deadline=None)
+@given(VALS, st.sampled_from([4, 8, 10, 16, 23]))
+def test_hub_quantize_error_bound(v, m):
+    q = float(hub_quantize(np.float64(v), m))
+    assert abs(q - v) / v <= hub_error_bound(m) * (1 + 1e-12)
+
+
+@settings(max_examples=200, deadline=None)
+@given(VALS)
+def test_hub_quantize_idempotent(v):
+    q1 = float(hub_quantize(np.float64(v), 10))
+    q2 = float(hub_quantize(np.float64(q1), 10))
+    assert q1 == q2
+
+
+@settings(max_examples=200, deadline=None)
+@given(VALS, st.sampled_from([8, 16]))
+def test_hub_quantize_sign_symmetry(v, m):
+    assert float(hub_quantize(np.float64(-v), m)) == \
+        -float(hub_quantize(np.float64(v), m))
+
+
+def test_hub_values_are_odd_grid_points():
+    """HUB values have ILSB 1: mantissa is an odd multiple of 2^-(m+1)."""
+    rng = np.random.default_rng(0)
+    v = rng.uniform(1.0, 2.0, 100)
+    q = np.asarray(hub_quantize(v, 8))
+    k = np.rint((q - 1.0) * 2.0 ** 9)
+    assert np.all(k % 2 == 1)
+
+
+def test_zero_passthrough():
+    assert float(hub_quantize(np.float64(0.0), 8)) == 0.0

@@ -1,0 +1,110 @@
+"""Pallas CORDIC kernels vs the pure-jnp oracle: exact-equality sweeps."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import cordic as core_cordic
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def fix_rows(B, L, F=24):
+    v = RNG.uniform(-1.9, 1.9, size=(2, B, L))
+    return (np.rint(v * 2.0 ** F).astype(np.int32), v)
+
+
+@pytest.mark.parametrize("B", [1, 7, 8, 33])
+@pytest.mark.parametrize("L", [1, 5, 128, 300])
+@pytest.mark.parametrize("hub", [False, True])
+def test_rotate_rows_kernel_matches_ref(B, L, hub):
+    (X, _) = fix_rows(B, L + 1)
+    x, y = jnp.asarray(X[0]), jnp.asarray(X[1])
+    xr, yr = ops.givens_rotate_rows_fixed(x, y, iters=24, hub=hub)
+    xl, yl, fl, sg = ref.vectoring_ref(x[:, 0], y[:, 0], iters=24, hub=hub)
+    xo, yo = ref.rotation_ref(x[:, 1:], y[:, 1:], fl[:, None], sg[:, None],
+                              iters=24, hub=hub)
+    ex = np.concatenate([np.asarray(xl)[:, None], np.asarray(xo)], axis=1)
+    ey = np.concatenate([np.asarray(yl)[:, None], np.asarray(yo)], axis=1)
+    np.testing.assert_array_equal(np.asarray(xr), ex)
+    np.testing.assert_array_equal(np.asarray(yr), ey)
+
+
+@pytest.mark.parametrize("iters", [8, 16, 24, 28])
+@pytest.mark.parametrize("hub", [False, True])
+def test_vectoring_kernel_matches_ref_iters_sweep(iters, hub):
+    (X, _) = fix_rows(64, 1)
+    x, y = jnp.asarray(X[0, :, 0]), jnp.asarray(X[1, :, 0])
+    xr, yr, fl, sg = ops.vectoring_fixed(x, y, iters=iters, hub=hub)
+    ex, ey, efl, esg = ref.vectoring_ref(x, y, iters=iters, hub=hub)
+    for got, exp in ((xr, ex), (yr, ey), (fl, efl), (sg, esg)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+@pytest.mark.parametrize("hub", [False, True])
+def test_kernel_vs_int64_core_within_gain_rounding(hub):
+    """int32 kernel (Q30 gain) vs int64 core (Q46 gain): <= 2 LSB apart."""
+    (X, _) = fix_rows(32, 8)
+    x, y = jnp.asarray(X[0]), jnp.asarray(X[1])
+    it = jnp.asarray(24, jnp.int64)
+    w = jnp.asarray(28, jnp.int64)
+    xr32, yr32 = ops.givens_rotate_rows_fixed(x, y, iters=24, hub=hub)
+    xl, yl, fl, sg = core_cordic.vectoring(
+        x[:, 0].astype(jnp.int64), y[:, 0].astype(jnp.int64), it, hub)
+    xo, yo = core_cordic.rotation(
+        x[:, 1:].astype(jnp.int64), y[:, 1:].astype(jnp.int64),
+        fl[:, None], sg[:, None], it, hub)
+    xl, yl = core_cordic.apply_gain(xl, yl, it, w, hub)
+    xo, yo = core_cordic.apply_gain(xo, yo, it, w, hub)
+    ex = np.concatenate([np.asarray(xl)[:, None], np.asarray(xo)], 1)
+    ey = np.concatenate([np.asarray(yl)[:, None], np.asarray(yo)], 1)
+    assert np.max(np.abs(np.asarray(xr32, np.int64) - ex)) <= 2
+    assert np.max(np.abs(np.asarray(yr32, np.int64) - ey)) <= 2
+
+
+def test_kernel_numerics_float_reference():
+    (X, v) = fix_rows(16, 16)
+    x, y = jnp.asarray(X[0]), jnp.asarray(X[1])
+    xr, yr = ops.givens_rotate_rows_fixed(x, y, iters=24, hub=True)
+    r = np.hypot(v[0, :, 0], v[1, :, 0])
+    c, s = v[0, :, 0] / r, v[1, :, 0] / r
+    ex = c[:, None] * v[0, :, 1:] + s[:, None] * v[1, :, 1:]
+    got = np.asarray(xr[:, 1:], np.float64) / 2 ** 24
+    np.testing.assert_allclose(got, ex, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(xr[:, 0], np.float64) / 2 ** 24,
+                               r, atol=2e-6)
+
+
+def test_gain_constant_q30():
+    from repro.kernels.cordic_givens import comp_q30
+    for it in (8, 16, 24):
+        exact = 2.0 ** 30 / core_cordic.cordic_gain(it)
+        assert abs(comp_q30(it) - exact) <= 0.5
+
+
+@pytest.mark.parametrize("hub", [False, True])
+def test_fused_kernel_bit_equals_separate(hub):
+    """§Perf C1: the fused single-pass kernel is bit-identical."""
+    from repro.kernels.ops import givens_rotate_rows_fused
+    (X, _) = fix_rows(24, 96)
+    x, y = jnp.asarray(X[0]), jnp.asarray(X[1])
+    a = ops.givens_rotate_rows_fixed(x, y, iters=24, hub=hub)
+    b = givens_rotate_rows_fused(x, y, iters=24, hub=hub)
+    for u, v in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(u), np.asarray(v))
+
+
+@pytest.mark.parametrize("tile_l", [128, 256])
+def test_rotation_tile_width_invariance(tile_l):
+    """§Perf C2: tile width is a pure performance knob — results identical."""
+    from repro.kernels import cordic_givens as k
+    (X, _) = fix_rows(8, 256)
+    x, y = jnp.asarray(X[0]), jnp.asarray(X[1])
+    flip = jnp.zeros((8, 1), jnp.int32)
+    sig = jnp.full((8, 1), 0x155555, jnp.int32)
+    base = k.rotation_call(x, y, flip, sig, iters=22, hub=True,
+                           interpret=True, tile_l=128)
+    got = k.rotation_call(x, y, flip, sig, iters=22, hub=True,
+                          interpret=True, tile_l=tile_l)
+    for u, v in zip(base, got):
+        np.testing.assert_array_equal(np.asarray(u), np.asarray(v))

@@ -1,0 +1,156 @@
+"""Per-architecture smoke tests (reduced configs) + layer unit tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduce_config
+from repro.models import (decode_step, init_decode_state, init_params,
+                          prefill, train_loss)
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def make_batch(cfg):
+    batch = {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            KEY, (B, cfg.enc_seq, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(
+            KEY, (B, cfg.n_image_tokens, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke(arch):
+    """One train step + prefill + decode on the reduced config (assignment)."""
+    cfg = reduce_config(get_config(arch))
+    params = init_params(cfg, KEY)
+    batch = make_batch(cfg)
+
+    loss, metrics = jax.jit(lambda p, b: train_loss(cfg, p, b))(params, batch)
+    assert np.isfinite(float(loss)), arch
+    assert float(loss) > 0
+
+    logits, cache = jax.jit(lambda p, b: prefill(cfg, p, b, S + 8))(params, batch)
+    assert logits.shape == (B, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    logits2, cache2 = jax.jit(
+        lambda p, t, c: decode_step(cfg, p, t, c, S))(params, tok, cache)
+    assert logits2.shape == (B, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits2, np.float32)))
+
+    # decode from a fresh zero state (the dry-run serve path)
+    st = init_decode_state(cfg, B, S + 8)
+    logits3, _ = jax.jit(
+        lambda p, t, c: decode_step(cfg, p, t, c, 0))(params, tok, st)
+    assert np.all(np.isfinite(np.asarray(logits3, np.float32)))
+
+
+def test_full_configs_match_assignment():
+    """Spot-check the exact assigned hyper-parameters."""
+    c = get_config("deepseek-v2-236b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.vocab) == (60, 5120, 128, 102400)
+    assert c.moe.n_experts == 160 and c.moe.top_k == 6 and c.moe.n_shared == 2
+    assert c.mla.kv_lora == 512
+    c = get_config("command-r-35b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (40, 8192, 64, 8, 22528, 256000)
+    c = get_config("mamba2-780m")
+    assert (c.n_layers, c.d_model, c.vocab) == (48, 1536, 50280)
+    assert c.ssm.d_state == 128 and c.subquadratic
+    c = get_config("recurrentgemma-2b")
+    assert c.pattern == ("rec", "rec", "attn") and c.window == 2048
+    c = get_config("llama-3.2-vision-90b")
+    assert c.n_layers == 100 and c.cross_every == 5
+    c = get_config("whisper-medium")
+    assert c.enc_layers == 24 and c.n_layers == 24 and c.vocab == 51865
+
+
+def test_param_counts_sane():
+    approx = {
+        "deepseek-v2-236b": 236e9, "phi3.5-moe-42b-a6.6b": 42e9,
+        "command-r-35b": 35e9, "starcoder2-7b": 7e9, "qwen3-8b": 8e9,
+        "stablelm-1.6b": 1.6e9, "mamba2-780m": 0.78e9,
+        "recurrentgemma-2b": 2.7e9, "llama-3.2-vision-90b": 90e9,
+        "whisper-medium": 0.76e9,
+    }
+    for arch, target in approx.items():
+        n = get_config(arch).param_count()
+        assert 0.55 * target < n < 1.6 * target, (arch, n, target)
+
+
+def test_chunked_attention_matches_dense():
+    from repro.models.layers import attention, chunked_attention
+    k_ = jax.random.PRNGKey(1)
+    B_, S_, H, Hk, D = 2, 256, 4, 2, 16
+    q = jax.random.normal(k_, (B_, S_, H, D), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(k_, 1), (B_, S_, Hk, D))
+    v = jax.random.normal(jax.random.fold_in(k_, 2), (B_, S_, Hk, D))
+    dense = attention(q, k, v, causal=True)
+    chunked = chunked_attention(q, k, v, causal=True, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chunked),
+                               atol=2e-5)
+    # sliding window variant
+    dw = attention(q, k, v, causal=True, window=32)
+    cw = chunked_attention(q, k, v, causal=True, window=32, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(cw), atol=2e-5)
+
+
+def test_ssd_chunked_matches_naive_recurrence():
+    from repro.models.ssm import ssd_chunked
+    rng = np.random.default_rng(0)
+    B_, S_, H, hd, G, N = 2, 64, 4, 8, 1, 16
+    xdt = jnp.asarray(rng.normal(size=(B_, S_, H, hd)), jnp.float32)
+    a = jnp.asarray(-np.abs(rng.normal(size=(B_, S_, H))) * 0.1, jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B_, S_, G, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(B_, S_, G, N)), jnp.float32)
+    y, state = ssd_chunked(xdt, a, Bm, Cm, chunk=16)
+    # naive recurrence
+    h = np.zeros((B_, H, N, hd))
+    ys = np.zeros((B_, S_, H, hd))
+    for t in range(S_):
+        decay = np.exp(np.asarray(a[:, t]))[:, :, None, None]
+        inp = np.einsum("bn,bhd->bhnd", np.asarray(Bm[:, t, 0]),
+                        np.asarray(xdt[:, t]))
+        h = h * decay + inp
+        ys[:, t] = np.einsum("bn,bhnd->bhd", np.asarray(Cm[:, t, 0]), h)
+    np.testing.assert_allclose(np.asarray(y), ys, atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(state), h, atol=1e-3, rtol=1e-3)
+
+
+def test_rglru_scan_matches_step():
+    from repro.models.rglru import (RGLRUConfig, rglru_apply, rglru_init,
+                                    rglru_init_cache, rglru_step)
+    cfg = RGLRUConfig(lru_width=16)
+    p = rglru_init(jax.random.PRNGKey(3), 8, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 12, 8), jnp.float32)
+    y_all, _ = rglru_apply(x, p, cfg, 8)
+    cache = rglru_init_cache(2, 8, cfg, jnp.float32)
+    ys = []
+    for t in range(12):
+        y1, cache = rglru_step(x[:, t:t + 1], cache, p, cfg, 8)
+        ys.append(y1)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_all), np.asarray(y_seq),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_gqa_prefill_then_decode_consistent():
+    """Next-token logits from (prefill S) == (prefill S via step-by-step)."""
+    from repro.configs import get_config, reduce_config
+    cfg = reduce_config(get_config("qwen3-8b"))
+    params = init_params(cfg, KEY)
+    batch = {"tokens": jax.random.randint(KEY, (1, 8), 0, cfg.vocab)}
+    logits_p, cache = prefill(cfg, params, batch, 16)
+    # step-by-step: feed tokens one at a time from a zero cache
+    st = init_decode_state(cfg, 1, 16)
+    for t in range(8):
+        logits_s, st = decode_step(cfg, params,
+                                   batch["tokens"][:, t:t + 1], st, t)
+    np.testing.assert_allclose(np.asarray(logits_p), np.asarray(logits_s),
+                               atol=3e-2, rtol=3e-2)

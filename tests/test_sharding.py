@@ -1,0 +1,107 @@
+"""Sharding rules + HLO collective parser (no fake devices needed: these
+operate on ShapeDtypeStructs and PartitionSpecs, never on arrays)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import applicable_cells, ARCH_IDS, SHAPES, get_config
+from repro.launch.hlo import collective_bytes, parse_shape_bytes
+
+
+class FakeMesh:
+    """Duck-typed stand-in: sharding rule code only reads .shape/.axis_names."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _specs(arch, mesh=MESH):
+    from repro.launch import sharding as shd
+    from repro.launch.steps import _params_struct
+    cfg = get_config(arch)
+    ps = _params_struct(cfg)
+    return ps, shd.param_specs(ps, mesh), cfg
+
+
+def test_param_specs_core_rules():
+    ps, specs, cfg = _specs("qwen3-8b")
+    assert specs["embed"] == P("model", ("data",))
+    assert specs["lm_head"] == P(("data",), "model")
+    assert specs["layers"]["attn"]["wq"] == P(None, ("data",), "model")
+    assert specs["layers"]["attn"]["wo"] == P(None, "model", ("data",))
+    assert specs["layers"]["mlp"]["up"] == P(None, ("data",), "model")
+    assert specs["layers"]["mlp"]["down"] == P(None, "model", ("data",))
+    assert specs["final_norm"]["w"] == P()
+
+
+def test_param_specs_moe_expert_parallel():
+    ps, specs, cfg = _specs("deepseek-v2-236b")
+    assert specs["layers"]["moe"]["w_gate"] == P(None, "model", ("data",), None)
+    assert specs["layers"]["moe"]["w_down"] == P(None, "model", None, ("data",))
+    assert specs["layers"]["moe"]["router"] == P(None, ("data",), None)
+
+
+def test_param_specs_uneven_vocab_drops_axis():
+    ps, specs, cfg = _specs("mamba2-780m")   # vocab 50280 % 16 != 0
+    assert specs["embed"] == P(None, ("data",))
+    assert specs["lm_head"] == P(("data",), None)
+
+
+def test_param_specs_multipod_fsdp_axes():
+    ps, specs, cfg = _specs("command-r-35b", MESH3)
+    assert specs["layers"]["attn"]["wq"] == P(None, ("pod", "data"), "model")
+
+
+def test_every_arch_has_sharded_big_params():
+    """No multi-GB parameter may end up fully replicated."""
+    for arch in ARCH_IDS:
+        ps, specs, cfg = _specs(arch)
+        for (path, leaf), (_, spec) in zip(
+                jax.tree_util.tree_flatten_with_path(ps)[0],
+                jax.tree_util.tree_flatten_with_path(
+                    specs, is_leaf=lambda x: isinstance(x, P))[0]):
+            size = np.prod(leaf.shape) * leaf.dtype.itemsize
+            if size > 256 * 2 ** 20:  # 256 MB
+                assert spec != P(), (arch, path, leaf.shape)
+
+
+def test_applicable_cells_rules():
+    cells = applicable_cells()
+    assert ("mamba2-780m", "long_500k") in cells
+    assert ("recurrentgemma-2b", "long_500k") in cells
+    assert ("command-r-35b", "long_500k") not in cells      # full attention
+    assert ("qwen3-8b", "long_500k") not in cells
+    assert len(cells) == 32
+    # every arch has the three universal cells
+    for a in ARCH_IDS:
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert (a, s) in cells
+
+
+# ------------------------------------------------------------------ hlo.py
+def test_parse_shape_bytes():
+    assert parse_shape_bytes("bf16[8,128]") == 8 * 128 * 2
+    assert parse_shape_bytes("(f32[4,4], s8[16])") == 64 + 16
+    assert parse_shape_bytes("f32[]") == 4  # scalar
+
+
+def test_collective_bytes_parser():
+    hlo = """
+  %ar = f32[256,4096]{1,0} all-reduce(%x), replica_groups=[16,16]<=[16,16]T(1,0), to_apply=%sum
+  %ag = bf16[1024]{0} all-gather(%y), replica_groups={{0,1,2,3}}, dimensions={0}
+  %cp = f32[8]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %deg = f32[64]{0} all-reduce(%w), replica_groups={{0}}, to_apply=%sum
+  %use = f32[8]{0} add(%all-reduce.5, %cp)
+"""
+    out = collective_bytes(hlo)
+    ar = 256 * 4096 * 4
+    assert out["all-reduce"] == pytest.approx(2 * ar * 15 / 16)
+    assert out["all-gather"] == pytest.approx(1024 * 2 * 3 / 4)
+    # degenerate single-member groups are dropped; permutes lack groups
+    assert out["ops"]["all-reduce"] == 1
+    assert out["total"] > 0

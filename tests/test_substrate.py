@@ -1,0 +1,138 @@
+"""Data pipeline, checkpointing, cluster runtime (fault tolerance)."""
+import os
+import time
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager, latest_step, save_pytree, restore_pytree
+from repro.data import SyntheticLM
+from repro.runtime import (ClusterMonitor, PreemptionHandler,
+                           plan_elastic_mesh)
+
+
+# ---------------------------------------------------------------- data
+def test_data_deterministic_and_stateless():
+    ds = SyntheticLM(vocab=1000, seq=16, global_batch=8, seed=3)
+    a = np.asarray(ds.batch(5)["tokens"])
+    b = np.asarray(ds.batch(5)["tokens"])
+    c = np.asarray(ds.batch(6)["tokens"])
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+    assert a.min() >= 0 and a.max() < 1000
+
+
+def test_data_host_sharding_shapes():
+    ds = SyntheticLM(vocab=100, seq=8, global_batch=32, seed=0)
+    shards = [ds.host_batch(2, h, 4)["tokens"] for h in range(4)]
+    assert all(s.shape == (8, 8) for s in shards)
+    # different hosts see different data
+    assert not np.array_equal(np.asarray(shards[0]), np.asarray(shards[1]))
+
+
+def test_data_zipf_skew():
+    ds = SyntheticLM(vocab=1000, seq=64, global_batch=64, seed=1)
+    t = np.asarray(ds.batch(0)["tokens"])
+    # low ids should be much more frequent than high ids
+    assert (t < 100).mean() > 2.5 * (t >= 900).mean()
+
+
+# ---------------------------------------------------------------- checkpoint
+def _tree():
+    return {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "m": [jnp.ones((2,)), jnp.zeros((0,), jnp.float32)],
+            "step": jnp.asarray(7)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path / "ckpt")
+    save_pytree(d, 10, _tree(), extra={"data_step": 123})
+    tree, extra = restore_pytree(d, 10, _tree())
+    np.testing.assert_array_equal(np.asarray(tree["w"]),
+                                  np.arange(12).reshape(3, 4))
+    assert extra["data_step"] == 123
+
+
+def test_checkpoint_ignores_torn_writes(tmp_path):
+    d = str(tmp_path / "ckpt")
+    save_pytree(d, 1, _tree())
+    os.makedirs(os.path.join(d, "step_00000002.tmp"))  # simulated torn write
+    os.makedirs(os.path.join(d, "step_00000003"))      # no manifest
+    assert latest_step(d) == 1
+
+
+def test_checkpoint_manager_async_keep_k(tmp_path):
+    d = str(tmp_path / "ckpt")
+    mgr = CheckpointManager(d, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save_async(s, _tree(), extra={"s": s})
+    mgr.wait()
+    names = sorted(n for n in os.listdir(d) if n.startswith("step_"))
+    assert names == ["step_00000003", "step_00000004"]
+    step, tree, extra = mgr.restore_latest(_tree())
+    assert step == 4 and extra["s"] == 4
+
+
+def test_checkpoint_preemption_mid_save_is_safe(tmp_path):
+    """A checkpoint dir with a newer torn write still restores the old one."""
+    d = str(tmp_path / "ckpt")
+    save_pytree(d, 5, _tree())
+    tmp = os.path.join(d, "step_00000006.tmp")
+    os.makedirs(tmp)
+    with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+        f.write(b"partial garbage")
+    assert latest_step(d) == 5
+    tree, _ = restore_pytree(d, 5, _tree())
+    assert float(tree["w"][0, 0]) == 0.0
+
+
+# ---------------------------------------------------------------- runtime
+def test_monitor_detects_dead_and_stragglers():
+    mon = ClusterMonitor(n_hosts=4, beat_timeout=10.0, lag_steps=5)
+    now = 100.0
+    for h in range(4):
+        mon.record_heartbeat(h, step=100, now=now)
+    mon.record_heartbeat(2, step=80, now=now)       # straggler
+    assert mon.dead_hosts(now=now) == []
+    assert mon.stragglers() == []                   # first flag only
+    assert mon.stragglers() == [2]                  # second consecutive flag
+    assert mon.dead_hosts(now=now + 60.0) == [0, 1, 2, 3]
+    mon.record_heartbeat(0, step=101, now=now + 60)
+    assert 0 not in mon.dead_hosts(now=now + 61)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(min_value=1, max_value=64),
+       st.integers(min_value=1, max_value=8))
+def test_elastic_plan_properties(n_alive, chips_pow):
+    chips_per_host = 2 ** (chips_pow - 1)
+    tp = 16
+    alive = list(range(n_alive))
+    total = n_alive * chips_per_host
+    if total < tp:
+        with pytest.raises(RuntimeError):
+            plan_elastic_mesh(alive, chips_per_host=chips_per_host,
+                              model_parallel=tp)
+        return
+    plan = plan_elastic_mesh(alive, chips_per_host=chips_per_host,
+                             model_parallel=tp)
+    # the model axis is never shrunk, mesh fits in surviving chips
+    assert plan.mesh_shape[-1] == tp
+    assert np.prod(plan.mesh_shape) <= total
+    assert set(plan.dropped_hosts).isdisjoint(plan.active_hosts)
+
+
+def test_elastic_plan_multi_pod():
+    plan = plan_elastic_mesh(list(range(128)), chips_per_host=4,
+                             model_parallel=16, pod_size=16)
+    assert plan.axis_names == ("pod", "data", "model")
+    assert plan.mesh_shape[0] >= 2
+
+
+def test_preemption_handler():
+    h = PreemptionHandler(install=False)
+    assert not h.should_stop
+    h.trigger()
+    assert h.should_stop
