@@ -51,9 +51,17 @@ def cordic_gain(iters: int) -> float:
 def gain_comp_constant(iters, p):
     """Integer compensation constant: round(2^p / K(iters)).
 
-    `iters` may be traced; `p` may be traced (int64).
+    `iters` and `p` may be traced (int64) or static Python ints.  The
+    static path computes the identical IEEE-double value in numpy and
+    avoids staging the gain table as an array constant — required inside
+    Pallas kernels, which reject captured array consts.
     """
+    if isinstance(iters, (int, np.integer)) and isinstance(p, (int, np.integer)):
+        inv_gain = np.float64(1.0) / np.float64(GAIN_TABLE[iters])
+        return jnp.asarray(np.rint(inv_gain * np.exp2(np.float64(p))),
+                           jnp.int64)
     inv_gain = 1.0 / jnp.asarray(GAIN_TABLE, jnp.float64)[iters]
+    p = jnp.asarray(p, jnp.int64)
     return jnp.rint(inv_gain * jnp.exp2(p.astype(jnp.float64))).astype(jnp.int64)
 
 
@@ -156,9 +164,15 @@ def apply_gain(x, y, iters, w, hub: bool):
 
     p is chosen so the partial products stay inside int64: p = 78 - w capped
     to 46 (comp error ~2^-p, far below the N-bit LSB for every supported N).
+    `iters` and `w` may be static Python ints (kernel-resident path) or
+    traced scalars (sweep path) — both produce identical constants.
     """
-    w = jnp.asarray(w, jnp.int64)
-    p = jnp.minimum(jnp.asarray(78, jnp.int64) - w, jnp.asarray(46, jnp.int64))
+    if isinstance(w, (int, np.integer)) and isinstance(iters, (int, np.integer)):
+        p = int(min(78 - w, 46))
+    else:
+        w = jnp.asarray(w, jnp.int64)
+        p = jnp.minimum(jnp.asarray(78, jnp.int64) - w,
+                        jnp.asarray(46, jnp.int64))
     comp = gain_comp_constant(iters, p)
     return (fixmul(x, comp, p, round_nearest=not hub),
             fixmul(y, comp, p, round_nearest=not hub))

@@ -65,7 +65,21 @@ RotationState = Any
 
 
 class GivensUnit:
-    """Callable facade over the converter + CORDIC pipeline."""
+    """Bit-accurate facade over the converter + CORDIC pipeline (Fig. 1).
+
+    All methods operate on *packed* FP words: int64 integers with the
+    ``[sign | exponent | mantissa]`` layout of ``cfg.fmt`` (see
+    `repro.core.formats`) — the HUB variant carries an implicit always-1
+    LSB.  Everything is vectorized over arbitrary batch shapes, and the
+    same instance serves both the host-side reference loop and the
+    kernel-resident blocked QR (its methods trace inside Pallas kernels).
+
+    Parameters
+    ----------
+    config : GivensConfig
+        Frozen (hashable) implementation parameters; validated on
+        construction.
+    """
 
     def __init__(self, config: GivensConfig):
         config.validate()
@@ -73,10 +87,17 @@ class GivensUnit:
 
     # -- packed codec helpers -------------------------------------------------
     def encode(self, x):
+        """float array -> int64 packed words of ``cfg.fmt`` (IEEE or HUB).
+
+        Conventional encoding rounds to nearest-even; HUB encoding
+        truncates (truncation *is* round-to-nearest for HUB).  Zeros map
+        to packed words with exponent field 0.
+        """
         f = encode_hub if self.cfg.hub else encode_ieee
         return f(x, self.cfg.fmt)
 
     def decode(self, packed):
+        """int64 packed words -> float64 values (packed-zero -> ±0.0)."""
         f = decode_hub if self.cfg.hub else decode_ieee
         return f(packed, self.cfg.fmt)
 
@@ -98,10 +119,25 @@ class GivensUnit:
 
     # -- the two operations of the unit --------------------------------------
     def vector(self, xp, yp, N=None, iters=None):
-        """Vectoring: returns (r_packed, y_packed≈0, state)."""
-        N = jnp.asarray(self.cfg.n if N is None else N, jnp.int64)
-        iters = jnp.asarray(self.cfg.resolved_iters() if iters is None else iters,
-                            jnp.int64)
+        """Vectoring: compute the rotation angle from the leading pair.
+
+        Parameters
+        ----------
+        xp, yp : int64 packed FP words, any (broadcastable) batch shape.
+        N, iters : optional
+            Significand width / CORDIC depth overrides.  None resolves the
+            config value as a *static* Python int (required inside Pallas
+            kernels); traced scalars are accepted for sweep reuse.
+
+        Returns
+        -------
+        (r_packed, y_packed, state)
+            ``r_packed`` is ±hypot(x, y) packed, ``y_packed`` the ≈0
+            residual, ``state`` the ``(flip, sigmas)`` control word that
+            `rotate` replays — the entire "Z coordinate" of the unit.
+        """
+        N = self.cfg.n if N is None else N
+        iters = self.cfg.resolved_iters() if iters is None else iters
         xf, yf, m_exp = self._to_fixed(xp, yp, N)
         xr, yr, flip, sig = cordic.vectoring(xf, yf, iters, self.cfg.hub)
         xr, yr = cordic.apply_gain(xr, yr, iters, N + 2, self.cfg.hub)
@@ -110,10 +146,23 @@ class GivensUnit:
                 (flip, sig))
 
     def rotate(self, xp, yp, state, N=None, iters=None):
-        """Rotation: replay `state` on another element pair of the rows."""
-        N = jnp.asarray(self.cfg.n if N is None else N, jnp.int64)
-        iters = jnp.asarray(self.cfg.resolved_iters() if iters is None else iters,
-                            jnp.int64)
+        """Rotation: replay `state` on another element pair of the rows.
+
+        Parameters
+        ----------
+        xp, yp : int64 packed FP words; ``state`` broadcasts across any
+            trailing axes (one control word rotates a whole row).
+        state : (flip, sigmas)
+            Control word from `vector` — int64 0/1 coarse flip plus the
+            packed per-microrotation direction bits.
+        N, iters : optional overrides, as in `vector`.
+
+        Returns
+        -------
+        (x_packed, y_packed) — the rotated element pair, packed.
+        """
+        N = self.cfg.n if N is None else N
+        iters = self.cfg.resolved_iters() if iters is None else iters
         flip, sig = state
         xf, yf, m_exp = self._to_fixed(xp, yp, N)
         xr, yr = cordic.rotation(xf, yf, flip, sig, iters, self.cfg.hub)

@@ -8,12 +8,21 @@ row for 4x4 matrices" throughput accounting and the HUB identity-detection
 feature (the 1.0 entries of I enter the unit as data).
 
 Backends:
-  'cordic'       the paper's unit, bit-accurate (GivensUnit; IEEE or HUB)
-  'givens_float' float Givens rotations (algorithmic baseline, any dtype)
-  'jnp'          jnp.linalg.qr (LAPACK-style "Matlab qr" reference)
-  'fixed'        the 32-bit fixed-point rotator of [20] (Fig. 11 baseline)
+  'cordic'        the paper's unit, bit-accurate (GivensUnit; IEEE or HUB)
+  'cordic_pallas' the same unit, kernel-resident: the whole triangularization
+                  runs inside one Pallas kernel (DESIGN.md §5), bit-identical
+                  to 'cordic'
+  'blockfp_pallas' int32 block-fixed-point blocked kernel: quantize once,
+                  rotate everything fixed-point in VMEM, decode once (the
+                  TPU-compilable fast path; not bit-identical to 'cordic')
+  'givens_float'  float Givens rotations (algorithmic baseline, any dtype)
+  'jnp'           jnp.linalg.qr (LAPACK-style "Matlab qr" reference)
+  'fixed'         the 32-bit fixed-point rotator of [20] (Fig. 11 baseline)
 
-All backends are batched over a leading batch axis.
+All backends are batched over a leading batch axis.  Schedules: the default
+column-major order, or the Sameh–Kuck parallel pairing
+(`sameh_kuck_schedule`) whose stages rotate disjoint row pairs — the order a
+spatial/multi-unit implementation would use.
 """
 from __future__ import annotations
 
@@ -27,12 +36,22 @@ import numpy as np
 from . import cordic
 from .givens import GivensConfig, GivensUnit
 
-__all__ = ["qr_cordic", "qr_givens_float", "qr_jnp", "qr_fixed",
-           "QRDEngine", "snr_db", "givens_schedule"]
+__all__ = ["qr_cordic", "qr_cordic_pallas", "qr_blockfp_pallas",
+           "qr_givens_float", "qr_jnp", "qr_fixed", "qr_blocked_sharded",
+           "QRDEngine", "snr_db", "givens_schedule", "sameh_kuck_schedule"]
 
 
 def givens_schedule(m: int, n: int):
-    """Column-major zeroing order: [(pivot_row, target_row, col), ...]."""
+    """Column-major zeroing order for an m x n matrix.
+
+    Returns
+    -------
+    list[(int, int, int)]
+        ``(pivot_row, target_row, col)`` triples: entry ``(target_row,
+        col)`` is annihilated against the diagonal row ``col``, one column
+        at a time.  This is the order the reference loop and the blocked
+        kernels share.
+    """
     steps = []
     for k in range(min(m - 1, n)):
         for j in range(k + 1, m):
@@ -40,24 +59,88 @@ def givens_schedule(m: int, n: int):
     return steps
 
 
+def sameh_kuck_schedule(m: int, n: int):
+    """Sameh–Kuck parallel pairing schedule [Sameh & Kuck, JACM 1978].
+
+    Entry ``(r, c)`` is annihilated against the *adjacent* row ``r - 1`` at
+    stage ``(m - 1 - r) + 2 c``; all rotations within a stage touch
+    disjoint row pairs, so a spatial array of rotators (or a wide vector
+    unit) executes each stage fully in parallel.
+
+    Returns
+    -------
+    list[list[(int, int, int)]]
+        One inner list of ``(pivot_row, target_row, col)`` triples per
+        stage.  Flatten (``sum(stages, [])``) for engines that consume a
+        sequential order — within-stage rotations commute, so any
+        flattening of the stage order gives identical results.
+    """
+    stages: dict[int, list] = {}
+    for c in range(min(m - 1, n)):
+        for r in range(m - 1, c, -1):
+            stages.setdefault((m - 1 - r) + 2 * c, []).append((r - 1, r, c))
+    return [stages[t] for t in sorted(stages)]
+
+
+def _split_qr(out, m, n, compute_q):
+    """Split a decoded working matrix [R' | Qt] and force R's structure."""
+    R = out[..., :n]
+    tri = jnp.tril(jnp.ones((m, n), bool), -1)
+    R = jnp.where(tri, 0.0, R)
+    if not compute_q:
+        return None, R
+    Q = jnp.swapaxes(out[..., n:], -1, -2)
+    return Q, R
+
+
 # --------------------------------------------------------------------------
 # Paper backend: the CORDIC unit over packed words, rows augmented with I.
 # --------------------------------------------------------------------------
-def qr_cordic(A, unit: GivensUnit, N=None, iters=None, compute_q=True):
-    """QRD of a batch of matrices with the paper's unit.
+def _augment(A, compute_q):
+    """Append the identity columns: rows of e = n + m elements (or e = n)."""
+    if not compute_q:
+        return A
+    m = A.shape[-2]
+    eye = jnp.broadcast_to(jnp.eye(m, dtype=jnp.float64), A.shape[:-1] + (m,))
+    return jnp.concatenate([A, eye], axis=-1)
 
-    A: (..., m, n) float array.  Returns (Q, R) as float64 (decoded), with
-    R's structural zeros forced (the systolic array never stores them).
+
+def qr_cordic(A, unit: GivensUnit, N=None, iters=None, compute_q=True,
+              steps=None):
+    """QRD of a batch of matrices with the paper's unit (reference loop).
+
+    One `GivensUnit.rotate_rows` launch per schedule step: every step
+    round-trips the two packed rows through host-level ops — the behavior
+    the kernel-resident `qr_cordic_pallas` eliminates while staying
+    bit-identical.
+
+    Parameters
+    ----------
+    A : (..., m, n) array_like
+        Batch of input matrices (converted to float64).
+    unit : GivensUnit
+        The configured rotator (IEEE or HUB datapath).
+    N, iters : optional traced scalars
+        Override the config's significand width / CORDIC depth (used by the
+        paper's Fig. 9 sweeps); None takes the config defaults.
+    compute_q : bool
+        Augment the rows with the identity to accumulate Q^T (the paper's
+        setup; the 1.0 entries enter the unit as data).
+    steps : sequence[(int, int, int)], optional
+        Rotation schedule; defaults to the column-major `givens_schedule`.
+
+    Returns
+    -------
+    (Q, R) : float64 arrays (Q is None when ``compute_q=False``), with R's
+    structural zeros forced (the systolic array never stores them).
     """
     A = jnp.asarray(A, jnp.float64)
     m, n = A.shape[-2], A.shape[-1]
-    if compute_q:
-        eye = jnp.broadcast_to(jnp.eye(m, dtype=jnp.float64), A.shape[:-1] + (m,))
-        work = jnp.concatenate([A, eye], axis=-1)  # rows of e = n + m elements
-    else:
-        work = A
+    work = _augment(A, compute_q)
     P = unit.encode(work)
-    for (k, j, col) in givens_schedule(m, n):
+    if steps is None:
+        steps = givens_schedule(m, n)
+    for (k, j, col) in steps:
         # Leading pair at `col`; rotate every remaining element of both rows.
         row_x = P[..., k, col:]
         row_y = P[..., j, col:]
@@ -66,23 +149,126 @@ def qr_cordic(A, unit: GivensUnit, N=None, iters=None, compute_q=True):
         ry = ry.at[..., 0].set(0)
         P = P.at[..., k, col:].set(rx)
         P = P.at[..., j, col:].set(ry)
-    out = unit.decode(P)
     # decode() maps packed-zero to +/-0.0; re-zero explicitly for cleanliness
-    R = out[..., :n]
-    tri = jnp.tril(jnp.ones((m, n), bool), -1)
-    R = jnp.where(tri, 0.0, R)
-    if not compute_q:
-        return None, R
-    Qt = out[..., n:]
-    Q = jnp.swapaxes(Qt, -1, -2)
-    return Q, R
+    out = unit.decode(P)
+    return _split_qr(out, m, n, compute_q)
+
+
+def qr_cordic_pallas(A, unit: GivensUnit, compute_q=True, steps=None,
+                     interpret=None):
+    """Kernel-resident QRD: the whole triangularization in one Pallas call.
+
+    Semantically `qr_cordic` with the Python loop moved *inside* the
+    kernel: the working tile stays in VMEM across all schedule steps and
+    the per-step converter dataflow runs in registers (DESIGN.md §5).
+    (Q, R) are bit-identical to `qr_cordic` for the same `GivensConfig`
+    (IEEE and HUB) — the kernel calls the same unit arithmetic.
+
+    Parameters
+    ----------
+    A : (..., m, n) array_like
+        Batch of input matrices (converted to float64).
+    unit : GivensUnit
+        The configured rotator; its frozen config is a static kernel
+        parameter.
+    steps : sequence[(int, int, int)], optional
+        Schedule; defaults to column-major.  Pass a flattened
+        `sameh_kuck_schedule` for the parallel-pairing order.
+    interpret : bool, optional
+        Forwarded to the kernel; None auto-selects (interpret on CPU).
+
+    Returns
+    -------
+    (Q, R) : float64 arrays, bit-identical to `qr_cordic`.
+    """
+    from repro.kernels import ops as _kops  # deferred: core must not
+    # depend on the kernels package at import time
+    A = jnp.asarray(A, jnp.float64)
+    m, n = A.shape[-2], A.shape[-1]
+    P = unit.encode(_augment(A, compute_q))
+    if steps is None:
+        steps = givens_schedule(m, n)
+    Pout = _kops.qr_packed(P, cfg=unit.cfg, steps=tuple(steps),
+                           interpret=interpret)
+    out = unit.decode(Pout)
+    return _split_qr(out, m, n, compute_q)
+
+
+def qr_blockfp_pallas(A, compute_q=True, iters=24, hub=True, frac=24,
+                      steps=None, interpret=None):
+    """Blocked QRD on the int32 block-fixed-point kernel (the fast path).
+
+    The working matrix is quantized once to per-column block fixed point,
+    every rotation step runs int32 inside one Pallas kernel, and a single
+    decode at the end recovers floats — no per-step FP round-trips.  Not
+    bit-identical to `qr_cordic` (Q30 gain, no per-step renormalization);
+    accuracy is that of an F-fraction-bit fixed-point datapath per column,
+    which for ``frac=24`` lands within a few dB of the packed path on
+    well-scaled inputs.
+
+    Parameters
+    ----------
+    A : (..., m, n) array_like
+        Batch of input matrices.  ``frac=24`` supports m up to ~64 (two
+        CORDIC growth bits + √m column-norm growth inside int32).
+    iters, hub, frac : int, bool, int
+        CORDIC depth, HUB/conventional arithmetic, fraction bits.
+    steps : sequence[(int, int, int)], optional
+        Schedule; defaults to column-major.
+
+    Returns
+    -------
+    (Q, R) : float64 arrays (Q is None when ``compute_q=False``).
+    """
+    from repro.kernels import ops as _kops
+    A = jnp.asarray(A, jnp.float64)
+    m, n = A.shape[-2], A.shape[-1]
+    work = _augment(A, compute_q)
+    if steps is None:
+        steps = givens_schedule(m, n)
+    out = _kops.givens_block_apply(work, tuple(steps), iters=iters, hub=hub,
+                                   frac=frac, interpret=interpret)
+    return _split_qr(out, m, n, compute_q)
+
+
+def qr_blocked_sharded(A, unit: GivensUnit, mesh, compute_q=True,
+                       steps=None, interpret=None):
+    """Batch-sharded kernel-resident QRD (the tall-skinny scaling path).
+
+    Places the leading batch axis of ``A`` across the mesh's data axes
+    (`repro.launch.sharding.shard_qrd_batch`) and runs `qr_cordic_pallas`;
+    under jit the per-device kernels each triangularize their local batch
+    shard — QRD is embarrassingly parallel over the batch, so no collective
+    is needed until the caller combines results.
+
+    Parameters
+    ----------
+    A : (batch, m, n) array_like
+    mesh : jax.sharding.Mesh
+        Mesh with a "model" axis and one or more data axes (see
+        `repro.launch.mesh`).
+
+    Returns
+    -------
+    (Q, R) with the same batch sharding as the input placement.
+    """
+    from repro.launch import sharding as _sh
+    A = _sh.shard_qrd_batch(jnp.asarray(A, jnp.float64), mesh)
+    return qr_cordic_pallas(A, unit, compute_q=compute_q, steps=steps,
+                            interpret=interpret)
 
 
 # --------------------------------------------------------------------------
 # Float Givens baseline (the algorithm, without the paper's arithmetic).
 # --------------------------------------------------------------------------
 def qr_givens_float(A, dtype=jnp.float32, compute_q=True):
-    """Batched QR via float Givens rotations (same schedule as the unit)."""
+    """Batched QR via float Givens rotations (same schedule as the unit).
+
+    The algorithmic baseline: identical column-major schedule and
+    augmented-identity Q accumulation, but plain `dtype` floating point
+    instead of the paper's arithmetic.  A: (..., m, n); returns (Q, R) in
+    `dtype` (Q is None when ``compute_q=False``).
+    """
     A = jnp.asarray(A, dtype)
     m, n = A.shape[-2], A.shape[-1]
     if compute_q:
@@ -111,7 +297,11 @@ def qr_givens_float(A, dtype=jnp.float32, compute_q=True):
 
 
 def qr_jnp(A, dtype=jnp.float32):
-    """Reference ("Matlab qr, single precision"): jnp.linalg.qr."""
+    """LAPACK-style reference ("Matlab qr, single precision").
+
+    A: (..., m, n); returns complete-mode (Q, R) from `jnp.linalg.qr` in
+    `dtype` — the paper's comparison reference.
+    """
     Q, R = jnp.linalg.qr(jnp.asarray(A, dtype), mode="complete")
     return Q, R
 
@@ -121,7 +311,13 @@ def qr_jnp(A, dtype=jnp.float32):
 # 2^-scale_exp into (-1, 1), W-bit datapath, CORDIC + gain compensation.
 # --------------------------------------------------------------------------
 def qr_fixed(A, width=32, iters=27, scale_exp=0, compute_q=True):
-    """Batched QRD in pure fixed point (W-bit, F = width-2 fraction bits)."""
+    """Batched QRD in pure fixed point (W-bit, F = width-2 fraction bits).
+
+    The Fig. 11 baseline [20]: inputs are pre-scaled by 2^-scale_exp into
+    (-1, 1) and quantized RNE to the F-bit grid; the whole decomposition
+    runs in int64-carried W-bit two's complement with CORDIC + gain
+    compensation.  A: (..., m, n); returns float64 (Q, R).
+    """
     A = jnp.asarray(A, jnp.float64)
     m, n = A.shape[-2], A.shape[-1]
     if compute_q:
@@ -160,21 +356,64 @@ def qr_fixed(A, width=32, iters=27, scale_exp=0, compute_q=True):
 # --------------------------------------------------------------------------
 @dataclasses.dataclass
 class QRDEngine:
-    """Backend-selectable batched QRD (the framework-facing API)."""
+    """Backend-selectable batched QRD (the framework-facing API).
+
+    Parameters
+    ----------
+    backend : str
+        One of ``'jnp'`` (LAPACK reference), ``'givens_float'`` (float
+        Givens baseline), ``'cordic'`` (bit-accurate unit, reference
+        loop), ``'cordic_pallas'`` (same unit, kernel-resident — (Q, R)
+        bit-identical to ``'cordic'``), ``'blockfp_pallas'`` (int32
+        block-fixed-point blocked kernel), ``'fixed'`` (32-bit fixed-point
+        rotator of [20]).
+    givens_config : GivensConfig
+        Unit parameters for the ``'cordic'`` / ``'cordic_pallas'``
+        backends; ``'blockfp_pallas'`` uses its ``hub`` flag and resolved
+        iteration count.
+    schedule : str
+        ``'col'`` (column-major) or ``'sameh_kuck'`` (parallel pairing,
+        flattened) — applies to the cordic-family and blockfp backends.
+    fixed_width, fixed_iters, fixed_scale_exp : int
+        Parameters of the ``'fixed'`` baseline.
+
+    Call with ``engine(A, compute_q=...)`` where ``A`` is ``(..., m, n)``;
+    returns ``(Q, R)`` float arrays (Q is None when ``compute_q=False``).
+    """
 
     backend: str = "jnp"
     givens_config: GivensConfig = dataclasses.field(default_factory=GivensConfig)
+    schedule: str = "col"
     fixed_width: int = 32
     fixed_iters: int = 27
     fixed_scale_exp: int = 0
 
     def __post_init__(self):
         self._unit = (GivensUnit(self.givens_config)
-                      if self.backend == "cordic" else None)
+                      if self.backend in ("cordic", "cordic_pallas") else None)
+
+    def _steps(self, m, n):
+        if self.schedule == "col":
+            return None  # backends default to givens_schedule(m, n)
+        if self.schedule == "sameh_kuck":
+            return tuple(s for stage in sameh_kuck_schedule(m, n)
+                         for s in stage)
+        raise ValueError(f"unknown schedule {self.schedule!r}")
 
     def __call__(self, A, compute_q=True):
+        A = jnp.asarray(A)
+        m, n = A.shape[-2], A.shape[-1]
         if self.backend == "cordic":
-            return qr_cordic(A, self._unit, compute_q=compute_q)
+            return qr_cordic(A, self._unit, compute_q=compute_q,
+                             steps=self._steps(m, n))
+        if self.backend == "cordic_pallas":
+            return qr_cordic_pallas(A, self._unit, compute_q=compute_q,
+                                    steps=self._steps(m, n))
+        if self.backend == "blockfp_pallas":
+            cfg = self.givens_config
+            return qr_blockfp_pallas(A, compute_q=compute_q, hub=cfg.hub,
+                                     iters=cfg.resolved_iters(),
+                                     steps=self._steps(m, n))
         if self.backend == "givens_float":
             return qr_givens_float(A, compute_q=compute_q)
         if self.backend == "jnp":

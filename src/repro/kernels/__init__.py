@@ -1,7 +1,9 @@
 # Pallas TPU kernels for the paper's CORDIC Givens rotator:
 #   cordic_givens.py  pl.pallas_call kernels (vectoring / rotation / fused)
+#   qrd_blocked.py    kernel-resident blocked QR (packed bit-exact + int32
+#                     block-fixed-point datapaths)
 #   ops.py            jitted public wrappers (padding, interpret auto-select)
 #   ref.py            pure-jnp oracles (tests assert exact integer equality)
-from . import ops, ref
+from . import ops, qrd_blocked, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["ops", "qrd_blocked", "ref"]

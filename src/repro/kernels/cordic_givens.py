@@ -33,8 +33,8 @@ from jax.experimental import pallas as pl
 
 from repro.core.cordic import GAIN_TABLE
 
-__all__ = ["vectoring_call", "rotation_call", "fused_call", "comp_q30",
-           "TILE_B", "TILE_L"]
+__all__ = ["vectoring_call", "rotation_call", "fused_call",
+           "fused_rotate_block", "comp_q30", "TILE_B", "TILE_L"]
 
 TILE_B = 8     # sublane tile (int32 native tile is (8, 128))
 TILE_L = 128   # lane tile
@@ -172,11 +172,15 @@ def rotation_call(x, y, flip, sigma, *, iters: int, hub: bool,
 # the leading column and replayed over the whole block before a single
 # write-back.  HBM traffic per element drops 2x (one read + one write).
 # ---------------------------------------------------------------------------
-def _fused_kernel(x_ref, y_ref, xo_ref, yo_ref,
-                  *, iters: int, hub: bool, comp: int):
-    x = x_ref[...]
-    y = y_ref[...]
-    # vectoring on the leading column only (control-word phase)
+def fused_rotate_block(x, y, *, iters: int, hub: bool, comp: int):
+    """Fused Givens step on two resident (TB, L) row blocks.
+
+    Vectoring on the leading column derives the control words (flip +
+    sigma), then the whole block — leading column included; its replay by
+    its own sigma IS the vectoring result — rotates with the broadcast
+    words and is gain-compensated.  Shared by the fused row kernel and the
+    blocked QR kernel (`qrd_blocked`).
+    """
     xl = x[:, :1]
     yl = y[:, :1]
     flip = xl < 0
@@ -187,14 +191,18 @@ def _fused_kernel(x_ref, y_ref, xo_ref, yo_ref,
         d_pos = yl < 0
         xl, yl = _microrotation(xl, yl, i, d_pos, hub)
         sig = sig | (d_pos.astype(jnp.int32) << i)
-    # rotation of the whole block with the broadcast control words
     x = jnp.where(flip, _negate(x, hub), x)
     y = jnp.where(flip, _negate(y, hub), y)
     for i in range(iters):
         d_pos = ((sig >> i) & 1) == 1
         x, y = _microrotation(x, y, i, d_pos, hub)
-    xo_ref[...] = _gain_mul_q30(x, comp)
-    yo_ref[...] = _gain_mul_q30(y, comp)
+    return _gain_mul_q30(x, comp), _gain_mul_q30(y, comp)
+
+
+def _fused_kernel(x_ref, y_ref, xo_ref, yo_ref,
+                  *, iters: int, hub: bool, comp: int):
+    xo_ref[...], yo_ref[...] = fused_rotate_block(
+        x_ref[...], y_ref[...], iters=iters, hub=hub, comp=comp)
 
 
 def fused_call(x, y, *, iters: int, hub: bool, interpret: bool = True):

@@ -16,8 +16,10 @@ import jax
 import jax.numpy as jnp
 
 from . import cordic_givens as k
+from . import qrd_blocked as qb
 
-__all__ = ["vectoring_fixed", "rotation_fixed", "givens_rotate_rows_fixed"]
+__all__ = ["vectoring_fixed", "rotation_fixed", "givens_rotate_rows_fixed",
+           "givens_rotate_rows_fused", "qr_packed", "givens_block_apply"]
 
 
 def _auto_interpret(interpret):
@@ -38,7 +40,21 @@ def _pad_to(x, mult, axis):
 
 @functools.partial(jax.jit, static_argnames=("iters", "hub", "interpret"))
 def vectoring_fixed(x, y, *, iters=24, hub=False, interpret=None):
-    """(B,) int32 leading pairs -> (xr, yr, flip, sigma), each (B,)."""
+    """Vectoring kernel: compute per-row CORDIC control words.
+
+    Parameters
+    ----------
+    x, y : (B,) int32
+        Leading-element pairs as block-FP significands (w = iters+2 ≤ 30
+        bits; callers align exponents beforehand).
+    iters, hub : static CORDIC depth / HUB arithmetic flag.
+
+    Returns
+    -------
+    (xr, yr, flip, sigma) : four (B,) int32 arrays
+        Gain-compensated rotated pair (``yr`` ≈ 0), the coarse π-flip bit,
+        and the packed σ direction bits (bit i == 1 ⇔ d_i = +1).
+    """
     interpret = _auto_interpret(interpret)
     B = x.shape[0]
     xp = _pad_to(x.astype(jnp.int32)[:, None], k.TILE_B, 0)
@@ -50,7 +66,20 @@ def vectoring_fixed(x, y, *, iters=24, hub=False, interpret=None):
 
 @functools.partial(jax.jit, static_argnames=("iters", "hub", "interpret"))
 def rotation_fixed(x, y, flip, sigma, *, iters=24, hub=False, interpret=None):
-    """(B, L) int32 rows + (B,) control words -> rotated (B, L) pair."""
+    """Rotation kernel: replay stored control words across full rows.
+
+    Parameters
+    ----------
+    x, y : (B, L) int32
+        Row elements as block-FP significands.
+    flip, sigma : (B,) int32
+        Per-row control words from `vectoring_fixed`; broadcast across the
+        lane axis inside the kernel.
+
+    Returns
+    -------
+    (xr, yr) : (B, L) int32 gain-compensated rotated rows.
+    """
     interpret = _auto_interpret(interpret)
     B, L = x.shape
     xp = _pad_to(_pad_to(x.astype(jnp.int32), k.TILE_B, 0), k.TILE_L, 1)
@@ -94,3 +123,89 @@ def givens_rotate_rows_fused(x_rows, y_rows, *, iters=24, hub=False,
     yp = _pad_to(y_rows.astype(jnp.int32), k.TILE_B, 0)
     xr, yr = k.fused_call(xp, yp, iters=iters, hub=hub, interpret=interpret)
     return xr[:B], yr[:B]
+
+
+# ---------------------------------------------------------------------------
+# Blocked QR wrappers (kernel-resident triangularization, DESIGN.md §5)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "steps", "interpret", "tile_b"))
+def qr_packed(P, *, cfg, steps, interpret=None, tile_b=qb.TILE_B):
+    """Kernel-resident blocked QR over packed FP words (bit-exact path).
+
+    Parameters
+    ----------
+    P : (..., m, e) int64
+        Packed FP words (see `repro.core.formats`) of the augmented working
+        matrices; any leading batch shape.
+    cfg : GivensConfig
+        Static unit configuration — hashable, used as a jit static.
+    steps : tuple[(int, int, int), ...]
+        Static `(pivot_row, target_row, col)` rotation schedule.
+
+    Returns
+    -------
+    (..., m, e) int64 — triangularized packed words, bit-identical to
+    running `GivensUnit.rotate_rows` step by step (`qr_cordic`).
+    """
+    interpret = _auto_interpret(interpret)
+    batch = P.shape[:-2]
+    m, e = P.shape[-2:]
+    Pf = P.astype(jnp.int64).reshape((-1,) + (m, e))
+    B = Pf.shape[0]
+    Pp = _pad_to(Pf, tile_b, 0)
+    out = qb.qr_packed_call(Pp, cfg=cfg, steps=steps, interpret=interpret,
+                            tile_b=tile_b)
+    return out[:B].reshape(batch + (m, e))
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "iters", "hub", "frac",
+                                             "interpret", "tile_b"))
+def givens_block_apply(W, steps, *, iters=24, hub=True, frac=24,
+                       interpret=None, tile_b=qb.TILE_B):
+    """Apply a Givens schedule to float matrices on the int32 blocked kernel.
+
+    The fast (TPU-shaped) path: ``W`` is quantized **once** to int32
+    block-fixed-point significands with one shared exponent per
+    (matrix, column) — valid because Givens rotations only combine
+    same-column elements of two rows, so per-column scales are invariant
+    under the whole schedule.  All rotation steps then run fixed-point
+    inside one `pallas_call`, and a single FP decode recovers floats.
+
+    Parameters
+    ----------
+    W : (..., m, e) float
+        Working matrices (e.g. ``[A | I]`` for a full QRD, or ``[R | z]``
+        stacked over new rows for an RLS block update).
+    steps : tuple[(int, int, int), ...]
+        Static `(pivot_row, target_row, col)` schedule.
+    iters, hub : static CORDIC depth / HUB arithmetic flag.
+    frac : int
+        Fraction bits F of the significands.  F = 24 keeps every
+        intermediate (2 CORDIC growth bits + √m column-norm growth)
+        inside int32 for m up to ~64.
+
+    Returns
+    -------
+    (..., m, e) float64 — the rotated working matrices.
+    """
+    interpret = _auto_interpret(interpret)
+    W = jnp.asarray(W, jnp.float64)
+    batch = W.shape[:-2]
+    m, e = W.shape[-2:]
+    Wf = W.reshape((-1, m, e))
+    # per-(matrix, column) shared exponent: amax in [2^(ex-1), 2^ex)
+    amax = jnp.max(jnp.abs(Wf), axis=-2, keepdims=True)
+    _, ex = jnp.frexp(jnp.where(amax > 0, amax, 1.0))
+    ex = jnp.where(amax > 0, ex, 0)
+    # float64 exponent arithmetic: int32 `frac - ex` would promote exp2 to
+    # float32, which overflows/underflows for |amax| beyond ~2^±103
+    X = jnp.rint(Wf * jnp.exp2(jnp.asarray(frac - ex, jnp.float64))
+                 ).astype(jnp.int32)
+    B = X.shape[0]
+    Xp = _pad_to(X, tile_b, 0)
+    out = qb.qr_blockfp_call(Xp, iters=iters, hub=hub, steps=steps,
+                             interpret=interpret, tile_b=tile_b)
+    Wout = out[:B].astype(jnp.float64) * jnp.exp2(ex.astype(jnp.float64)
+                                                  - frac)
+    return Wout.reshape(batch + (m, e))

@@ -1,0 +1,159 @@
+"""Kernel-resident blocked QR: one `pallas_call` per triangularization.
+
+The reference loop (`repro.core.qrd.qr_cordic`) launches one rotation per
+schedule step from Python: every step reads the two packed rows from HBM,
+runs the unit, and writes them back — 2·steps HBM passes over the working
+set, plus per-step dispatch overhead.  The paper's FPGA never does this: the
+control word is computed once per row pair and *replayed inside the
+pipeline* (DESIGN.md §2, §5).  These kernels restore that property on the
+TPU: the whole (batched) m×e working tile is staged into VMEM once, every
+schedule step runs on the resident tile, and the result is written back
+once.
+
+Two datapaths, one schedule machinery:
+
+`qr_packed_call` — bit-exact packed-word datapath
+    The tile holds *packed FP words* (int64, see `repro.core.formats`).
+    Each schedule step performs the unit's full per-step dataflow in
+    registers — input-convert (block-FP align), CORDIC vectoring on the
+    leading pair, sigma-replay rotation across the rows, gain compensation,
+    output-convert — by calling the same `GivensUnit` arithmetic as the
+    reference loop.  (Q, R) are therefore **bit-identical** to `qr_cordic`
+    for any `GivensConfig` (IEEE and HUB).  int64 lanes: runs in interpret
+    mode (CPU) today; it is the semantic reference for the fast datapath.
+
+`qr_blockfp_call` — int32 block-fixed-point datapath (the TPU path)
+    The tile holds int32 significands quantized once, outside the kernel,
+    with one shared exponent per (matrix, column) — Givens rotations only
+    ever combine same-column elements of two rows, so per-column block-FP
+    scaling is invariant under the whole schedule.  Rows stay fixed-point
+    across *all* rotation steps: no per-step FP round-trips at all, a
+    single FP decode after the kernel returns.  Arithmetic is the fused
+    int32 pipeline of `cordic_givens` (w ≤ 30 bits, Q30 gain compensation),
+    so every intermediate fits the VPU's native int32 lanes.
+
+Schedules are static tuples of `(pivot_row, target_row, col)` triples
+(column-major `givens_schedule` or the Sameh–Kuck parallel pairing from
+`repro.core.qrd`), unrolled at trace time — the kernel body is a straight
+line of micro-rotation recurrences, exactly like the FPGA pipeline.
+
+VMEM budget (DESIGN.md §5): one (TILE_B, m, e) tile per operand/result —
+int64 packed: 2·8·m·e·8 bytes; int32 block-FP: 2·8·m·e·4 bytes.  A 64×128
+augmented tall-skinny tile in block-FP is 8·64·192·4 ≈ 393 KiB ·2, well
+inside the ~16 MiB VMEM of a TPU core.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.givens import GivensConfig, GivensUnit
+from .cordic_givens import TILE_B, comp_q30, fused_rotate_block
+
+__all__ = ["qr_packed_call", "qr_blockfp_call", "TILE_B"]
+
+
+# ---------------------------------------------------------------------------
+# Bit-exact packed-word kernel
+# ---------------------------------------------------------------------------
+def _qr_packed_kernel(p_ref, o_ref, *, cfg: GivensConfig, steps):
+    """Triangularize the resident (TB, m, e) tile of packed FP words.
+
+    Replays `qr_cordic`'s per-step dataflow with the identical `GivensUnit`
+    arithmetic, so the output words match the reference loop bit for bit.
+    """
+    unit = GivensUnit(cfg)
+    P = p_ref[...]                       # (TB, m, e) int64 packed words
+    for (k, j, col) in steps:
+        rx, ry = unit.rotate_rows(P[:, k, col:], P[:, j, col:])
+        ry = ry.at[:, 0].set(0)          # structural zero (systolic array)
+        P = P.at[:, k, col:].set(rx)
+        P = P.at[:, j, col:].set(ry)
+    o_ref[...] = P
+
+
+def qr_packed_call(P, *, cfg: GivensConfig, steps, interpret: bool = True,
+                   tile_b: int = TILE_B):
+    """Blocked QR over packed FP words, one grid cell per TILE_B matrices.
+
+    Parameters
+    ----------
+    P : (B, m, e) int64
+        Packed FP words of the augmented working matrices ([A | I] rows for
+        a full QRD).  ``B`` must be a multiple of ``tile_b`` (`ops.py`
+        pads).
+    cfg : GivensConfig
+        Static unit configuration (format, N, iters, HUB flags).
+    steps : tuple[(int, int, int), ...]
+        Static rotation schedule ``(pivot_row, target_row, col)``.
+    interpret : bool
+        int64 lanes + in-kernel converters: interpret mode only today.
+
+    Returns
+    -------
+    (B, m, e) int64 — the triangularized packed working matrices.
+    """
+    B, m, e = P.shape
+    assert B % tile_b == 0
+    grid = (B // tile_b,)
+    spec = pl.BlockSpec((tile_b, m, e), lambda b: (b, 0, 0))
+    kernel = functools.partial(_qr_packed_kernel, cfg=cfg, steps=tuple(steps))
+    return pl.pallas_call(
+        kernel, grid=grid,
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B, m, e), jnp.int64),
+        interpret=interpret,
+    )(P)
+
+
+# ---------------------------------------------------------------------------
+# int32 block-fixed-point kernel (significand-resident fast path)
+# ---------------------------------------------------------------------------
+def _qr_blockfp_kernel(x_ref, o_ref, *, iters: int, hub: bool, comp: int,
+                       steps):
+    X = x_ref[...]                       # (TB, m, e) int32 significands
+    for (k, j, col) in steps:
+        rx, ry = fused_rotate_block(X[:, k, col:], X[:, j, col:],
+                                    iters=iters, hub=hub, comp=comp)
+        ry = ry.at[:, 0].set(0)
+        X = X.at[:, k, col:].set(rx)
+        X = X.at[:, j, col:].set(ry)
+    o_ref[...] = X
+
+
+def qr_blockfp_call(X, *, iters: int, hub: bool, steps,
+                    interpret: bool = True, tile_b: int = TILE_B):
+    """Blocked QR over int32 block-FP significands (single decode at end).
+
+    Parameters
+    ----------
+    X : (B, m, e) int32
+        Significands with F fraction bits, one shared exponent per
+        (matrix, column) — see `ops.givens_block_apply` for the
+        quantization.  |X| ≤ 2^F on entry; the two CORDIC growth bits plus
+        column-norm accumulation (≤ √m) must keep intermediates inside
+        int32, so F = 24 supports m up to ~64.
+    iters, hub : static CORDIC depth and HUB/conventional arithmetic.
+    steps : static (pivot, target, col) schedule.
+
+    Returns
+    -------
+    (B, m, e) int32 — triangularized significands (same per-column scale).
+    """
+    B, m, e = X.shape
+    assert B % tile_b == 0 and iters <= 30
+    grid = (B // tile_b,)
+    spec = pl.BlockSpec((tile_b, m, e), lambda b: (b, 0, 0))
+    kernel = functools.partial(_qr_blockfp_kernel, iters=iters, hub=hub,
+                               comp=comp_q30(iters), steps=tuple(steps))
+    return pl.pallas_call(
+        kernel, grid=grid,
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B, m, e), jnp.int32),
+        interpret=interpret,
+    )(X)

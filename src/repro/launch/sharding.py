@@ -27,7 +27,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from .mesh import data_axes, dp_size
 
 __all__ = ["param_specs", "opt_specs", "batch_specs", "cache_specs",
-           "to_shardings"]
+           "to_shardings", "qrd_batch_spec", "shard_qrd_batch"]
 
 _FSDP = "__fsdp__"  # placeholder resolved to the mesh's data axes
 
@@ -208,6 +208,28 @@ def cache_specs(cache_struct, mesh):
         return P(*resolved)
 
     return jax.tree_util.tree_map_with_path(one, cache_struct)
+
+
+def qrd_batch_spec(ndim, batch, mesh) -> P:
+    """PartitionSpec for a batched QRD operand: batch axis over data axes.
+
+    A batch of (tall-skinny) matrices ``(batch, m, n)`` is embarrassingly
+    parallel over the leading axis — each device triangularizes its local
+    shard with the kernel-resident blocked QR and no collectives are
+    needed.  The matrix axes stay replicated (a single m x n tile lives in
+    one core's VMEM); falls back to full replication when the data-axis
+    product doesn't divide the batch (jit arguments need exact
+    divisibility).
+    """
+    fsdp = data_axes(mesh)
+    lead = fsdp if batch % dp_size(mesh) == 0 else None
+    return P(lead, *([None] * (ndim - 1)))
+
+
+def shard_qrd_batch(A, mesh):
+    """Place a (batch, m, n) array with its batch axis sharded on `mesh`."""
+    spec = qrd_batch_spec(A.ndim, A.shape[0], mesh)
+    return jax.device_put(A, NamedSharding(mesh, spec))
 
 
 def to_shardings(spec_tree, mesh):

@@ -1,6 +1,9 @@
 """Input/output converter properties (block-FP <-> packed FP)."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev extra: see requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import SINGLE, encode_hub, encode_ieee

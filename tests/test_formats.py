@@ -1,6 +1,7 @@
 """Codec properties: packed IEEE-like and HUB formats."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="dev extra: see requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (HALF, SINGLE, DOUBLE, decode_hub, decode_ieee,

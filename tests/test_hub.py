@@ -1,5 +1,8 @@
 """HUB numerics-primitive layer properties (hypothesis)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev extra: see requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import hub_quantize, hub_error_bound

@@ -5,6 +5,7 @@ import time
 import numpy as np
 import jax.numpy as jnp
 import pytest
+pytest.importorskip("hypothesis", reason="dev extra: see requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import CheckpointManager, latest_step, save_pytree, restore_pytree

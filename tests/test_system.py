@@ -95,7 +95,7 @@ import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 import repro  # enables x64
-from repro.optim.compress import compressed_psum
+from repro.optim.compress import compressed_psum, shard_map_compat
 
 mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
 
@@ -105,8 +105,7 @@ x = jnp.arange(16, dtype=jnp.float32).reshape(2, 8) / 7.0
 def f(x):
     return compressed_psum({"g": x}, "pod")["g"]
 
-out = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("pod", None),
-                            out_specs=P("pod", None), check_vma=False))(x)
+out = jax.jit(shard_map_compat(f, mesh, P("pod", None), P("pod", None)))(x)
 expect = jnp.broadcast_to(jnp.mean(x, axis=0, keepdims=True), x.shape)
 err = float(jnp.max(jnp.abs(out - expect)))
 amax = float(jnp.max(jnp.abs(x)))
