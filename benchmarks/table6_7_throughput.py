@@ -13,11 +13,16 @@ pipeline) and the Pallas-kernel (interpret mode) rotations/s.
 """
 from __future__ import annotations
 
+import json
+import os
+import time
+
 import numpy as np
 
 from .common import csv_row, timed
 
 E = 8  # elements per row (4x4 QRD with Q, as in the paper)
+BENCH_JSON = os.environ.get("REPRO_BENCH_QRD_JSON", "BENCH_qrd.json")
 
 DESIGNS = {
     # name: (fmax MHz, latency cycles, II(e) lambda)
@@ -43,28 +48,59 @@ def measured_kernel_rate(batch=512, L=128, iters=24):
     return batch / sec
 
 
-def measured_qrd_rates(batch=64, m=4):
-    """Full 4x4 QRD throughput: per-step reference loop vs the
-    kernel-resident blocked engines (DESIGN.md §5).
+def measured_qrd_rates(batch=64, m=4,
+                       combos=(("cordic", "col"),
+                               ("cordic_pallas", "col"),
+                               ("cordic_pallas", "sameh_kuck"),
+                               ("blockfp_pallas", "col"),
+                               ("blockfp_pallas", "sameh_kuck"))):
+    """Full m x m QRD throughput across backends *and* schedules.
 
-    The architectural delta: the 'cordic' loop makes 2·steps HBM passes
-    over the working set (one read + one write per rotation launch); the
-    blocked kernels make exactly 2 (stage in, write back).
+    Two architectural axes (DESIGN.md §5, §8):
+
+    - HBM passes: the 'cordic' loop makes 2·steps passes over the working
+      set (one read + one write per rotation launch); every blocked kernel
+      makes exactly 2 (stage in, write back).
+    - Sequential depth: the step-serial blocked kernels run ``steps``
+      dependent rotations; with ``schedule='sameh_kuck'`` the Pallas
+      backends route onto the wavefront datapath and run ``stages``
+      dependent scan iterations — min(m + n − 2, 2m − 3) instead of
+      m·n/2-ish.
+
+    Returns ``{f"{backend}/{schedule}": record}`` where each record holds
+    the steady-state rate (``qrd_per_s``), the cold first-call wall time
+    including trace + compile (``end_to_end_s`` — the wavefront's biggest
+    win: its trace is one stage body, not the unrolled schedule), and the
+    depth/pass accounting.
     """
+    import jax
     import jax.numpy as jnp
-    from repro.core import GivensConfig, QRDEngine
+    from repro.core import (GivensConfig, QRDEngine, givens_schedule,
+                            sameh_kuck_schedule)
 
     rng = np.random.default_rng(0)
     A = jnp.asarray(rng.choice([-1.0, 1.0], (batch, m, m))
                     * np.exp2(rng.uniform(-4, 4, (batch, m, m))))
-    steps = m * (m - 1) // 2
+    steps = len(givens_schedule(m, m))
+    stages = len(sameh_kuck_schedule(m, m))
     cfg = GivensConfig(hub=True, n=26)
     out = {}
-    for backend in ("cordic", "cordic_pallas", "blockfp_pallas"):
-        eng = QRDEngine(backend=backend, givens_config=cfg)
+    for backend, sched in combos:
+        eng = QRDEngine(backend=backend, givens_config=cfg, schedule=sched)
+        t0 = time.perf_counter()
+        jax.block_until_ready(eng(A))
+        cold = time.perf_counter() - t0
         sec = timed(lambda: eng(A))
-        passes = 2 * steps if backend == "cordic" else 2
-        out[backend] = (batch / sec, passes)
+        wavefront = sched == "sameh_kuck" and backend != "cordic"
+        out[f"{backend}/{sched}"] = {
+            "backend": backend, "schedule": sched,
+            "batch": batch, "m": m,
+            "qrd_per_s": batch / sec,
+            "end_to_end_s": cold,
+            "steps": steps, "stages": stages,
+            "seq_depth": stages if wavefront else steps,
+            "hbm_passes_per_qrd": 2 * steps if backend == "cordic" else 2,
+        }
     return out
 
 
@@ -83,18 +119,60 @@ def main(full=False):
                  ("hub_fp_rotator", 8463)]:
         print(f"{n},double,{l}")
 
-    print("# blocked QRD engines: backend,qrd_per_s,hbm_passes_per_qrd")
-    qrd = measured_qrd_rates()
-    for backend, (qps, passes) in qrd.items():
-        print(f"{backend},{qps:.1f},{passes}")
+    hdr = ("backend/schedule,qrd_per_s,end_to_end_s,seq_depth,steps,"
+           "stages,hbm_passes_per_qrd")
+    print(f"# blocked QRD engines (4x4): {hdr}")
+    qrd = measured_qrd_rates(m=4)
+    for key, r in qrd.items():
+        print(f"{key},{r['qrd_per_s']:.1f},{r['end_to_end_s']:.3f},"
+              f"{r['seq_depth']},{r['steps']},{r['stages']},"
+              f"{r['hbm_passes_per_qrd']}")
+
+    # The wavefront acceptance point (ISSUE 2): batched 8x8 QRD with Q —
+    # the sequential blocked path's trace unrolls all 28 steps, the
+    # wavefront scans 13 stages.
+    print(f"# blocked QRD engines (8x8): {hdr}")
+    qrd8 = measured_qrd_rates(m=8, combos=(("blockfp_pallas", "col"),
+                                           ("blockfp_pallas", "sameh_kuck")))
+    for key, r in qrd8.items():
+        print(f"{key},{r['qrd_per_s']:.1f},{r['end_to_end_s']:.3f},"
+              f"{r['seq_depth']},{r['steps']},{r['stages']},"
+              f"{r['hbm_passes_per_qrd']}")
+    speedup_8x8 = (qrd8["blockfp_pallas/col"]["end_to_end_s"]
+                   / qrd8["blockfp_pallas/sameh_kuck"]["end_to_end_s"])
+    print(f"# wavefront 8x8 end-to-end speedup vs sequential blocked: "
+          f"{speedup_8x8:.1f}x")
 
     rate = measured_kernel_rate()
+    write_bench_json(qrd, qrd8, speedup_8x8, rate)
     csv_row("table6_7_throughput", 1e6 / rate,
             f"model_speedup_vs_[32]={ours/gen:.1f}x;"
             f"pallas_interp_rot_per_s={rate:.0f};"
-            f"qrd_loop_per_s={qrd['cordic'][0]:.1f};"
-            f"qrd_blocked_per_s={qrd['cordic_pallas'][0]:.1f};"
-            f"qrd_blockfp_per_s={qrd['blockfp_pallas'][0]:.1f}")
+            f"qrd_loop_per_s={qrd['cordic/col']['qrd_per_s']:.1f};"
+            f"qrd_blocked_per_s={qrd['cordic_pallas/col']['qrd_per_s']:.1f};"
+            f"qrd_blockfp_per_s="
+            f"{qrd['blockfp_pallas/col']['qrd_per_s']:.1f};"
+            f"wavefront_8x8_speedup={speedup_8x8:.1f}x")
+
+
+def write_bench_json(qrd4, qrd8, speedup_8x8, rot_per_s, path=BENCH_JSON):
+    """Emit the machine-readable perf trajectory (BENCH_qrd.json).
+
+    One record per (backend, schedule, m): steady-state qrd/s, cold
+    end-to-end seconds (trace + compile + run), sequential depth (steps
+    vs stages) and HBM passes — the numbers future PRs diff against.
+    """
+    doc = {
+        "bench": "table6_7_throughput",
+        "interpret_mode": True,
+        "rotations_per_s": rot_per_s,
+        "results": {**{f"{k} (4x4)": v for k, v in qrd4.items()},
+                    **{f"{k} (8x8)": v for k, v in qrd8.items()}},
+        "wavefront_8x8_end_to_end_speedup": speedup_8x8,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    print(f"# wrote {path}")
 
 
 if __name__ == "__main__":

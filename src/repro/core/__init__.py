@@ -6,6 +6,7 @@ from .formats import (FloatFormat, HALF, SINGLE, DOUBLE,
                       encode_ieee, decode_ieee, encode_hub, decode_hub)
 from .givens import GivensConfig, GivensUnit
 from .qrd import (QRDEngine, qr_cordic, qr_cordic_pallas, qr_blockfp_pallas,
+                  qr_cordic_wavefront, qr_blockfp_wavefront,
                   qr_blocked_sharded, qr_givens_float, qr_jnp, qr_fixed,
                   snr_db, givens_schedule, sameh_kuck_schedule)
 from .hub import hub_quantize, hub_error_bound
@@ -16,6 +17,7 @@ __all__ = [
     "encode_ieee", "decode_ieee", "encode_hub", "decode_hub",
     "GivensConfig", "GivensUnit",
     "QRDEngine", "qr_cordic", "qr_cordic_pallas", "qr_blockfp_pallas",
+    "qr_cordic_wavefront", "qr_blockfp_wavefront",
     "qr_blocked_sharded", "qr_givens_float", "qr_jnp", "qr_fixed",
     "snr_db", "givens_schedule", "sameh_kuck_schedule",
     "hub_quantize", "hub_error_bound",

@@ -27,7 +27,7 @@ spatial/multi-unit implementation would use.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from functools import lru_cache
 
 import jax
 import jax.numpy as jnp
@@ -37,49 +37,55 @@ from . import cordic
 from .givens import GivensConfig, GivensUnit
 
 __all__ = ["qr_cordic", "qr_cordic_pallas", "qr_blockfp_pallas",
+           "qr_cordic_wavefront", "qr_blockfp_wavefront",
            "qr_givens_float", "qr_jnp", "qr_fixed", "qr_blocked_sharded",
            "QRDEngine", "snr_db", "givens_schedule", "sameh_kuck_schedule"]
 
 
+@lru_cache(maxsize=None)
 def givens_schedule(m: int, n: int):
-    """Column-major zeroing order for an m x n matrix.
+    """Column-major zeroing order for an m x n matrix (memoized).
 
     Returns
     -------
-    list[(int, int, int)]
+    tuple[(int, int, int), ...]
         ``(pivot_row, target_row, col)`` triples: entry ``(target_row,
         col)`` is annihilated against the diagonal row ``col``, one column
         at a time.  This is the order the reference loop and the blocked
-        kernels share.
+        kernels share.  The tuple is hashable (a jit static) and cached
+        per ``(m, n)``, so repeated engine calls reuse one object.
     """
-    steps = []
-    for k in range(min(m - 1, n)):
-        for j in range(k + 1, m):
-            steps.append((k, j, k))
-    return steps
+    return tuple((k, j, k)
+                 for k in range(min(m - 1, n))
+                 for j in range(k + 1, m))
 
 
+@lru_cache(maxsize=None)
 def sameh_kuck_schedule(m: int, n: int):
     """Sameh–Kuck parallel pairing schedule [Sameh & Kuck, JACM 1978].
 
     Entry ``(r, c)`` is annihilated against the *adjacent* row ``r - 1`` at
     stage ``(m - 1 - r) + 2 c``; all rotations within a stage touch
-    disjoint row pairs, so a spatial array of rotators (or a wide vector
-    unit) executes each stage fully in parallel.
+    disjoint row pairs, so a spatial array of rotators (or the wavefront
+    kernels' pair axis, DESIGN.md §8) executes each stage fully in
+    parallel.  The stage count is ``min(m + n - 2, 2 m - 3)`` — the
+    sequential depth of the wavefront path, vs ``len(givens_schedule)``
+    dependent rotations for the step-serial path.
 
     Returns
     -------
-    list[list[(int, int, int)]]
-        One inner list of ``(pivot_row, target_row, col)`` triples per
-        stage.  Flatten (``sum(stages, [])``) for engines that consume a
-        sequential order — within-stage rotations commute, so any
-        flattening of the stage order gives identical results.
+    tuple[tuple[(int, int, int), ...], ...]
+        One inner tuple of ``(pivot_row, target_row, col)`` triples per
+        stage (hashable — usable as a jit static; memoized per
+        ``(m, n)``).  Flatten for engines that consume a sequential order
+        — within-stage rotations commute, so any flattening of the stage
+        order gives identical results.
     """
     stages: dict[int, list] = {}
     for c in range(min(m - 1, n)):
         for r in range(m - 1, c, -1):
             stages.setdefault((m - 1 - r) + 2 * c, []).append((r - 1, r, c))
-    return [stages[t] for t in sorted(stages)]
+    return tuple(tuple(stages[t]) for t in sorted(stages))
 
 
 def _split_qr(out, m, n, compute_q):
@@ -231,15 +237,92 @@ def qr_blockfp_pallas(A, compute_q=True, iters=24, hub=True, frac=24,
     return _split_qr(out, m, n, compute_q)
 
 
+def _as_stages(m, n, stages):
+    """Normalize a stage schedule to a hashable tuple-of-tuples static."""
+    if stages is None:
+        return sameh_kuck_schedule(m, n)
+    return tuple(tuple(st) for st in stages)
+
+
+def qr_cordic_wavefront(A, unit: GivensUnit, compute_q=True, stages=None,
+                        interpret=None):
+    """Wavefront kernel-resident QRD: one scan step per Sameh–Kuck stage.
+
+    The stage-parallel counterpart of `qr_cordic_pallas` (DESIGN.md §8):
+    all rotations of a stage — their row pairs are disjoint by construction
+    — run in one shot along a (TILE_B, Pmax, e) pair axis, so the
+    sequential depth collapses from ``len(steps)`` dependent rotations to
+    ``len(stages)`` scan iterations, and the trace holds one stage body
+    instead of the whole unrolled schedule.  (Q, R) are bit-identical to
+    `qr_cordic` on the flattened stage schedule (same `GivensUnit`
+    arithmetic; within-stage rotations commute).
+
+    Parameters
+    ----------
+    A : (..., m, n) array_like
+        Batch of input matrices (converted to float64).
+    unit : GivensUnit
+        The configured rotator; its frozen config is a static kernel
+        parameter.
+    stages : sequence[sequence[(int, int, int)]], optional
+        Stage schedule; defaults to ``sameh_kuck_schedule(m, n)``.  Every
+        inner sequence's row pairs must be disjoint.
+
+    Returns
+    -------
+    (Q, R) : float64 arrays (Q is None when ``compute_q=False``).
+    """
+    from repro.kernels import ops as _kops
+    A = jnp.asarray(A, jnp.float64)
+    m, n = A.shape[-2], A.shape[-1]
+    P = unit.encode(_augment(A, compute_q))
+    Pout = _kops.qr_packed_wavefront(P, cfg=unit.cfg,
+                                     stages=_as_stages(m, n, stages),
+                                     interpret=interpret)
+    out = unit.decode(Pout)
+    return _split_qr(out, m, n, compute_q)
+
+
+def qr_blockfp_wavefront(A, compute_q=True, iters=24, hub=True, frac=24,
+                         stages=None, interpret=None):
+    """Wavefront blocked QRD on the int32 block-FP kernel (fastest path).
+
+    `qr_blockfp_pallas` with the step-serial schedule replaced by the
+    Sameh–Kuck stage tables: quantize once, rotate every stage's disjoint
+    row pairs in one shot, decode once (DESIGN.md §8).  Bit-identical to
+    `qr_blockfp_pallas` on the flattened stage schedule; accuracy is that
+    of the F-fraction-bit block-FP datapath, as for the sequential path.
+
+    Parameters
+    ----------
+    A : (..., m, n) array_like
+        Batch of input matrices (``frac=24`` supports m up to ~64).
+    stages : sequence[sequence[(int, int, int)]], optional
+        Stage schedule; defaults to ``sameh_kuck_schedule(m, n)``.
+
+    Returns
+    -------
+    (Q, R) : float64 arrays (Q is None when ``compute_q=False``).
+    """
+    from repro.kernels import ops as _kops
+    A = jnp.asarray(A, jnp.float64)
+    m, n = A.shape[-2], A.shape[-1]
+    work = _augment(A, compute_q)
+    out = _kops.givens_block_apply_wavefront(
+        work, _as_stages(m, n, stages), iters=iters, hub=hub, frac=frac,
+        interpret=interpret)
+    return _split_qr(out, m, n, compute_q)
+
+
 def qr_blocked_sharded(A, unit: GivensUnit, mesh, compute_q=True,
-                       steps=None, interpret=None):
+                       steps=None, interpret=None, schedule="col"):
     """Batch-sharded kernel-resident QRD (the tall-skinny scaling path).
 
     Places the leading batch axis of ``A`` across the mesh's data axes
-    (`repro.launch.sharding.shard_qrd_batch`) and runs `qr_cordic_pallas`;
-    under jit the per-device kernels each triangularize their local batch
-    shard — QRD is embarrassingly parallel over the batch, so no collective
-    is needed until the caller combines results.
+    (`repro.launch.sharding.shard_qrd_batch`) and runs the kernel-resident
+    QRD; under jit the per-device kernels each triangularize their local
+    batch shard — QRD is embarrassingly parallel over the batch, so no
+    collective is needed until the caller combines results.
 
     Parameters
     ----------
@@ -247,6 +330,12 @@ def qr_blocked_sharded(A, unit: GivensUnit, mesh, compute_q=True,
     mesh : jax.sharding.Mesh
         Mesh with a "model" axis and one or more data axes (see
         `repro.launch.mesh`).
+    schedule : str
+        ``'col'`` runs the step-serial `qr_cordic_pallas`;
+        ``'sameh_kuck'`` runs the wavefront `qr_cordic_wavefront` — each
+        device's kernel rotates whole stages at once, and the stage index
+        tables are replicated across the mesh
+        (`repro.launch.sharding.qrd_stage_table_spec`).
 
     Returns
     -------
@@ -254,6 +343,15 @@ def qr_blocked_sharded(A, unit: GivensUnit, mesh, compute_q=True,
     """
     from repro.launch import sharding as _sh
     A = _sh.shard_qrd_batch(jnp.asarray(A, jnp.float64), mesh)
+    if schedule == "sameh_kuck":
+        if steps is not None:
+            raise ValueError("steps= is the step-serial schedule; the "
+                             "wavefront path takes stage schedules — call "
+                             "qr_cordic_wavefront(stages=...) directly")
+        return qr_cordic_wavefront(A, unit, compute_q=compute_q,
+                                   interpret=interpret)
+    if schedule != "col":
+        raise ValueError(f"unknown schedule {schedule!r}")
     return qr_cordic_pallas(A, unit, compute_q=compute_q, steps=steps,
                             interpret=interpret)
 
@@ -372,13 +470,22 @@ class QRDEngine:
         backends; ``'blockfp_pallas'`` uses its ``hub`` flag and resolved
         iteration count.
     schedule : str
-        ``'col'`` (column-major) or ``'sameh_kuck'`` (parallel pairing,
-        flattened) — applies to the cordic-family and blockfp backends.
+        ``'col'`` (column-major) or ``'sameh_kuck'`` (parallel pairing).
+        Applies to the cordic-family and blockfp backends.  With
+        ``'sameh_kuck'`` the Pallas backends route onto the **wavefront
+        datapath** (`qr_cordic_wavefront` / `qr_blockfp_wavefront`,
+        DESIGN.md §8): every stage's disjoint rotations run in one shot,
+        bit-identical to the flattened schedule on the reference loop; the
+        ``'cordic'`` loop consumes the flattened stage order.
     fixed_width, fixed_iters, fixed_scale_exp : int
         Parameters of the ``'fixed'`` baseline.
 
     Call with ``engine(A, compute_q=...)`` where ``A`` is ``(..., m, n)``;
     returns ``(Q, R)`` float arrays (Q is None when ``compute_q=False``).
+    The engine memoizes one jitted callable per ``(m, n, compute_q,
+    config)`` — repeated calls on same-shaped batches re-trace nothing,
+    and mutating ``backend``/``schedule``/``givens_config`` between calls
+    misses the cache rather than returning stale results.
     """
 
     backend: str = "jnp"
@@ -388,9 +495,24 @@ class QRDEngine:
     fixed_iters: int = 27
     fixed_scale_exp: int = 0
 
+    _BACKENDS = ("jnp", "givens_float", "cordic", "cordic_pallas",
+                 "blockfp_pallas", "fixed")
+
     def __post_init__(self):
-        self._unit = (GivensUnit(self.givens_config)
-                      if self.backend in ("cordic", "cordic_pallas") else None)
+        # fail at construction, not first call: bad backend/schedule names
+        # and invalid unit configs should not surface deep inside a run
+        if self.backend not in self._BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}")
+        if self.schedule not in ("col", "sameh_kuck"):
+            raise ValueError(f"unknown schedule {self.schedule!r}")
+        if self.backend in ("cordic", "cordic_pallas"):
+            self.givens_config.validate()
+        self._fn_cache = {}
+
+    def _config_key(self):
+        """Everything dispatch depends on — field mutation misses the cache."""
+        return (self.backend, self.schedule, self.givens_config,
+                self.fixed_width, self.fixed_iters, self.fixed_scale_exp)
 
     def _steps(self, m, n):
         if self.schedule == "col":
@@ -400,28 +522,56 @@ class QRDEngine:
                          for s in stage)
         raise ValueError(f"unknown schedule {self.schedule!r}")
 
+    def _build(self, m, n, compute_q):
+        """One jitted (A) -> (Q, R) callable for this (m, n, compute_q)."""
+        backend, cfg = self.backend, self.givens_config
+        wavefront = self.schedule == "sameh_kuck"
+        if backend == "cordic":
+            unit, steps = GivensUnit(cfg), self._steps(m, n)
+            fn = lambda A: qr_cordic(A, unit, compute_q=compute_q,
+                                     steps=steps)
+        elif backend == "cordic_pallas":
+            unit = GivensUnit(cfg)
+            if wavefront:
+                stages = sameh_kuck_schedule(m, n)
+                fn = lambda A: qr_cordic_wavefront(
+                    A, unit, compute_q=compute_q, stages=stages)
+            else:
+                steps = self._steps(m, n)
+                fn = lambda A: qr_cordic_pallas(
+                    A, unit, compute_q=compute_q, steps=steps)
+        elif backend == "blockfp_pallas":
+            iters = cfg.resolved_iters()
+            if wavefront:
+                stages = sameh_kuck_schedule(m, n)
+                fn = lambda A: qr_blockfp_wavefront(
+                    A, compute_q=compute_q, hub=cfg.hub, iters=iters,
+                    stages=stages)
+            else:
+                steps = self._steps(m, n)
+                fn = lambda A: qr_blockfp_pallas(
+                    A, compute_q=compute_q, hub=cfg.hub, iters=iters,
+                    steps=steps)
+        elif backend == "givens_float":
+            fn = lambda A: qr_givens_float(A, compute_q=compute_q)
+        elif backend == "jnp":
+            fn = qr_jnp
+        elif backend == "fixed":
+            fn = lambda A: qr_fixed(A, self.fixed_width, self.fixed_iters,
+                                    self.fixed_scale_exp,
+                                    compute_q=compute_q)
+        else:
+            raise ValueError(f"unknown backend {self.backend!r}")
+        return jax.jit(fn)
+
     def __call__(self, A, compute_q=True):
         A = jnp.asarray(A)
         m, n = A.shape[-2], A.shape[-1]
-        if self.backend == "cordic":
-            return qr_cordic(A, self._unit, compute_q=compute_q,
-                             steps=self._steps(m, n))
-        if self.backend == "cordic_pallas":
-            return qr_cordic_pallas(A, self._unit, compute_q=compute_q,
-                                    steps=self._steps(m, n))
-        if self.backend == "blockfp_pallas":
-            cfg = self.givens_config
-            return qr_blockfp_pallas(A, compute_q=compute_q, hub=cfg.hub,
-                                     iters=cfg.resolved_iters(),
-                                     steps=self._steps(m, n))
-        if self.backend == "givens_float":
-            return qr_givens_float(A, compute_q=compute_q)
-        if self.backend == "jnp":
-            return qr_jnp(A)
-        if self.backend == "fixed":
-            return qr_fixed(A, self.fixed_width, self.fixed_iters,
-                            self.fixed_scale_exp, compute_q=compute_q)
-        raise ValueError(f"unknown backend {self.backend!r}")
+        key = (m, n, bool(compute_q)) + self._config_key()
+        fn = self._fn_cache.get(key)
+        if fn is None:
+            fn = self._fn_cache[key] = self._build(m, n, bool(compute_q))
+        return fn(A)
 
 
 def snr_db(A, Q, R):

@@ -34,7 +34,8 @@ from jax.experimental import pallas as pl
 from repro.core.cordic import GAIN_TABLE
 
 __all__ = ["vectoring_call", "rotation_call", "fused_call",
-           "fused_rotate_block", "comp_q30", "TILE_B", "TILE_L"]
+           "fused_rotate_block", "fused_rotate_pairs", "comp_q30",
+           "TILE_B", "TILE_L"]
 
 TILE_B = 8     # sublane tile (int32 native tile is (8, 128))
 TILE_L = 128   # lane tile
@@ -195,6 +196,50 @@ def fused_rotate_block(x, y, *, iters: int, hub: bool, comp: int):
     y = jnp.where(flip, _negate(y, hub), y)
     for i in range(iters):
         d_pos = ((sig >> i) & 1) == 1
+        x, y = _microrotation(x, y, i, d_pos, hub)
+    return _gain_mul_q30(x, comp), _gain_mul_q30(y, comp)
+
+
+def fused_rotate_pairs(x, y, lead, *, iters: int, hub: bool, comp: int):
+    """Fused Givens step on a whole *pair axis* of resident row blocks.
+
+    The wavefront variant of `fused_rotate_block` (DESIGN.md §8): instead
+    of one (TB, L) row pair with its leading element at lane 0, the inputs
+    carry a full Sameh–Kuck stage — ``x``/``y`` are (TB, P, e) pivot/target
+    rows at *uniform* width e, and ``lead`` is the (P, e) 0/1 one-hot of
+    each pair's leading column (the annihilated entry's column).  The
+    leading pair is extracted by the one-hot contraction, vectoring derives
+    one (flip, sigma) control word per (batch, pair) lane, and the replay
+    broadcasts it across the whole e axis — every pair of the stage rotates
+    in one shot.
+
+    Column masking is the caller's job: lanes left of the leading column
+    are rotated here too (uniform shape keeps the datapath wide) and must
+    be restored from the inputs afterwards — they belong to earlier,
+    already-annihilated columns, which the sequential path never touches.
+
+    Replaying sigma on the leading column itself reproduces the vectoring
+    result bit for bit (same micro-rotation sequence), so each pair's lanes
+    at and right of `lead` match `fused_rotate_block` on the ragged slice
+    exactly.
+    """
+    sel = lead[None].astype(x.dtype)                 # (1, P, e) 0/1
+    # dtype-pinned sums: default integer accumulation widens to int64
+    xl = jnp.sum(x * sel, axis=-1, dtype=x.dtype)    # (TB, P) leading pair
+    yl = jnp.sum(y * sel, axis=-1, dtype=y.dtype)
+    flip = xl < 0
+    xl = jnp.where(flip, _negate(xl, hub), xl)
+    yl = jnp.where(flip, _negate(yl, hub), yl)
+    sig = jnp.zeros_like(xl)
+    for i in range(iters):
+        d_pos = yl < 0
+        xl, yl = _microrotation(xl, yl, i, d_pos, hub)
+        sig = sig | (d_pos.astype(jnp.int32) << i)
+    fb = flip[..., None]                             # (TB, P, 1) -> e lanes
+    x = jnp.where(fb, _negate(x, hub), x)
+    y = jnp.where(fb, _negate(y, hub), y)
+    for i in range(iters):
+        d_pos = ((sig[..., None] >> i) & 1) == 1
         x, y = _microrotation(x, y, i, d_pos, hub)
     return _gain_mul_q30(x, comp), _gain_mul_q30(y, comp)
 

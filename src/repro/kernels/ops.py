@@ -14,12 +14,14 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import cordic_givens as k
 from . import qrd_blocked as qb
 
 __all__ = ["vectoring_fixed", "rotation_fixed", "givens_rotate_rows_fixed",
-           "givens_rotate_rows_fused", "qr_packed", "givens_block_apply"]
+           "givens_rotate_rows_fused", "qr_packed", "qr_packed_wavefront",
+           "givens_block_apply", "givens_block_apply_wavefront"]
 
 
 def _auto_interpret(interpret):
@@ -159,6 +161,99 @@ def qr_packed(P, *, cfg, steps, interpret=None, tile_b=qb.TILE_B):
     return out[:B].reshape(batch + (m, e))
 
 
+@functools.lru_cache(maxsize=None)
+def _stage_tables(stages, m):
+    """Stage index tables for the wavefront kernels (memoized).
+
+    stages : tuple[tuple[(pivot, target, col), ...], ...]
+        One inner tuple per Sameh–Kuck stage (`sameh_kuck_schedule`).
+    m : int
+        Row count of the working tile; padded pairs carry the out-of-range
+        row index ``m`` so their one-hot row selectors are all-zero — they
+        gather zero rows and scatter nothing (`qrd_blocked._stage_masks`).
+
+    Returns three (S, Pmax) int32 numpy arrays: pivot rows, target rows,
+    leading columns, one row per stage.  (numpy, not jnp: the memoized
+    tables are staged as fresh constants by each trace — caching device
+    arrays here would leak tracers across jit calls.)
+    """
+    S = len(stages)
+    Pmax = max(len(st) for st in stages)
+    piv = np.full((S, Pmax), m, np.int32)
+    tgt = np.full((S, Pmax), m, np.int32)
+    col = np.zeros((S, Pmax), np.int32)
+    for s, st in enumerate(stages):
+        rows = [r for (kk, jj, _) in st for r in (kk, jj)]
+        if len(rows) != len(set(rows)):  # racy scatter otherwise
+            raise ValueError(f"stage {s} rotations touch overlapping rows")
+        if not all(0 <= r < m for r in rows):  # would alias the padding
+            raise ValueError(f"stage {s} row index out of range for m={m}")
+        for p, (kk, jj, cc) in enumerate(st):
+            piv[s, p], tgt[s, p], col[s, p] = kk, jj, cc
+    piv.setflags(write=False)
+    tgt.setflags(write=False)
+    col.setflags(write=False)
+    return piv, tgt, col
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "stages", "interpret", "tile_b"))
+def qr_packed_wavefront(P, *, cfg, stages, interpret=None, tile_b=qb.TILE_B):
+    """Wavefront blocked QR over packed FP words (bit-exact path).
+
+    The stage-parallel counterpart of `qr_packed`: all rotations of each
+    Sameh–Kuck stage run in one shot along a pair axis, collapsing the
+    sequential depth from ``steps`` dependent rotations to ``len(stages)``
+    scan iterations (DESIGN.md §8).  Bit-identical to `qr_packed` on the
+    flattened stage schedule.
+
+    Parameters
+    ----------
+    P : (..., m, e) int64
+        Packed FP words of the augmented working matrices.
+    cfg : GivensConfig
+        Static unit configuration.
+    stages : tuple[tuple[(pivot, target, col), ...], ...]
+        Static stage schedule (`sameh_kuck_schedule(m, n)`); every inner
+        tuple's row pairs must be disjoint.
+
+    Returns
+    -------
+    (..., m, e) int64 — triangularized packed words.
+    """
+    interpret = _auto_interpret(interpret)
+    batch = P.shape[:-2]
+    m, e = P.shape[-2:]
+    piv, tgt, col = _stage_tables(stages, m)
+    Pf = P.astype(jnp.int64).reshape((-1,) + (m, e))
+    B = Pf.shape[0]
+    Pp = _pad_to(Pf, tile_b, 0)
+    out = qb.qr_packed_wavefront_call(Pp, piv, tgt, col, cfg=cfg,
+                                      interpret=interpret, tile_b=tile_b)
+    return out[:B].reshape(batch + (m, e))
+
+
+def _blockfp_encode(Wf, frac):
+    """float (B, m, e) -> int32 significands + per-(matrix, column) exponent.
+
+    One shared exponent per (matrix, column): amax in [2^(ex-1), 2^ex).
+    Valid under any Givens schedule — rotations only combine same-column
+    elements of two rows, so per-column scales are invariant.
+    """
+    amax = jnp.max(jnp.abs(Wf), axis=-2, keepdims=True)
+    _, ex = jnp.frexp(jnp.where(amax > 0, amax, 1.0))
+    ex = jnp.where(amax > 0, ex, 0)
+    # float64 exponent arithmetic: int32 `frac - ex` would promote exp2 to
+    # float32, which overflows/underflows for |amax| beyond ~2^±103
+    X = jnp.rint(Wf * jnp.exp2(jnp.asarray(frac - ex, jnp.float64))
+                 ).astype(jnp.int32)
+    return X, ex
+
+
+def _blockfp_decode(X, ex, frac):
+    return X.astype(jnp.float64) * jnp.exp2(ex.astype(jnp.float64) - frac)
+
+
 @functools.partial(jax.jit, static_argnames=("steps", "iters", "hub", "frac",
                                              "interpret", "tile_b"))
 def givens_block_apply(W, steps, *, iters=24, hub=True, frac=24,
@@ -193,19 +288,48 @@ def givens_block_apply(W, steps, *, iters=24, hub=True, frac=24,
     W = jnp.asarray(W, jnp.float64)
     batch = W.shape[:-2]
     m, e = W.shape[-2:]
-    Wf = W.reshape((-1, m, e))
-    # per-(matrix, column) shared exponent: amax in [2^(ex-1), 2^ex)
-    amax = jnp.max(jnp.abs(Wf), axis=-2, keepdims=True)
-    _, ex = jnp.frexp(jnp.where(amax > 0, amax, 1.0))
-    ex = jnp.where(amax > 0, ex, 0)
-    # float64 exponent arithmetic: int32 `frac - ex` would promote exp2 to
-    # float32, which overflows/underflows for |amax| beyond ~2^±103
-    X = jnp.rint(Wf * jnp.exp2(jnp.asarray(frac - ex, jnp.float64))
-                 ).astype(jnp.int32)
+    X, ex = _blockfp_encode(W.reshape((-1, m, e)), frac)
     B = X.shape[0]
     Xp = _pad_to(X, tile_b, 0)
     out = qb.qr_blockfp_call(Xp, iters=iters, hub=hub, steps=steps,
                              interpret=interpret, tile_b=tile_b)
-    Wout = out[:B].astype(jnp.float64) * jnp.exp2(ex.astype(jnp.float64)
-                                                  - frac)
-    return Wout.reshape(batch + (m, e))
+    return _blockfp_decode(out[:B], ex, frac).reshape(batch + (m, e))
+
+
+@functools.partial(jax.jit, static_argnames=("stages", "iters", "hub", "frac",
+                                             "interpret", "tile_b"))
+def givens_block_apply_wavefront(W, stages, *, iters=24, hub=True, frac=24,
+                                 interpret=None, tile_b=qb.TILE_B):
+    """Wavefront variant of `givens_block_apply` (the stage-parallel path).
+
+    Identical quantize-once / decode-once block-FP dataflow, but the step
+    schedule is replaced by Sameh–Kuck stage index tables: one scan
+    iteration rotates every disjoint row pair of a stage along a
+    (TILE_B, Pmax, e) pair axis (DESIGN.md §8).  Bit-identical to
+    `givens_block_apply` on the flattened stage schedule.
+
+    Parameters
+    ----------
+    W : (..., m, e) float
+        Working matrices.
+    stages : tuple[tuple[(pivot, target, col), ...], ...]
+        Static stage schedule; every inner tuple's row pairs must be
+        disjoint (`sameh_kuck_schedule`).
+    iters, hub, frac : as `givens_block_apply`.
+
+    Returns
+    -------
+    (..., m, e) float64 — the rotated working matrices.
+    """
+    interpret = _auto_interpret(interpret)
+    W = jnp.asarray(W, jnp.float64)
+    batch = W.shape[:-2]
+    m, e = W.shape[-2:]
+    piv, tgt, col = _stage_tables(stages, m)
+    X, ex = _blockfp_encode(W.reshape((-1, m, e)), frac)
+    B = X.shape[0]
+    Xp = _pad_to(X, tile_b, 0)
+    out = qb.qr_blockfp_wavefront_call(Xp, piv, tgt, col, iters=iters,
+                                       hub=hub, interpret=interpret,
+                                       tile_b=tile_b)
+    return _blockfp_decode(out[:B], ex, frac).reshape(batch + (m, e))

@@ -32,15 +32,30 @@ Two datapaths, one schedule machinery:
     int32 pipeline of `cordic_givens` (w ≤ 30 bits, Q30 gain compensation),
     so every intermediate fits the VPU's native int32 lanes.
 
-Schedules are static tuples of `(pivot_row, target_row, col)` triples
-(column-major `givens_schedule` or the Sameh–Kuck parallel pairing from
-`repro.core.qrd`), unrolled at trace time — the kernel body is a straight
-line of micro-rotation recurrences, exactly like the FPGA pipeline.
+Two schedule machineries (one per sequential-depth regime):
 
-VMEM budget (DESIGN.md §5): one (TILE_B, m, e) tile per operand/result —
-int64 packed: 2·8·m·e·8 bytes; int32 block-FP: 2·8·m·e·4 bytes.  A 64×128
-augmented tall-skinny tile in block-FP is 8·64·192·4 ≈ 393 KiB ·2, well
-inside the ~16 MiB VMEM of a TPU core.
+step-serial (`qr_packed_call` / `qr_blockfp_call`)
+    Schedules are static tuples of `(pivot_row, target_row, col)` triples
+    (column-major `givens_schedule` or a flattened Sameh–Kuck pairing from
+    `repro.core.qrd`), unrolled at trace time — the kernel body is a
+    straight line of micro-rotation recurrences, exactly like the FPGA
+    pipeline.  Depth: one dependent rotation per step.
+
+wavefront (`qr_packed_wavefront_call` / `qr_blockfp_wavefront_call`, §8)
+    The Sameh–Kuck schedule enters as (S, Pmax) stage index tables
+    consumed by `lax.scan`: each iteration gathers ALL row pairs of one
+    stage into two (TILE_B, Pmax, e) tensors, rotates the whole pair axis
+    in one shot (per-pair column masks replace the ragged `[col:]`
+    slices), and scatters the rows back.  Depth: one scan iteration per
+    stage — min(m+n−2, 2m−3) instead of ~m·n/2 — and the trace holds one
+    stage body instead of the unrolled schedule.
+
+VMEM budget (DESIGN.md §5, §8): one (TILE_B, m, e) tile per operand/result
+— int64 packed: 2·8·m·e·8 bytes; int32 block-FP: 2·8·m·e·4 bytes.  A
+64×128 augmented tall-skinny tile in block-FP is 8·64·192·4 ≈ 393 KiB ·2,
+well inside the ~16 MiB VMEM of a TPU core.  The wavefront path adds two
+(TILE_B, Pmax ≤ m/2, e) pair tensors per stage (≈ the tile itself) plus
+< 1 KiB of stage tables.
 """
 from __future__ import annotations
 
@@ -51,9 +66,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.givens import GivensConfig, GivensUnit
-from .cordic_givens import TILE_B, comp_q30, fused_rotate_block
+from .cordic_givens import (TILE_B, comp_q30, fused_rotate_block,
+                            fused_rotate_pairs)
 
-__all__ = ["qr_packed_call", "qr_blockfp_call", "TILE_B"]
+__all__ = ["qr_packed_call", "qr_blockfp_call", "qr_packed_wavefront_call",
+           "qr_blockfp_wavefront_call", "TILE_B"]
 
 
 # ---------------------------------------------------------------------------
@@ -123,6 +140,147 @@ def _qr_blockfp_kernel(x_ref, o_ref, *, iters: int, hub: bool, comp: int,
         X = X.at[:, k, col:].set(rx)
         X = X.at[:, j, col:].set(ry)
     o_ref[...] = X
+
+
+def _wavefront_scan(P, tables, stage_fn):
+    """Run `stage_fn` over every Sameh–Kuck stage of the resident tile.
+
+    P : (TB, m, e) resident working tile (packed int64 or block-FP int32).
+    tables : three (S, Pmax) int32 arrays — pivot rows, target rows,
+        leading columns, one row per stage, padded with ``piv = tgt = m``.
+    stage_fn : (X, Y, lead) -> (rx, ry) — the pair-axis rotation on the
+        gathered (TB, Pmax, e) pivot/target tensors, with `lead` the
+        (Pmax, e) one-hot of each pair's leading column.
+
+    One `lax.scan` iteration per stage: gather the stage's pivot and
+    target rows into two (TB, Pmax, e) pair tensors, rotate the whole pair
+    axis at uniform width e, restore the left-of-lead lanes from the
+    inputs (they belong to earlier, already-annihilated columns, which the
+    sequential path never touches), force the structural zero, and scatter
+    the rotated rows back.  The padding convention makes both transfers
+    total functions: padded pairs carry the out-of-range row index ``m``,
+    so the mode='fill' gather hands them all-zero rows (harmless through
+    the integer datapath) and the mode='drop' scatter discards their
+    updates — deterministically, since within a stage the real row indices
+    are disjoint by construction.  Sequential depth is the number of
+    stages, not the number of rotations.
+    """
+    TB, m, e = P.shape
+
+    def body(P, tab):
+        piv, tgt, col = tab
+        X = jnp.take(P, piv, axis=1, mode="fill", fill_value=0)
+        Y = jnp.take(P, tgt, axis=1, mode="fill", fill_value=0)
+        colid = jax.lax.broadcasted_iota(jnp.int32, (col.shape[0], e), 1)
+        lead = colid == col[:, None]
+        active = colid >= col[:, None]
+        rx, ry = stage_fn(X, Y, lead)
+        rx = jnp.where(active[None], rx, X)          # untouched left lanes
+        ry = jnp.where(active[None], ry, Y)
+        ry = jnp.where(lead[None], 0, ry)            # structural zero
+        P = P.at[:, piv, :].set(rx, mode="drop")
+        P = P.at[:, tgt, :].set(ry, mode="drop")
+        return P, None
+
+    P, _ = jax.lax.scan(body, P, tables)
+    return P
+
+
+def _qr_packed_wavefront_kernel(piv_ref, tgt_ref, col_ref, p_ref, o_ref,
+                                *, cfg: GivensConfig):
+    """Wavefront triangularization of the resident packed (TB, m, e) tile.
+
+    Same `GivensUnit` arithmetic as `_qr_packed_kernel`, but one scan step
+    per Sameh–Kuck *stage*: every pair of the stage runs the full
+    input-convert → vectoring → sigma-replay → gain → output-convert
+    dataflow along a (TB, P, e) pair axis.  Within-stage rotations touch
+    disjoint rows, so the result is bit-identical to replaying the
+    flattened schedule pair by pair.
+    """
+    unit = GivensUnit(cfg)
+
+    def stage(X, Y, lead):
+        sel = lead[None].astype(X.dtype)
+        xl = jnp.sum(X * sel, axis=-1)               # (TB, P) leading pair
+        yl = jnp.sum(Y * sel, axis=-1)
+        _, _, (flip, sig) = unit.vector(xl, yl)
+        # Replaying sigma on the leading column reproduces the vectoring
+        # output bit for bit, so the whole row rotates at uniform width.
+        return unit.rotate(X, Y, (flip[..., None], sig[..., None]))
+
+    tables = (piv_ref[...], tgt_ref[...], col_ref[...])
+    o_ref[...] = _wavefront_scan(p_ref[...], tables, stage)
+
+
+def qr_packed_wavefront_call(P, piv, tgt, col, *, cfg: GivensConfig,
+                             interpret: bool = True, tile_b: int = TILE_B):
+    """Wavefront blocked QR over packed FP words (bit-exact path).
+
+    Parameters
+    ----------
+    P : (B, m, e) int64
+        Packed FP words of the augmented working matrices; ``B`` must be a
+        multiple of ``tile_b`` (`ops.py` pads).
+    piv, tgt, col : (S, Pmax) int32
+        Stage index tables — one row per Sameh–Kuck stage, padded with
+        ``piv = tgt = m`` / ``col = 0`` (see `ops._stage_tables`).
+    cfg : GivensConfig
+        Static unit configuration.
+
+    Returns
+    -------
+    (B, m, e) int64 — triangularized packed words, bit-identical to
+    `qr_packed_call` on the flattened stage schedule.
+    """
+    B, m, e = P.shape
+    assert B % tile_b == 0
+    S, Pmax = piv.shape
+    grid = (B // tile_b,)
+    spec = pl.BlockSpec((tile_b, m, e), lambda b: (b, 0, 0))
+    tspec = pl.BlockSpec((S, Pmax), lambda b: (0, 0))
+    kernel = functools.partial(_qr_packed_wavefront_kernel, cfg=cfg)
+    return pl.pallas_call(
+        kernel, grid=grid,
+        in_specs=[tspec, tspec, tspec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B, m, e), jnp.int64),
+        interpret=interpret,
+    )(piv, tgt, col, P)
+
+
+def _qr_blockfp_wavefront_kernel(piv_ref, tgt_ref, col_ref, x_ref, o_ref,
+                                 *, iters: int, hub: bool, comp: int):
+    stage = functools.partial(fused_rotate_pairs, iters=iters, hub=hub,
+                              comp=comp)
+    tables = (piv_ref[...], tgt_ref[...], col_ref[...])
+    o_ref[...] = _wavefront_scan(x_ref[...], tables, stage)
+
+
+def qr_blockfp_wavefront_call(X, piv, tgt, col, *, iters: int, hub: bool,
+                              interpret: bool = True, tile_b: int = TILE_B):
+    """Wavefront blocked QR over int32 block-FP significands.
+
+    Parameters as `qr_blockfp_call`, with the static step schedule replaced
+    by the (S, Pmax) stage index tables of `qr_packed_wavefront_call`.
+    Bit-identical to `qr_blockfp_call` on the flattened stage schedule
+    (within-stage pairs are disjoint; the pair-axis datapath replays the
+    same int32 recurrence).
+    """
+    B, m, e = X.shape
+    assert B % tile_b == 0 and iters <= 30
+    S, Pmax = piv.shape
+    grid = (B // tile_b,)
+    spec = pl.BlockSpec((tile_b, m, e), lambda b: (b, 0, 0))
+    tspec = pl.BlockSpec((S, Pmax), lambda b: (0, 0))
+    kernel = functools.partial(_qr_blockfp_wavefront_kernel, iters=iters,
+                               hub=hub, comp=comp_q30(iters))
+    return pl.pallas_call(
+        kernel, grid=grid,
+        in_specs=[tspec, tspec, tspec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B, m, e), jnp.int32),
+        interpret=interpret,
+    )(piv, tgt, col, X)
 
 
 def qr_blockfp_call(X, *, iters: int, hub: bool, steps,

@@ -27,7 +27,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from .mesh import data_axes, dp_size
 
 __all__ = ["param_specs", "opt_specs", "batch_specs", "cache_specs",
-           "to_shardings", "qrd_batch_spec", "shard_qrd_batch"]
+           "to_shardings", "qrd_batch_spec", "qrd_stage_table_spec",
+           "shard_qrd_batch"]
 
 _FSDP = "__fsdp__"  # placeholder resolved to the mesh's data axes
 
@@ -224,6 +225,20 @@ def qrd_batch_spec(ndim, batch, mesh) -> P:
     fsdp = data_axes(mesh)
     lead = fsdp if batch % dp_size(mesh) == 0 else None
     return P(lead, *([None] * (ndim - 1)))
+
+
+def qrd_stage_table_spec() -> P:
+    """PartitionSpec for the wavefront stage index tables: replicated.
+
+    The (S, Pmax) pivot/target/column tables of the wavefront kernels
+    (`repro.kernels.ops.qr_packed_wavefront`) are control metadata, a few
+    hundred bytes per schedule — every device consumes the *whole* table to
+    drive its local stage scan, so they are replicated across the mesh.
+    GSPMD infers this for the table constants baked into the jitted
+    wavefront callables; the spec is exposed for callers that stream
+    schedules in as explicit arguments (e.g. schedule sweeps).
+    """
+    return P()
 
 
 def shard_qrd_batch(A, mesh):

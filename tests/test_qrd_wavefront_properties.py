@@ -1,0 +1,34 @@
+"""Sameh–Kuck schedule properties (hypothesis) — the wavefront invariants.
+
+The wavefront kernels (DESIGN.md §8) gather, rotate and scatter a whole
+stage at once; that is only sound if every stage's row pairs are disjoint
+and the flattened stage order annihilates each subdiagonal entry exactly
+once.  Checked here as properties over random (m, n).
+"""
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev extra: see requirements-dev.txt")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import givens_schedule, sameh_kuck_schedule
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(min_value=2, max_value=16),
+       st.integers(min_value=1, max_value=16))
+def test_sameh_kuck_properties(m, n):
+    stages = sameh_kuck_schedule(m, n)
+    flat = [s for stage in stages for s in stage]
+    # every subdiagonal entry annihilated exactly once, none invented
+    targets = [(j, c) for (_, j, c) in flat]
+    assert len(targets) == len(set(targets))
+    assert set(targets) == {(j, c) for (_, j, c) in givens_schedule(m, n)}
+    # within a stage all row pairs are disjoint (the wavefront invariant:
+    # gather/rotate/scatter of a whole stage cannot race)
+    for stage in stages:
+        rows = [r for (k, j, _) in stage for r in (k, j)]
+        assert len(rows) == len(set(rows))
+    # adjacent-row pairing, annihilation strictly below the diagonal
+    assert all(k == j - 1 and c < j for (k, j, c) in flat)
+    # the collapsed sequential depth of the wavefront datapath
+    assert len(stages) == min(m + n - 2, 2 * m - 3)
