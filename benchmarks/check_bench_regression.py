@@ -1,0 +1,86 @@
+"""Diff a fresh BENCH_qrd.json against the committed baseline — CI gate.
+
+Fails (exit 1) when any backend×schedule row present in both files has a
+cold end-to-end time (``end_to_end_s``: trace + compile + first run) more
+than ``factor`` times the baseline's, or when a baseline row disappeared
+from the fresh run (coverage regression).  New rows in the fresh run are
+reported but never fail — adding benchmarks is progress.
+
+Cold time is the gated metric because it is the one the wavefront/trace
+work optimizes and the least noisy across CI machines at interpret-mode
+magnitudes (tens of seconds); steady-state rates are printed for
+eyeballing but not gated.
+
+    PYTHONPATH=src python -m benchmarks.check_bench_regression \
+        BENCH_qrd.json BENCH_qrd.fresh.json [--factor 2.0]
+
+``REPRO_BENCH_REGRESSION_FACTOR`` overrides the factor (CI escape hatch
+for known-slow runners without editing the workflow).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_FACTOR = 2.0
+
+
+def compare(baseline: dict, fresh: dict, factor: float):
+    """Return (failures, report_lines) for two BENCH_qrd.json documents."""
+    base_rows = baseline.get("results", {})
+    fresh_rows = fresh.get("results", {})
+    failures, lines = [], []
+    for key in sorted(base_rows):
+        if key not in fresh_rows:
+            failures.append(f"{key}: row missing from fresh run")
+            continue
+        b = base_rows[key].get("end_to_end_s")
+        f = fresh_rows[key].get("end_to_end_s")
+        if b is None or f is None:
+            continue
+        ratio = f / b if b > 0 else float("inf")
+        status = "FAIL" if ratio > factor else "ok"
+        lines.append(f"{status:4s} {key}: cold {f:8.3f}s vs baseline "
+                     f"{b:8.3f}s ({ratio:.2f}x)")
+        if ratio > factor:
+            failures.append(f"{key}: cold end-to-end {f:.3f}s is "
+                            f"{ratio:.2f}x the baseline {b:.3f}s "
+                            f"(> {factor:.1f}x)")
+    for key in sorted(set(fresh_rows) - set(base_rows)):
+        lines.append(f"new  {key}: cold "
+                     f"{fresh_rows[key].get('end_to_end_s', float('nan')):.3f}s"
+                     " (no baseline)")
+    return failures, lines
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed BENCH_qrd.json")
+    ap.add_argument("fresh", help="freshly measured BENCH_qrd.json")
+    ap.add_argument("--factor", type=float,
+                    default=float(os.environ.get(
+                        "REPRO_BENCH_REGRESSION_FACTOR", DEFAULT_FACTOR)),
+                    help="max allowed cold-time ratio fresh/baseline")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+    failures, lines = compare(baseline, fresh, args.factor)
+    print(f"# bench regression check (factor {args.factor:.1f}x): "
+          f"{args.fresh} vs {args.baseline}")
+    for line in lines:
+        print(line)
+    if failures:
+        print(f"\n{len(failures)} regression(s):", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("# no cold-time regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

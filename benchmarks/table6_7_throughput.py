@@ -104,6 +104,43 @@ def measured_qrd_rates(batch=64, m=4,
     return out
 
 
+def measured_solve_rates(batch=64, m=6, n=3,
+                         combos=(("jnp", "col"),
+                                 ("givens_float", "col"),
+                                 ("blockfp_pallas", "sameh_kuck"))):
+    """Problem-level ``engine.solve(A, b)`` throughput (DESIGN.md §9).
+
+    Times the full least-squares path — triangularize the augmented
+    ``[A | b]`` with ``compute_q=False`` on the registry-dispatched
+    engine, then back-substitute — the workload the paper's rotator
+    exists for (QRD-based least squares in communication systems).
+    Returns ``{f"solve:{backend}/{schedule}": record}`` with steady-state
+    ``solve_per_s`` and the cold first-call wall time (``end_to_end_s``).
+    """
+    import jax
+    from repro import qrd as api
+    from repro.core import GivensConfig
+
+    rng = np.random.default_rng(0)
+    A = (rng.choice([-1.0, 1.0], (batch, m, n))
+         * np.exp2(rng.uniform(-2, 2, (batch, m, n))))
+    b = rng.normal(size=(batch, m)) * 2.0
+    cfg = GivensConfig(hub=True, n=26)
+    out = {}
+    for backend, sched in combos:
+        eng = api.QRDEngine(backend=backend, schedule=sched, givens=cfg)
+        t0 = time.perf_counter()
+        jax.block_until_ready(eng.solve(A, b))
+        cold = time.perf_counter() - t0
+        sec = timed(lambda: eng.solve(A, b))
+        out[f"solve:{backend}/{sched}"] = {
+            "backend": backend, "schedule": sched, "batch": batch,
+            "m": m, "n": n,
+            "solve_per_s": batch / sec, "end_to_end_s": cold,
+        }
+    return out
+
+
 def main(full=False):
     print("# table6: design,fmax_mhz,latency_cyc,II_e8,mops_model,mops_paper")
     rows = []
@@ -143,8 +180,16 @@ def main(full=False):
     print(f"# wavefront 8x8 end-to-end speedup vs sequential blocked: "
           f"{speedup_8x8:.1f}x")
 
+    # Solve-path rows (DESIGN.md §9): the least-squares workload on the
+    # registry-dispatched engine — triangularize [A | b], back-substitute.
+    print("# solve paths (6x3 + rhs): backend/schedule,solve_per_s,"
+          "end_to_end_s")
+    solve = measured_solve_rates()
+    for key, r in solve.items():
+        print(f"{key},{r['solve_per_s']:.1f},{r['end_to_end_s']:.3f}")
+
     rate = measured_kernel_rate()
-    write_bench_json(qrd, qrd8, speedup_8x8, rate)
+    write_bench_json(qrd, qrd8, solve, speedup_8x8, rate)
     csv_row("table6_7_throughput", 1e6 / rate,
             f"model_speedup_vs_[32]={ours/gen:.1f}x;"
             f"pallas_interp_rot_per_s={rate:.0f};"
@@ -152,22 +197,28 @@ def main(full=False):
             f"qrd_blocked_per_s={qrd['cordic_pallas/col']['qrd_per_s']:.1f};"
             f"qrd_blockfp_per_s="
             f"{qrd['blockfp_pallas/col']['qrd_per_s']:.1f};"
+            f"solve_jnp_per_s={solve['solve:jnp/col']['solve_per_s']:.1f};"
             f"wavefront_8x8_speedup={speedup_8x8:.1f}x")
 
 
-def write_bench_json(qrd4, qrd8, speedup_8x8, rot_per_s, path=BENCH_JSON):
+def write_bench_json(qrd4, qrd8, solve, speedup_8x8, rot_per_s,
+                     path=BENCH_JSON):
     """Emit the machine-readable perf trajectory (BENCH_qrd.json).
 
-    One record per (backend, schedule, m): steady-state qrd/s, cold
-    end-to-end seconds (trace + compile + run), sequential depth (steps
-    vs stages) and HBM passes — the numbers future PRs diff against.
+    One record per (backend, schedule, m) decomposition row — steady-state
+    qrd/s, cold end-to-end seconds (trace + compile + run), sequential
+    depth (steps vs stages) and HBM passes — plus one per solve-path row.
+    These are the numbers future PRs diff against:
+    `benchmarks.check_bench_regression` fails CI when any row's cold
+    end-to-end time regresses more than 2x vs the committed baseline.
     """
     doc = {
         "bench": "table6_7_throughput",
         "interpret_mode": True,
         "rotations_per_s": rot_per_s,
         "results": {**{f"{k} (4x4)": v for k, v in qrd4.items()},
-                    **{f"{k} (8x8)": v for k, v in qrd8.items()}},
+                    **{f"{k} (8x8)": v for k, v in qrd8.items()},
+                    **{f"{k} (6x3)": v for k, v in solve.items()}},
         "wavefront_8x8_end_to_end_speedup": speedup_8x8,
     }
     with open(path, "w") as f:

@@ -8,12 +8,19 @@ weighted data matrix with Givens rotations — each new snapshot is annihilated
 into R by exactly the rotations the paper's unit computes (vectoring on the
 leading pair, sigma-replay across the row).
 
+The whole loop now runs on the library's streaming RLS state
+(`repro.qrd.QRDEngine.rls` / `repro.qrd.RLSState`): ``state.update(x, d)``
+absorbs a snapshot on the backend-appropriate path — per-snapshot on the
+bit-accurate CORDIC-HUB unit, or ``block`` snapshots per kernel-resident
+blocked annihilation — and ``state.weights()`` back-substitutes the
+carried triangular factor for the beamformer weights.
+
     PYTHONPATH=src python examples/adaptive_beamforming.py
 """
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import GivensConfig, GivensUnit, qr_givens_float
+from repro.core import GivensConfig
+from repro.qrd import QRDEngine
 
 N_ANT = 8          # array elements
 SNAPSHOTS = 200
@@ -26,99 +33,13 @@ def steering(theta_deg, n=N_ANT):
     return np.exp(1j * k * np.arange(n))
 
 
-def qrd_rls_update(R, z, x, d, lam, unit=None, rot_fn=None):
-    """One QRD-RLS step: rotate snapshot x (and target d) into (R | z).
+def make_snapshots(rng):
+    """One (x, s) draw: desired signal + two 9x-stronger interferers.
 
-    Complex arithmetic is carried as interleaved real rotations; with
-    `unit` given, the rotations run on the paper's bit-accurate CORDIC
-    engine (rot_fn = jitted unit.rotate_rows), else in f64 Givens.
+    Complex arithmetic is carried as interleaved real rotations: the
+    returned snapshot stacks real/imag parts (the real-valued QRD-RLS
+    formulation the unit operates on).
     """
-    R = np.sqrt(lam) * R
-    z = np.sqrt(lam) * z
-    work = np.concatenate([R, z[:, None]], axis=1)         # (n, n+1)
-    row = np.concatenate([x, [d]])                         # (n+1,)
-    for k in range(R.shape[0]):
-        a, b = work[k, k], row[k]
-        if unit is None:
-            r = np.hypot(a, b)
-            if r == 0:
-                continue
-            c, s = a / r, b / r
-            wk = c * work[k] + s * row
-            row = -s * work[k] + c * row
-            work[k] = wk
-        else:
-            # roll so the pivot column leads: one fixed shape -> one compile
-            xr, yr = rot_fn(
-                unit.encode(jnp.asarray(np.roll(work[k], -k))),
-                unit.encode(jnp.asarray(np.roll(row, -k))))
-            work[k] = np.roll(np.asarray(unit.decode(xr)), k)
-            rolled = np.array(unit.decode(yr))  # writable copy
-            rolled[0] = 0.0
-            row = np.roll(rolled, k)
-    return work[:, :-1], work[:, -1]
-
-
-def main(use_cordic=True):
-    rng = np.random.default_rng(0)
-    a_sig = steering(10.0)
-    a_i1 = steering(-40.0)
-    a_i2 = steering(55.0)
-
-    # real-valued formulation: stack real/imag parts
-    def snap():
-        s = rng.normal() * 1.0
-        i1 = rng.normal() * 3.0
-        i2 = rng.normal() * 3.0
-        noise = (rng.normal(size=N_ANT) + 1j * rng.normal(size=N_ANT)) * 0.1
-        x = s * a_sig + i1 * a_i1 + i2 * a_i2 + noise
-        return np.concatenate([x.real, x.imag]), s
-
-    n = 2 * N_ANT
-    R = np.eye(n) * 1e-3
-    z = np.zeros(n)
-    unit = GivensUnit(GivensConfig(hub=True, n=26)) if use_cordic else None
-    import jax
-    rot_fn = jax.jit(unit.rotate_rows) if unit else None
-
-    errs = []
-    for t in range(SNAPSHOTS):
-        x, d = snap()
-        R, z = qrd_rls_update(R, z, x, d, LAMBDA, unit=unit, rot_fn=rot_fn)
-        # back-substitute for the weights and measure output error
-        w = np.linalg.solve(R + 1e-12 * np.eye(n), z)
-        errs.append((x @ w - d) ** 2)
-        if (t + 1) % 100 == 0:
-            print(f"step {t+1:4d}: MSE(last 50) = "
-                  f"{np.mean(errs[-50:]):.4f}")
-
-    mse_end = np.mean(errs[-50:])
-    sig_power = 1.0          # var(s); interferers are 9x stronger each
-    rejection_db = 10 * np.log10(sig_power / mse_end)
-    print(f"\nQRD-RLS beamformer ({'CORDIC-HUB unit' if use_cordic else 'f64'}):"
-          f" residual MSE {mse_end:.5f} vs signal power {sig_power:.1f} "
-          f"-> {rejection_db:.1f} dB interference rejection")
-    assert mse_end < 0.05 * sig_power
-    return mse_end
-
-
-def main_blocked(block=4):
-    """Block QRD-RLS on the kernel-resident blocked Givens engine.
-
-    The per-snapshot loop above launches n rotations from Python for every
-    snapshot.  Here a whole block of snapshots is stacked under [R | z] and
-    annihilated by ONE kernel-resident schedule
-    (`repro.kernels.ops.givens_block_apply`) — the paper's pipeline replay
-    at block granularity: the working tile stays resident across all
-    block · n rotations, with a single fixed-point encode/decode.
-
-    Exponential forgetting is preserved exactly: the carried state is
-    weighted by lambda^(block/2) and row i of the block by
-    lambda^((block-1-i)/2), which telescopes to the per-snapshot recursion.
-    """
-    from repro.kernels import ops as kops
-
-    rng = np.random.default_rng(0)
     a_sig = steering(10.0)
     a_i1 = steering(-40.0)
     a_i2 = steering(55.0)
@@ -131,38 +52,59 @@ def main_blocked(block=4):
         x = s * a_sig + i1 * a_i1 + i2 * a_i2 + noise
         return np.concatenate([x.real, x.imag]), s
 
-    n = 2 * N_ANT
-    R = np.eye(n) * 1e-3
-    z = np.zeros(n)
-    # annihilate column k of every stacked snapshot row against pivot row k
-    steps = tuple((k, n + j, k) for k in range(n) for j in range(block))
-    lam_half = np.sqrt(LAMBDA)
+    return snap
 
+
+def run_beamformer(state, label, snapshots=SNAPSHOTS, mse_bound=0.05):
+    """Drive a library RLS state through the snapshot stream."""
+    rng = np.random.default_rng(0)
+    snap = make_snapshots(rng)
     errs = []
-    pending = []
-    for t in range(SNAPSHOTS):
+    for t in range(snapshots):
         x, d = snap()
-        pending.append(np.concatenate([x, [d]]))
-        if len(pending) == block:
-            top = np.concatenate([R, z[:, None]], axis=1) * lam_half ** block
-            rows = np.stack([row * lam_half ** (block - 1 - i)
-                             for i, row in enumerate(pending)])
-            W = np.concatenate([top, rows], axis=0)[None]    # (1, n+B, n+1)
-            Wp = np.asarray(kops.givens_block_apply(W, steps, hub=True))[0]
-            R, z = Wp[:n, :n], Wp[:n, n]
-            pending = []
-        w = np.linalg.solve(R + 1e-12 * np.eye(n), z)
+        state.update(x, d)
+        w = state.weights()          # back-substituted beamformer weights
         errs.append((x @ w - d) ** 2)
         if (t + 1) % 100 == 0:
             print(f"step {t+1:4d}: MSE(last 50) = {np.mean(errs[-50:]):.4f}")
 
     mse_end = np.mean(errs[-50:])
-    rejection_db = 10 * np.log10(1.0 / mse_end)
-    print(f"\nBlock QRD-RLS beamformer (kernel-resident, block={block}):"
-          f" residual MSE {mse_end:.5f} -> {rejection_db:.1f} dB "
-          f"interference rejection")
-    assert mse_end < 0.05
+    sig_power = 1.0          # var(s); interferers are 9x stronger each
+    rejection_db = 10 * np.log10(sig_power / mse_end)
+    print(f"\nQRD-RLS beamformer ({label}): residual MSE {mse_end:.5f} "
+          f"vs signal power {sig_power:.1f} "
+          f"-> {rejection_db:.1f} dB interference rejection")
+    assert mse_end < mse_bound * sig_power
     return mse_end
+
+
+def main(use_cordic=True, snapshots=SNAPSHOTS):
+    """Per-snapshot QRD-RLS on the unit (or the f64 float baseline)."""
+    n = 2 * N_ANT
+    backend = "cordic" if use_cordic else "givens_float"
+    eng = QRDEngine(backend=backend,
+                    givens=GivensConfig(hub=True, n=26))
+    state = eng.rls(n, lam=LAMBDA, delta=1e-3)
+    label = "CORDIC-HUB unit" if use_cordic else "f64"
+    return run_beamformer(state, label, snapshots=snapshots)
+
+
+def main_blocked(block=4, snapshots=SNAPSHOTS):
+    """Block QRD-RLS on the kernel-resident blocked Givens engine.
+
+    The per-snapshot path launches n rotations for every snapshot.  Here
+    the state batches ``block`` snapshots and annihilates them under
+    ``[R | z]`` with ONE kernel-resident schedule
+    (`repro.kernels.ops.rls_block_steps` on `ops.givens_block_apply`) —
+    the paper's pipeline replay at block granularity, with exponential
+    forgetting telescoped exactly (`repro.qrd.RLSState.flush`).
+    """
+    n = 2 * N_ANT
+    eng = QRDEngine(backend="blockfp_pallas",
+                    givens=GivensConfig(hub=True, n=26))
+    state = eng.rls(n, lam=LAMBDA, delta=1e-3, block=block)
+    return run_beamformer(state, f"kernel-resident, block={block}",
+                          snapshots=snapshots)
 
 
 if __name__ == "__main__":

@@ -1,12 +1,12 @@
-"""Quickstart: the FP Givens rotation unit and the QRD engine in 2 minutes.
+"""Quickstart: the FP Givens rotation unit and the solver-grade QRD API.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (GivensConfig, GivensUnit, QRDEngine, snr_db,
-                        hub_quantize)
+from repro.core import GivensConfig, GivensUnit, QRDEngine, snr_db, hub_quantize
+from repro import qrd
 
 
 def main():
@@ -24,13 +24,15 @@ def main():
           f"({float(unit.decode(x2)):.5f}, {float(unit.decode(y2)):.5f})  "
           f"(exact (6, -8))")
 
-    # --- 2. batched QR decomposition on the engine ---------------------------
+    # --- 2. batched QR decomposition on the registry-dispatched engine ------
+    print("\nregistered backends:",
+          ", ".join(qrd.available_backends()))
     rng = np.random.default_rng(0)
     A = rng.normal(size=(1000, 4, 4))
     results = {}
     for backend in ("cordic", "cordic_pallas", "givens_float", "jnp"):
-        eng = QRDEngine(backend=backend,
-                        givens_config=GivensConfig(hub=True, n=26))
+        eng = qrd.QRDEngine(backend=backend,
+                            givens=GivensConfig(hub=True, n=26))
         Q, R = eng(A)
         results[backend] = (np.asarray(Q), np.asarray(R))
         print(f"QRD[{backend:13s}] mean SNR = "
@@ -40,11 +42,39 @@ def main():
                 for i in range(2))
     print(f"cordic_pallas bit-identical to cordic: {exact}")
     assert exact
+    # the legacy dataclass still works, as a shim over the same registry
+    lQ, lR = QRDEngine(backend="cordic",
+                       givens_config=GivensConfig(hub=True, n=26))(A)
+    assert (np.asarray(lQ) == results["cordic"][0]).all()
 
-    # --- 3. HUB numerics as a primitive --------------------------------------
+    # --- 3. problem level: least squares without forming Q ------------------
+    Am = rng.normal(size=(8, 6, 3))
+    b = rng.normal(size=(8, 6))
+    eng = qrd.QRDEngine(backend="cordic", givens=GivensConfig(hub=True, n=26))
+    xs, resid = eng.solve(Am, b, return_residuals=True)
+    ref = np.stack([np.linalg.lstsq(Am[i], b[i], rcond=None)[0]
+                    for i in range(8)])
+    err = float(np.max(np.abs(np.asarray(xs) - ref)))
+    print(f"\nsolve() vs np.linalg.lstsq: max |dx| = {err:.2e} "
+          f"(tolerances: repro.qrd.SOLVE_TOLERANCES)")
+    assert err < 1e-4
+
+    # --- 4. streaming QRD-RLS (adaptive filtering) --------------------------
+    n = 4
+    w_true = rng.normal(size=n)
+    state = eng.rls(n, lam=0.995)
+    for _ in range(200):
+        xv = rng.normal(size=n)
+        state.update(xv, w_true @ xv + 0.01 * rng.normal())
+    werr = float(np.linalg.norm(state.weights() - w_true))
+    print(f"QRD-RLS on the unit: ||w - w_true|| = {werr:.4f} "
+          f"after {state.updates} snapshots")
+    assert werr < 0.05
+
+    # --- 5. HUB numerics as a primitive -------------------------------------
     v = np.float64(1.2345678)
-    print(f"hub_quantize(1.2345678, m=10) = {float(hub_quantize(v, 10)):.7f} "
-          f"(round-to-nearest by truncation)")
+    print(f"\nhub_quantize(1.2345678, m=10) = "
+          f"{float(hub_quantize(v, 10)):.7f} (round-to-nearest by truncation)")
 
 
 if __name__ == "__main__":

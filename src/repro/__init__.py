@@ -5,7 +5,10 @@
 
 Layout:
     repro.core      bit-accurate emulation of the FP Givens rotation unit
-                    (block-FP CORDIC, sigma-bit reuse, HUB format) + QRD engine
+                    (block-FP CORDIC, sigma-bit reuse, HUB format) + QRD
+                    backends
+    repro.qrd       the solver-grade QRD API: backend registry, QRDConfig,
+                    engine with solve() and streaming QRD-RLS (DESIGN.md §9)
     repro.kernels   Pallas TPU kernels for the CORDIC Givens rotator
     repro.models    the ten assigned LM-family architectures
     repro.optim     AdamW + QMuon (Givens-QR orthogonalized updates)

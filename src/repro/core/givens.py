@@ -183,3 +183,33 @@ class GivensUnit:
                              (flip[..., None], sig[..., None]), N, iters)
         return (jnp.concatenate([rx0[..., None], rx], axis=-1),
                 jnp.concatenate([ry0[..., None], ry], axis=-1))
+
+    def annihilate(self, row_x, row_y, col, N=None, iters=None):
+        """Givens-rotate two packed rows so ``row_y[col]`` is zeroed.
+
+        The pivot-anywhere form of `rotate_rows`, the primitive of
+        QRD-RLS updates (`repro.qrd.rls.RLSState`): the rows are rolled
+        so the pivot column leads, rotated (vectoring on the pivot pair,
+        σ-replay across the rest), the annihilated entry forced to the
+        structural packed zero, and rolled back.  ``col`` may be a traced
+        scalar — one fixed row shape compiles once and serves every pivot
+        column, so a jitted scan over pivots traces this body a single
+        time.
+
+        Parameters
+        ----------
+        row_x, row_y : (..., e) int64 packed FP words
+            Pivot row and target row.
+        col : int or traced scalar
+            Pivot column; ``row_y[..., col]`` is annihilated against
+            ``row_x[..., col]``.
+
+        Returns
+        -------
+        (row_x', row_y') packed rows with ``row_y'[..., col] == 0``.
+        """
+        rx = jnp.roll(row_x, -col, axis=-1)
+        ry = jnp.roll(row_y, -col, axis=-1)
+        ox, oy = self.rotate_rows(rx, ry, N=N, iters=iters)
+        oy = oy.at[..., 0].set(0)   # the zeroed entry is structural
+        return jnp.roll(ox, col, axis=-1), jnp.roll(oy, col, axis=-1)

@@ -29,9 +29,7 @@ from __future__ import annotations
 import dataclasses
 from functools import lru_cache
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import cordic
 from .givens import GivensConfig, GivensUnit
@@ -318,7 +316,10 @@ def qr_blocked_sharded(A, unit: GivensUnit, mesh, compute_q=True,
                        steps=None, interpret=None, schedule="col"):
     """Batch-sharded kernel-resident QRD (the tall-skinny scaling path).
 
-    Places the leading batch axis of ``A`` across the mesh's data axes
+    Legacy shim: since the API redesign (DESIGN.md §9) this is plain
+    engine dispatch with a mesh-carrying config —
+    ``repro.qrd.QRDEngine(backend='cordic_pallas', mesh=mesh)(A)`` — which
+    places the leading batch axis of ``A`` across the mesh's data axes
     (`repro.launch.sharding.shard_qrd_batch`) and runs the kernel-resident
     QRD; under jit the per-device kernels each triangularize their local
     batch shard — QRD is embarrassingly parallel over the batch, so no
@@ -336,24 +337,46 @@ def qr_blocked_sharded(A, unit: GivensUnit, mesh, compute_q=True,
         device's kernel rotates whole stages at once, and the stage index
         tables are replicated across the mesh
         (`repro.launch.sharding.qrd_stage_table_spec`).
+    steps : tuple, optional
+        Explicit step-serial schedule override (not expressible as an
+        engine config; runs the direct sharded path).
 
     Returns
     -------
     (Q, R) with the same batch sharding as the input placement.
     """
-    from repro.launch import sharding as _sh
-    A = _sh.shard_qrd_batch(jnp.asarray(A, jnp.float64), mesh)
-    if schedule == "sameh_kuck":
-        if steps is not None:
+    if schedule not in ("col", "sameh_kuck"):
+        raise ValueError(f"unknown schedule {schedule!r}")
+    if steps is not None:
+        if schedule == "sameh_kuck":
             raise ValueError("steps= is the step-serial schedule; the "
                              "wavefront path takes stage schedules — call "
                              "qr_cordic_wavefront(stages=...) directly")
-        return qr_cordic_wavefront(A, unit, compute_q=compute_q,
-                                   interpret=interpret)
-    if schedule != "col":
-        raise ValueError(f"unknown schedule {schedule!r}")
-    return qr_cordic_pallas(A, unit, compute_q=compute_q, steps=steps,
-                            interpret=interpret)
+        from repro.launch import sharding as _sh
+        A = _sh.shard_qrd_batch(jnp.asarray(A, jnp.float64), mesh)
+        return qr_cordic_pallas(A, unit, compute_q=compute_q, steps=steps,
+                                interpret=interpret)
+    from repro import qrd as _api
+    cfg = _api.QRDConfig(backend="cordic_pallas", schedule=schedule,
+                         givens=unit.cfg, interpret=interpret, mesh=mesh)
+    return _shared_engine()._dispatch(A, compute_q, cfg)
+
+
+def _shared_engine():
+    """Module-level dispatch host for the legacy free-function shims.
+
+    One bounded jitted-callable LRU shared by all legacy calls; the
+    per-call config (including its mesh, keyed by identity) selects the
+    actual backend.
+    """
+    global _SHARED_ENGINE
+    if _SHARED_ENGINE is None:
+        from repro import qrd as _api
+        _SHARED_ENGINE = _api.QRDEngine()
+    return _SHARED_ENGINE
+
+
+_SHARED_ENGINE = None
 
 
 # --------------------------------------------------------------------------
@@ -394,14 +417,17 @@ def qr_givens_float(A, dtype=jnp.float32, compute_q=True):
     return Q, R
 
 
-def qr_jnp(A, dtype=jnp.float32):
+def qr_jnp(A, dtype=jnp.float32, compute_q=True):
     """LAPACK-style reference ("Matlab qr, single precision").
 
     A: (..., m, n); returns complete-mode (Q, R) from `jnp.linalg.qr` in
-    `dtype` — the paper's comparison reference.
+    `dtype` — the paper's comparison reference.  ``compute_q=False``
+    returns ``(None, R)`` like every other backend (the registry exposes
+    one uniform backend signature); under jit XLA dead-code-eliminates
+    the unused Q factor.
     """
     Q, R = jnp.linalg.qr(jnp.asarray(A, dtype), mode="complete")
-    return Q, R
+    return (Q if compute_q else None), R
 
 
 # --------------------------------------------------------------------------
@@ -454,15 +480,25 @@ def qr_fixed(A, width=32, iters=27, scale_exp=0, compute_q=True):
 # --------------------------------------------------------------------------
 @dataclasses.dataclass
 class QRDEngine:
-    """Backend-selectable batched QRD (the framework-facing API).
+    """Backend-selectable batched QRD — legacy shim over `repro.qrd`.
+
+    Since the API redesign (DESIGN.md §9) this dataclass is a thin facade
+    over the registry-dispatched `repro.qrd.QRDEngine`: construction
+    validates the backend/schedule against the registry, and every call
+    rebuilds a `repro.qrd.QRDConfig` from the (mutable) fields, so field
+    mutation between calls misses the jitted-callable cache rather than
+    returning stale results.  New code should use `repro.qrd.QRDEngine`
+    directly — it adds ``solve()`` (batched least squares), ``rls()``
+    (streaming QRD-RLS) and mesh-sharded dispatch.
 
     Parameters
     ----------
     backend : str
-        One of ``'jnp'`` (LAPACK reference), ``'givens_float'`` (float
-        Givens baseline), ``'cordic'`` (bit-accurate unit, reference
-        loop), ``'cordic_pallas'`` (same unit, kernel-resident — (Q, R)
-        bit-identical to ``'cordic'``), ``'blockfp_pallas'`` (int32
+        Any registered backend (`repro.qrd.available_backends()`); the
+        built-ins are ``'jnp'`` (LAPACK reference), ``'givens_float'``
+        (float Givens baseline), ``'cordic'`` (bit-accurate unit,
+        reference loop), ``'cordic_pallas'`` (same unit, kernel-resident —
+        (Q, R) bit-identical to ``'cordic'``), ``'blockfp_pallas'`` (int32
         block-fixed-point blocked kernel), ``'fixed'`` (32-bit fixed-point
         rotator of [20]).
     givens_config : GivensConfig
@@ -471,21 +507,17 @@ class QRDEngine:
         iteration count.
     schedule : str
         ``'col'`` (column-major) or ``'sameh_kuck'`` (parallel pairing).
-        Applies to the cordic-family and blockfp backends.  With
-        ``'sameh_kuck'`` the Pallas backends route onto the **wavefront
-        datapath** (`qr_cordic_wavefront` / `qr_blockfp_wavefront`,
-        DESIGN.md §8): every stage's disjoint rotations run in one shot,
-        bit-identical to the flattened schedule on the reference loop; the
-        ``'cordic'`` loop consumes the flattened stage order.
+        With ``'sameh_kuck'`` the Pallas backends route onto the
+        **wavefront datapath** (DESIGN.md §8); the ``'cordic'`` loop
+        consumes the flattened stage order.
     fixed_width, fixed_iters, fixed_scale_exp : int
         Parameters of the ``'fixed'`` baseline.
 
     Call with ``engine(A, compute_q=...)`` where ``A`` is ``(..., m, n)``;
     returns ``(Q, R)`` float arrays (Q is None when ``compute_q=False``).
     The engine memoizes one jitted callable per ``(m, n, compute_q,
-    config)`` — repeated calls on same-shaped batches re-trace nothing,
-    and mutating ``backend``/``schedule``/``givens_config`` between calls
-    misses the cache rather than returning stale results.
+    config)`` in a *bounded* LRU (`repro.qrd.QRDEngine`), so churning
+    many shapes evicts cold callables instead of growing without bound.
     """
 
     backend: str = "jnp"
@@ -498,80 +530,39 @@ class QRDEngine:
     _BACKENDS = ("jnp", "givens_float", "cordic", "cordic_pallas",
                  "blockfp_pallas", "fixed")
 
+    def _to_config(self):
+        from repro import qrd as _api
+        return _api.QRDConfig(backend=self.backend, schedule=self.schedule,
+                              givens=self.givens_config,
+                              fixed_width=self.fixed_width,
+                              fixed_iters=self.fixed_iters,
+                              fixed_scale_exp=self.fixed_scale_exp)
+
     def __post_init__(self):
         # fail at construction, not first call: bad backend/schedule names
         # and invalid unit configs should not surface deep inside a run
-        if self.backend not in self._BACKENDS:
-            raise ValueError(f"unknown backend {self.backend!r}")
-        if self.schedule not in ("col", "sameh_kuck"):
-            raise ValueError(f"unknown schedule {self.schedule!r}")
-        if self.backend in ("cordic", "cordic_pallas"):
-            self.givens_config.validate()
-        self._fn_cache = {}
+        from repro import qrd as _api
+        self._engine = _api.QRDEngine(self._to_config())
 
-    def _config_key(self):
-        """Everything dispatch depends on — field mutation misses the cache."""
-        return (self.backend, self.schedule, self.givens_config,
-                self.fixed_width, self.fixed_iters, self.fixed_scale_exp)
-
-    def _steps(self, m, n):
-        if self.schedule == "col":
-            return None  # backends default to givens_schedule(m, n)
-        if self.schedule == "sameh_kuck":
-            return tuple(s for stage in sameh_kuck_schedule(m, n)
-                         for s in stage)
-        raise ValueError(f"unknown schedule {self.schedule!r}")
-
-    def _build(self, m, n, compute_q):
-        """One jitted (A) -> (Q, R) callable for this (m, n, compute_q)."""
-        backend, cfg = self.backend, self.givens_config
-        wavefront = self.schedule == "sameh_kuck"
-        if backend == "cordic":
-            unit, steps = GivensUnit(cfg), self._steps(m, n)
-            fn = lambda A: qr_cordic(A, unit, compute_q=compute_q,
-                                     steps=steps)
-        elif backend == "cordic_pallas":
-            unit = GivensUnit(cfg)
-            if wavefront:
-                stages = sameh_kuck_schedule(m, n)
-                fn = lambda A: qr_cordic_wavefront(
-                    A, unit, compute_q=compute_q, stages=stages)
-            else:
-                steps = self._steps(m, n)
-                fn = lambda A: qr_cordic_pallas(
-                    A, unit, compute_q=compute_q, steps=steps)
-        elif backend == "blockfp_pallas":
-            iters = cfg.resolved_iters()
-            if wavefront:
-                stages = sameh_kuck_schedule(m, n)
-                fn = lambda A: qr_blockfp_wavefront(
-                    A, compute_q=compute_q, hub=cfg.hub, iters=iters,
-                    stages=stages)
-            else:
-                steps = self._steps(m, n)
-                fn = lambda A: qr_blockfp_pallas(
-                    A, compute_q=compute_q, hub=cfg.hub, iters=iters,
-                    steps=steps)
-        elif backend == "givens_float":
-            fn = lambda A: qr_givens_float(A, compute_q=compute_q)
-        elif backend == "jnp":
-            fn = qr_jnp
-        elif backend == "fixed":
-            fn = lambda A: qr_fixed(A, self.fixed_width, self.fixed_iters,
-                                    self.fixed_scale_exp,
-                                    compute_q=compute_q)
-        else:
-            raise ValueError(f"unknown backend {self.backend!r}")
-        return jax.jit(fn)
+    @property
+    def _fn_cache(self):
+        """The underlying bounded jitted-callable LRU (tests poke this)."""
+        return self._engine._fn_cache
 
     def __call__(self, A, compute_q=True):
-        A = jnp.asarray(A)
-        m, n = A.shape[-2], A.shape[-1]
-        key = (m, n, bool(compute_q)) + self._config_key()
-        fn = self._fn_cache.get(key)
-        if fn is None:
-            fn = self._fn_cache[key] = self._build(m, n, bool(compute_q))
-        return fn(A)
+        return self._engine._dispatch(A, compute_q, self._to_config())
+
+    def solve(self, A, b, return_residuals=False):
+        """Batched least squares — see `repro.qrd.QRDEngine.solve`."""
+        eng = self._engine
+        eng.config = self._to_config()
+        return eng.solve(A, b, return_residuals=return_residuals)
+
+    def rls(self, n, lam=0.99, delta=1e-3, block=None):
+        """Streaming QRD-RLS state — see `repro.qrd.QRDEngine.rls`."""
+        eng = self._engine
+        eng.config = self._to_config()
+        return eng.rls(n, lam=lam, delta=delta, block=block)
 
 
 def snr_db(A, Q, R):

@@ -21,7 +21,25 @@ from . import qrd_blocked as qb
 
 __all__ = ["vectoring_fixed", "rotation_fixed", "givens_rotate_rows_fixed",
            "givens_rotate_rows_fused", "qr_packed", "qr_packed_wavefront",
-           "givens_block_apply", "givens_block_apply_wavefront"]
+           "givens_block_apply", "givens_block_apply_wavefront",
+           "rls_block_steps"]
+
+
+@functools.lru_cache(maxsize=None)
+def rls_block_steps(n: int, block: int):
+    """Annihilation schedule for a QRD-RLS block update (memoized).
+
+    For a working tile ``[√λ-weighted R | z]`` of ``n`` state rows with
+    ``block`` snapshot rows stacked underneath (rows ``n .. n+block-1``),
+    column ``k`` of every snapshot row is annihilated against the
+    diagonal pivot row ``k`` — the blocked-kernel replay of the
+    per-snapshot QRD-RLS recursion (`repro.qrd.rls.RLSState.flush` feeds
+    this straight into `givens_block_apply`).
+
+    Returns a hashable tuple of ``(pivot_row, target_row, col)`` triples
+    (a jit static), cached per ``(n, block)`` like the QRD schedules.
+    """
+    return tuple((k, n + j, k) for k in range(n) for j in range(block))
 
 
 def _auto_interpret(interpret):

@@ -242,7 +242,17 @@ def qrd_stage_table_spec() -> P:
 
 
 def shard_qrd_batch(A, mesh):
-    """Place a (batch, m, n) array with its batch axis sharded on `mesh`."""
+    """Place a batched QRD operand with its leading axis sharded on `mesh`.
+
+    Accepts any ``(batch..., m, n)`` shape — the engine's mesh dispatch
+    (`repro.qrd.QRDEngine` with ``QRDConfig.mesh``) routes augmented
+    solve operands and multi-axis batches through here too.  Only the
+    first axis is sharded (over the data axes, when divisible); a single
+    unbatched ``(m, n)`` matrix is replicated — there is nothing to
+    scale over.
+    """
+    if A.ndim < 3:
+        return jax.device_put(A, NamedSharding(mesh, P()))
     spec = qrd_batch_spec(A.ndim, A.shape[0], mesh)
     return jax.device_put(A, NamedSharding(mesh, spec))
 

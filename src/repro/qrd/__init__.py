@@ -1,0 +1,37 @@
+"""repro.qrd — the solver-grade QRD API (DESIGN.md §9).
+
+The problem-level surface the paper's rotation unit exists for:
+
+* `QRDConfig` — one config for backend, schedule, unit parameters,
+  block-FP knobs, fixed-point baseline parameters and an optional
+  sharding mesh;
+* `register_backend` / `list_backends` — the backend registry (the
+  built-ins ``'jnp'``, ``'givens_float'``, ``'cordic'``,
+  ``'cordic_pallas'``, ``'blockfp_pallas'``, ``'fixed'`` are entries like
+  any third-party backend);
+* `QRDEngine` — registry-dispatched decomposition plus **solve()**
+  (batched least squares, Q-free augmented-column trick) and **rls()**
+  (streaming QRD-RLS state for adaptive filtering);
+* `back_substitute` — the batched, jit-safe triangular solve both
+  problem paths share.
+
+Legacy entrypoints (``repro.core.QRDEngine``, the ``qr_*`` free
+functions) keep working as thin shims over this package.
+"""
+from .registry import (BackendCapabilities, BackendSpec, register_backend,
+                       unregister_backend, get_backend, list_backends,
+                       available_backends)
+from .config import QRDConfig
+from .solve import back_substitute, lstsq_from_triangular, SOLVE_TOLERANCES
+from .rls import RLSState
+from . import backends as _backends  # populates the registry on import
+from .engine import QRDEngine
+
+__all__ = [
+    "BackendCapabilities", "BackendSpec", "register_backend",
+    "unregister_backend", "get_backend", "list_backends",
+    "available_backends",
+    "QRDConfig", "QRDEngine",
+    "back_substitute", "lstsq_from_triangular", "SOLVE_TOLERANCES",
+    "RLSState",
+]

@@ -1,0 +1,110 @@
+"""Built-in backend registrations (the entries `QRDEngine._build` used to
+hard-code as an if/elif chain).
+
+Each builder closes over a resolved `QRDConfig` + static shape and returns
+a jit-compatible ``(A) -> (Q, R)`` callable on the corresponding free
+function in `repro.core.qrd` — the free functions stay the single source
+of arithmetic truth, the registry only owns dispatch.  Importing this
+module (it is imported by ``repro.qrd``) populates the registry;
+third-party backends call `repro.qrd.register_backend` the same way.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import qrd as _q
+from repro.core.givens import GivensUnit
+
+from .registry import (BackendCapabilities, available_backends,
+                       register_backend)
+
+__all__ = ["register_builtin_backends"]
+
+
+def _flat_steps(config, m, n):
+    """Schedule for step-serial backends: None = column-major default."""
+    if config.schedule == "sameh_kuck":
+        return tuple(s for st in _q.sameh_kuck_schedule(m, n) for s in st)
+    return None
+
+
+def _build_jnp(config, m, n, compute_q):
+    dtype = jnp.dtype(config.dtype)
+    return lambda A: _q.qr_jnp(A, dtype, compute_q=compute_q)
+
+
+def _build_givens_float(config, m, n, compute_q):
+    dtype = jnp.dtype(config.dtype)
+    return lambda A: _q.qr_givens_float(A, dtype=dtype, compute_q=compute_q)
+
+
+def _build_cordic(config, m, n, compute_q):
+    unit = GivensUnit(config.givens)
+    steps = _flat_steps(config, m, n)
+    return lambda A: _q.qr_cordic(A, unit, compute_q=compute_q, steps=steps)
+
+
+def _build_cordic_pallas(config, m, n, compute_q):
+    unit = GivensUnit(config.givens)
+    if config.schedule == "sameh_kuck":   # wavefront datapath (DESIGN.md §8)
+        stages = _q.sameh_kuck_schedule(m, n)
+        return lambda A: _q.qr_cordic_wavefront(
+            A, unit, compute_q=compute_q, stages=stages,
+            interpret=config.interpret)
+    return lambda A: _q.qr_cordic_pallas(A, unit, compute_q=compute_q,
+                                         interpret=config.interpret)
+
+
+def _build_blockfp_pallas(config, m, n, compute_q):
+    iters, hub, frac = (config.blockfp_iters(), config.blockfp_hub(),
+                        config.frac)
+    if config.schedule == "sameh_kuck":
+        stages = _q.sameh_kuck_schedule(m, n)
+        return lambda A: _q.qr_blockfp_wavefront(
+            A, compute_q=compute_q, iters=iters, hub=hub, frac=frac,
+            stages=stages, interpret=config.interpret)
+    return lambda A: _q.qr_blockfp_pallas(
+        A, compute_q=compute_q, iters=iters, hub=hub, frac=frac,
+        interpret=config.interpret)
+
+
+def _build_fixed(config, m, n, compute_q):
+    return lambda A: _q.qr_fixed(A, config.fixed_width, config.fixed_iters,
+                                 config.fixed_scale_exp, compute_q=compute_q)
+
+
+def register_builtin_backends(overwrite=False):
+    """Populate the registry with the six built-in backends (idempotent)."""
+    entries = (
+        ("jnp", _build_jnp, BackendCapabilities(
+            bit_exact=False, wavefront=False, sharding=False,
+            dtypes=("float16", "float32", "float64"),
+            description="jnp.linalg.qr Householder reference "
+                        "(schedule-agnostic; 'sameh_kuck' degrades to it)")),
+        ("givens_float", _build_givens_float, BackendCapabilities(
+            bit_exact=False, wavefront=False, sharding=False,
+            dtypes=("float16", "float32", "float64"),
+            description="float Givens baseline, column-major schedule")),
+        ("cordic", _build_cordic, BackendCapabilities(
+            bit_exact=True, wavefront=False, sharding=True,
+            description="the paper's unit, host reference loop "
+                        "('sameh_kuck' consumes the flattened stage order)")),
+        ("cordic_pallas", _build_cordic_pallas, BackendCapabilities(
+            bit_exact=True, wavefront=True, sharding=True,
+            description="kernel-resident unit, bit-identical to 'cordic'; "
+                        "'sameh_kuck' routes onto the wavefront datapath")),
+        ("blockfp_pallas", _build_blockfp_pallas, BackendCapabilities(
+            bit_exact=False, wavefront=True, sharding=True,
+            description="int32 block-FP blocked kernel (fast TPU path)")),
+        ("fixed", _build_fixed, BackendCapabilities(
+            bit_exact=False, wavefront=False, sharding=False,
+            description="32-bit fixed-point rotator of [20] "
+                        "(Fig. 11 baseline; schedule-agnostic)")),
+    )
+    registered = available_backends()
+    for name, builder, caps in entries:
+        if overwrite or name not in registered:
+            register_backend(name, builder, caps, overwrite=overwrite)
+
+
+register_builtin_backends()

@@ -1,0 +1,117 @@
+"""Unified QRD problem configuration (DESIGN.md §9).
+
+`QRDConfig` consolidates every knob that used to be scattered across the
+free functions — ``steps``/``stages`` schedule selection, the blockfp
+``iters``/``hub``/``frac`` trio, the ``fixed_*`` baseline parameters —
+plus an optional sharding ``mesh`` so the batch-sharded path
+(`qr_blocked_sharded`) folds into plain ``engine(A)`` dispatch.
+
+The config is a frozen dataclass: hashable (it participates in the
+engine's jitted-callable cache key) except for ``mesh``, which is
+excluded from equality/hash and keyed by identity instead (meshes are
+runtime placement, not arithmetic).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.core.givens import GivensConfig
+
+__all__ = ["QRDConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QRDConfig:
+    """Everything a QRD problem dispatch depends on.
+
+    Parameters
+    ----------
+    backend : str
+        A registered backend name (`repro.qrd.registry.available_backends`).
+    schedule : str
+        ``'col'`` (column-major) or ``'sameh_kuck'`` (parallel pairing);
+        backends with the ``wavefront`` capability route ``'sameh_kuck'``
+        onto the stage-parallel datapath (DESIGN.md §8).
+    givens : GivensConfig
+        Unit parameters for the cordic family; ``'blockfp_pallas'``
+        derives its defaults (``hub``, iteration count) from it.
+    iters, hub, frac : optional overrides for the block-FP kernel
+        ``None`` resolves from ``givens`` (``resolved_iters()`` /
+        ``givens.hub``); ``frac`` is the fraction-bit count F of the int32
+        significands (F=24 keeps m ≲ 64 inside int32).
+    fixed_width, fixed_iters, fixed_scale_exp : int
+        Parameters of the ``'fixed'`` baseline rotator of [20].
+    dtype : str
+        Output dtype for the float backends (``'jnp'``,
+        ``'givens_float'``); the bit-accurate backends always return
+        float64.
+    interpret : bool, optional
+        Forwarded to the Pallas kernels; ``None`` auto-selects
+        (interpret on CPU, Mosaic on TPU).
+    mesh : jax.sharding.Mesh, optional
+        When set, the engine places the operand's leading batch axis
+        across the mesh's data axes before dispatch
+        (`repro.launch.sharding.shard_qrd_batch`) — requires the
+        backend's ``sharding`` capability.  Excluded from hash/equality.
+
+    Use ``dataclasses.replace(cfg, ...)`` (or ``cfg.replace(...)``) to
+    derive variants.
+    """
+
+    backend: str = "jnp"
+    schedule: str = "col"
+    givens: GivensConfig = dataclasses.field(default_factory=GivensConfig)
+    iters: int | None = None
+    hub: bool | None = None
+    frac: int = 24
+    fixed_width: int = 32
+    fixed_iters: int = 27
+    fixed_scale_exp: int = 0
+    dtype: str = "float32"
+    interpret: bool | None = None
+    mesh: Any = dataclasses.field(default=None, compare=False, repr=False)
+
+    SCHEDULES = ("col", "sameh_kuck")
+
+    def replace(self, **changes) -> "QRDConfig":
+        return dataclasses.replace(self, **changes)
+
+    # -- resolved block-FP parameters ----------------------------------------
+    def blockfp_iters(self) -> int:
+        return self.givens.resolved_iters() if self.iters is None else self.iters
+
+    def blockfp_hub(self) -> bool:
+        return self.givens.hub if self.hub is None else self.hub
+
+    def cache_key(self):
+        """Hashable key covering *everything* dispatch depends on.
+
+        The frozen dataclass hash already covers the arithmetic fields;
+        ``mesh`` (compare=False) is appended by identity so that engines
+        re-used across meshes miss the cache instead of returning arrays
+        with stale placement.
+        """
+        return (self, None if self.mesh is None else id(self.mesh))
+
+    def validate(self):
+        """Early validation against the registry's capability metadata."""
+        from . import registry
+        spec = registry.get_backend(self.backend)  # raises w/ available set
+        caps = spec.capabilities
+        if self.schedule not in self.SCHEDULES:
+            raise ValueError(f"unknown schedule {self.schedule!r}; "
+                             f"expected one of {self.SCHEDULES}")
+        if self.schedule not in caps.schedules:
+            raise ValueError(
+                f"backend {self.backend!r} does not support "
+                f"schedule={self.schedule!r} (supported: {caps.schedules})")
+        if self.mesh is not None and not caps.sharding:
+            capable = [n for n, c in registry.list_backends().items()
+                       if c.sharding]
+            raise ValueError(
+                f"backend {self.backend!r} has no sharding capability; "
+                f"mesh dispatch is available on: {', '.join(capable)}")
+        if caps.bit_exact:
+            self.givens.validate()
+        return spec

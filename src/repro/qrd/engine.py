@@ -1,0 +1,200 @@
+"""The solver-grade QRD engine: registry-dispatched, problem-level API.
+
+`QRDEngine` here is the canonical surface (DESIGN.md §9); the legacy
+``repro.core.QRDEngine`` dataclass is a thin shim over it.  Three layers:
+
+* **decompose** — ``engine(A)`` / ``engine.decompose(A)``: batched
+  ``(Q, R)`` via the registered backend, one jitted callable per
+  ``(m, n, compute_q, config)`` held in a *bounded* LRU (churning many
+  shapes evicts cold callables instead of growing without bound; see the
+  repo's lru_cache tracer-leak pitfall — the cache stores only jitted
+  callables keyed by static shape, never arrays from inside a trace).
+* **solve** — ``engine.solve(A, b)``: batched least squares via the
+  Q-free augmented-column trick + `repro.qrd.solve.back_substitute`.
+* **rls** — ``engine.rls(n)``: a streaming QRD-RLS state
+  (`repro.qrd.rls.RLSState`) on the backend-appropriate update path.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+
+from .config import QRDConfig
+from .solve import lstsq_from_triangular
+
+__all__ = ["QRDEngine"]
+
+
+class QRDEngine:
+    """Registry-dispatched batched QRD with problem-level methods.
+
+    Parameters
+    ----------
+    config : QRDConfig, optional
+        The problem configuration; defaults to ``QRDConfig()``.
+    max_cache : int
+        Bound on the jitted-callable LRU (distinct
+        ``(m, n, compute_q, config)`` keys held at once); least-recently
+        used entries are evicted beyond it.
+    **overrides
+        Field overrides applied on top of ``config`` — any `QRDConfig`
+        field, e.g. ``backend='cordic_pallas'``, ``schedule='sameh_kuck'``,
+        ``mesh=mesh``.  ``givens_config=`` is accepted as an alias for
+        ``givens=`` (legacy spelling).
+
+    Examples
+    --------
+    >>> eng = QRDEngine(backend='cordic_pallas',
+    ...                 givens=GivensConfig(hub=True, n=26))
+    >>> Q, R = eng(A)                      # decomposition
+    >>> x = eng.solve(A, b)                # batched least squares
+    >>> state = eng.rls(n)                 # streaming QRD-RLS
+    """
+
+    def __init__(self, config: QRDConfig | None = None, *, max_cache=32,
+                 **overrides):
+        if config is None:
+            config = QRDConfig()
+        if "givens_config" in overrides:
+            overrides["givens"] = overrides.pop("givens_config")
+        if overrides:
+            config = config.replace(**overrides)
+        self._spec = config.validate()   # raises early: bad backend/schedule
+        self.config = config
+        if max_cache < 1:
+            raise ValueError("max_cache must be >= 1")
+        self._max_cache = int(max_cache)
+        self._fn_cache: OrderedDict = OrderedDict()
+
+    # -- introspection --------------------------------------------------------
+    @property
+    def capabilities(self):
+        """The configured backend's `BackendCapabilities`."""
+        return self._spec.capabilities
+
+    def __repr__(self):
+        return (f"QRDEngine(backend={self.config.backend!r}, "
+                f"schedule={self.config.schedule!r}, "
+                f"cached={len(self._fn_cache)}/{self._max_cache})")
+
+    # -- decomposition --------------------------------------------------------
+    def _dispatch(self, A, compute_q, config: QRDConfig | None = None):
+        """Registry dispatch with the bounded jitted-callable LRU.
+
+        ``config`` defaults to the engine's own; the legacy shim passes a
+        per-call config rebuilt from its mutable fields, so field
+        mutation misses the cache instead of returning stale results.
+        """
+        if config is None:
+            config = self.config
+        A = jnp.asarray(A)
+        if A.ndim < 2:
+            raise ValueError(f"expected (..., m, n) operand, got {A.shape}")
+        m, n = A.shape[-2], A.shape[-1]
+        key = (m, n, bool(compute_q), config.cache_key())
+        fn = self._fn_cache.pop(key, None)
+        if fn is None:
+            spec = config.validate()
+            fn = jax.jit(spec.builder(config, m, n, bool(compute_q)))
+        self._fn_cache[key] = fn           # (re-)insert as most-recent
+        while len(self._fn_cache) > self._max_cache:
+            self._fn_cache.popitem(last=False)
+        if config.mesh is not None:
+            from repro.launch.sharding import shard_qrd_batch
+            A = shard_qrd_batch(jnp.asarray(A, jnp.float64), config.mesh)
+        return fn(A)
+
+    def __call__(self, A, compute_q=True):
+        """Batched QRD: ``A (..., m, n) -> (Q, R)`` (Q None w/o compute_q)."""
+        return self._dispatch(A, compute_q)
+
+    decompose = __call__
+
+    # -- least squares --------------------------------------------------------
+    def solve(self, A, b, return_residuals=False):
+        """Batched least squares ``min_x ||A x - b||`` without forming Q.
+
+        The engine triangularizes the augmented matrix ``[A | b]`` with
+        ``compute_q=False`` — the appended column(s) come out as ``Qᵀ b``
+        under the same rotations that reduce A — then back-substitutes
+        (`repro.qrd.solve`).  Runs on whatever backend/schedule/mesh this
+        engine is configured with; per-backend accuracy vs
+        ``np.linalg.lstsq`` is documented in
+        `repro.qrd.solve.SOLVE_TOLERANCES`.
+
+        Parameters
+        ----------
+        A : (..., m, n) array_like, with ``m >= n`` (full-rank for a
+            finite solution, as with any non-pivoting QR solve).
+        b : (..., m) or (..., m, k) array_like
+            One RHS vector per matrix, or ``k`` stacked RHS columns.
+        return_residuals : bool
+            Also return the ``(..., k)`` residual two-norms
+            ``||A x - b||`` — free with the augmented-column trick (the
+            annihilated tail of the b column carries them).
+
+        Returns
+        -------
+        x : (..., n) or (..., n, k) float64 (matching ``b``), or
+        ``(x, residuals)`` when ``return_residuals``.
+        """
+        A = jnp.asarray(A, jnp.float64)
+        b = jnp.asarray(b, jnp.float64)
+        m, n = A.shape[-2], A.shape[-1]
+        if m < n:
+            raise ValueError(f"solve() needs m >= n (got {m} x {n}); "
+                             "underdetermined systems have no unique "
+                             "least-squares triangular solve")
+        vec = b.ndim == A.ndim - 1
+        B = b[..., None] if vec else b
+        if B.ndim != A.ndim or B.shape[-2] != m:
+            raise ValueError(f"b rows must match A rows: A {A.shape}, "
+                             f"b {b.shape}")
+        aug = jnp.concatenate([A, B], axis=-1)
+        _, Raug = self._dispatch(aug, False)
+        x, resid = lstsq_from_triangular(Raug, n)
+        if vec:
+            x, resid = x[..., 0], resid[..., 0]
+        return (x, resid) if return_residuals else x
+
+    # -- streaming RLS --------------------------------------------------------
+    def rls(self, n, lam=0.99, delta=1e-3, block=None):
+        """Create a streaming QRD-RLS state bound to this engine's backend.
+
+        Parameters
+        ----------
+        n : int
+            Filter length (columns of the carried R).
+        lam : float
+            Forgetting factor λ.
+        delta : float
+            Initial diagonal loading of R (regularizes the cold start).
+        block : int, optional
+            Update granularity.  ``None`` selects the backend's natural
+            path: the cordic family updates per snapshot on the
+            bit-accurate unit (`GivensUnit.annihilate` under one jitted
+            scan), ``'blockfp_pallas'`` batches ``block=4`` snapshots per
+            kernel-resident block annihilation, and the float backends
+            use a plain f64 rotation loop.  An explicit ``block`` forces
+            the blocked-kernel path on any backend.
+
+        Returns
+        -------
+        `repro.qrd.rls.RLSState` — ``state.update(x, d)`` /
+        ``state.weights()``.
+        """
+        from repro.core.givens import GivensUnit
+        from .rls import RLSState
+
+        cfg = self.config
+        if block is not None or cfg.backend == "blockfp_pallas":
+            return RLSState(n, lam=lam, delta=delta, mode="block",
+                            block=4 if block is None else int(block),
+                            hub=cfg.blockfp_hub(), iters=cfg.blockfp_iters(),
+                            frac=cfg.frac, interpret=cfg.interpret)
+        if cfg.backend in ("cordic", "cordic_pallas"):
+            return RLSState(n, lam=lam, delta=delta, mode="unit",
+                            unit=GivensUnit(cfg.givens))
+        return RLSState(n, lam=lam, delta=delta, mode="float")

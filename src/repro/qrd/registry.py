@@ -1,0 +1,135 @@
+"""Backend registry for the solver-grade QRD API (DESIGN.md §9).
+
+The registry replaces the if/elif dispatch that used to live inside
+``QRDEngine._build``: every backend is an entry mapping a name to a
+*builder* plus a :class:`BackendCapabilities` record.  The engine looks
+backends up here, validates the requested configuration against the
+capability metadata (schedules, sharding, wavefront routing), and builds
+one jitted ``(A) -> (Q, R)`` callable per shape.  Third parties add
+backends with :func:`register_backend` — no core edits required.
+
+Builder contract
+----------------
+``builder(config, m, n, compute_q) -> callable``
+
+* ``config``   : the resolved :class:`repro.qrd.config.QRDConfig`;
+* ``m, n``     : static matrix shape (trailing two axes of the operand);
+* ``compute_q``: whether the returned callable must produce Q.
+
+The returned callable maps a ``(..., m, n)`` array to ``(Q, R)`` with
+``Q is None`` when ``compute_q=False``.  It must be jit-compatible: the
+engine wraps it in ``jax.jit`` and memoizes it per
+``(m, n, compute_q, config)`` in a bounded LRU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+__all__ = ["BackendCapabilities", "BackendSpec", "register_backend",
+           "unregister_backend", "get_backend", "list_backends",
+           "available_backends"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendCapabilities:
+    """What a QRD backend can do — drives validation and error messages.
+
+    Parameters
+    ----------
+    bit_exact : bool
+        The backend reproduces the paper's unit bit-for-bit (the
+        ``'cordic'`` family contract, DESIGN.md §5).
+    schedules : tuple[str, ...]
+        Rotation schedules the backend understands.  Backends that do not
+        consume a Givens schedule at all (``'jnp'``) list only ``'col'``
+        and are rejected early when another schedule is requested.
+    wavefront : bool
+        ``schedule='sameh_kuck'`` routes onto the stage-parallel wavefront
+        datapath (DESIGN.md §8) instead of a flattened step order.
+    sharding : bool
+        The backend composes with a batch-sharding mesh
+        (``QRDConfig.mesh``, `repro.launch.sharding.shard_qrd_batch`).
+    dtypes : tuple[str, ...]
+        Output dtypes the backend can produce.
+    description : str
+        One line for docs and error messages.
+    """
+
+    bit_exact: bool = False
+    schedules: tuple[str, ...] = ("col", "sameh_kuck")
+    wavefront: bool = False
+    sharding: bool = False
+    dtypes: tuple[str, ...] = ("float64",)
+    description: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """A registry entry: name + builder + capabilities."""
+
+    name: str
+    builder: Callable
+    capabilities: BackendCapabilities
+
+
+_REGISTRY: dict[str, BackendSpec] = {}
+
+
+def register_backend(name: str, builder: Callable,
+                     capabilities: BackendCapabilities | None = None,
+                     *, overwrite: bool = False) -> BackendSpec:
+    """Register a QRD backend under ``name``.
+
+    Parameters
+    ----------
+    name : str
+        Registry key — becomes a valid ``QRDConfig.backend`` value.
+    builder : callable
+        ``builder(config, m, n, compute_q) -> (A) -> (Q, R)`` (see module
+        docstring for the full contract).
+    capabilities : BackendCapabilities, optional
+        Capability metadata; defaults to the conservative record (not
+        bit-exact, both schedules, no wavefront/sharding).
+    overwrite : bool
+        Allow replacing an existing entry (default: raise on collision so
+        a typo cannot silently shadow a built-in).
+
+    Returns
+    -------
+    BackendSpec — the stored entry.
+    """
+    if not name or not isinstance(name, str):
+        raise ValueError(f"backend name must be a non-empty str, got {name!r}")
+    if not callable(builder):
+        raise TypeError(f"builder for {name!r} must be callable")
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    spec = BackendSpec(name, builder, capabilities or BackendCapabilities())
+    _REGISTRY[name] = spec
+    return spec
+
+
+def unregister_backend(name: str) -> None:
+    """Remove a backend (mainly for tests of third-party registration)."""
+    _REGISTRY.pop(name, None)
+
+
+def get_backend(name: str) -> BackendSpec:
+    """Look a backend up; unknown names raise with the available set."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; registered backends: "
+            f"{', '.join(sorted(_REGISTRY))}") from None
+
+
+def list_backends() -> dict[str, BackendCapabilities]:
+    """Name -> capabilities for every registered backend (sorted copy)."""
+    return {k: _REGISTRY[k].capabilities for k in sorted(_REGISTRY)}
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))

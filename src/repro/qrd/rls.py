@@ -1,0 +1,202 @@
+"""Streaming QRD-RLS state — the paper's adaptive-filtering application.
+
+QRD-RLS never forms the (ill-conditioned) covariance matrix: the carried
+state is the Cholesky-equivalent pair ``[R | z]`` of the forgetting-
+factor-weighted data matrix, and every new snapshot ``(x, d)`` is
+annihilated into it by exactly the Givens rotations the paper's unit
+computes (vectoring on the leading pair, σ-replay across the row).  The
+beamforming example used to hand-roll this loop; `RLSState` is the
+library-grade replacement, with three update paths:
+
+* ``mode='unit'`` — per-snapshot on the bit-accurate `GivensUnit`: the n
+  pivot annihilations run inside one jitted ``lax.fori_loop`` over
+  `GivensUnit.annihilate` (traced pivot column via the roll trick — one
+  fixed shape, one compile, no per-rotation host round-trips);
+* ``mode='block'`` — the kernel-resident path: ``block`` snapshots are
+  stacked under ``[R | z]`` and annihilated by ONE blocked Pallas
+  schedule (`repro.kernels.ops.givens_block_apply` on
+  `ops.rls_block_steps`), with exponential forgetting telescoped exactly
+  (state weighted λ^{b/2}, pending row i by λ^{(b-1-i)/2});
+* ``mode='float'`` — plain f64 Givens loop (algorithmic baseline).
+
+Weights come from the shared jit-safe back-substitution
+(`repro.qrd.solve.back_substitute`) — the same triangular solve the
+engine's `solve()` uses.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .solve import back_substitute
+
+__all__ = ["RLSState"]
+
+_MODES = ("float", "unit", "block")
+
+
+class RLSState:
+    """Carried QRD-RLS state ``[R | z]`` with streaming updates.
+
+    Parameters
+    ----------
+    n : int
+        Filter length (size of the carried upper-triangular R).
+    lam : float
+        Forgetting factor λ in (0, 1].
+    delta : float
+        Initial diagonal loading: ``R0 = delta * I`` (cold-start
+        regularization, standard QRD-RLS initialization).
+    mode : str
+        ``'float'`` | ``'unit'`` | ``'block'`` (see module docstring).
+        Usually chosen by `repro.qrd.QRDEngine.rls` from the backend.
+    unit : GivensUnit, required for ``mode='unit'``
+        The bit-accurate rotator the updates run on.
+    block, hub, iters, frac, interpret :
+        Blocked-kernel parameters (``mode='block'``): snapshots per
+        kernel launch and the block-FP datapath knobs of
+        `repro.kernels.ops.givens_block_apply`.
+
+    Attributes
+    ----------
+    R : (n, n) float64 ndarray — carried triangular factor.
+    z : (n,) float64 ndarray — carried rotated target vector.
+    updates : int — snapshots absorbed (committed + pending).
+
+    Notes
+    -----
+    In ``mode='block'`` snapshots accumulate in a pending buffer and are
+    committed ``block`` at a time; `weights` reads the *committed* state
+    (call `flush` first to force a partial block through the kernel).
+    """
+
+    def __init__(self, n, lam=0.99, delta=1e-3, *, mode="float", unit=None,
+                 block=4, hub=True, iters=24, frac=24, interpret=None):
+        if mode not in _MODES:
+            raise ValueError(f"unknown mode {mode!r}; expected one of {_MODES}")
+        if not 0.0 < lam <= 1.0:
+            raise ValueError(f"forgetting factor must be in (0, 1], got {lam}")
+        if mode == "unit" and unit is None:
+            raise ValueError("mode='unit' needs a GivensUnit")
+        self.n = int(n)
+        self.lam = float(lam)
+        self.mode = mode
+        self.unit = unit
+        self.block = int(block)
+        self._blockfp = dict(hub=hub, iters=iters, frac=frac,
+                             interpret=interpret)
+        self.R = np.eye(self.n) * float(delta)
+        self.z = np.zeros(self.n)
+        self.updates = 0
+        self._pending: list[np.ndarray] = []
+        if mode == "unit":
+            self._unit_update = jax.jit(self._make_unit_update())
+
+    # -- update paths ---------------------------------------------------------
+    def _make_unit_update(self):
+        unit, n = self.unit, self.n
+
+        def update(P, prow):
+            """Annihilate one packed snapshot row into packed [R | z]."""
+            def body(k, carry):
+                P, prow = carry
+                xk, prow = unit.annihilate(P[k], prow, k)
+                return P.at[k].set(xk), prow
+            P, _ = jax.lax.fori_loop(0, n, body, (P, prow))
+            return P
+
+        return update
+
+    def _work(self, weight):
+        return np.concatenate([self.R, self.z[:, None]], axis=1) * weight
+
+    def update(self, x, d):
+        """Absorb one snapshot: rotate ``[x, d]`` into ``[√λ R | √λ z]``.
+
+        Parameters
+        ----------
+        x : (n,) array_like — input/regressor snapshot.
+        d : scalar — desired response.
+
+        Returns
+        -------
+        self (for chaining).
+        """
+        row = np.concatenate([np.asarray(x, np.float64).ravel(),
+                              [float(d)]])
+        if row.shape[0] != self.n + 1:
+            raise ValueError(f"snapshot length {row.shape[0] - 1} != n="
+                             f"{self.n}")
+        self.updates += 1
+        if self.mode == "block":
+            self._pending.append(row)
+            if len(self._pending) >= self.block:
+                self.flush()
+            return self
+        work = self._work(np.sqrt(self.lam))
+        if self.mode == "unit":
+            P = self._unit_update(self.unit.encode(jnp.asarray(work)),
+                                  self.unit.encode(jnp.asarray(row)))
+            out = np.asarray(self.unit.decode(P))
+        else:  # float
+            out = work
+            for k in range(self.n):
+                a, b = out[k, k], row[k]
+                r = np.hypot(a, b)
+                if r == 0.0:
+                    continue
+                c, s = a / r, b / r
+                wk = c * out[k] + s * row
+                row = -s * out[k] + c * row
+                row[k] = 0.0
+                out[k] = wk
+        self.R, self.z = out[:, :self.n], out[:, self.n]
+        return self
+
+    def flush(self):
+        """Commit pending snapshots through the blocked kernel (mode='block').
+
+        One `givens_block_apply` launch annihilates all ``b`` stacked
+        rows column-by-column against the carried state; the forgetting
+        weights (state × λ^{b/2}, row i × λ^{(b-1-i)/2}) telescope to the
+        per-snapshot recursion exactly.  No-op when nothing is pending.
+        """
+        b = len(self._pending)
+        if b == 0:
+            return self
+        from repro.kernels import ops as kops
+        lam_half = np.sqrt(self.lam)
+        top = self._work(lam_half ** b)
+        rows = np.stack([row * lam_half ** (b - 1 - i)
+                         for i, row in enumerate(self._pending)])
+        W = np.concatenate([top, rows], axis=0)[None]   # (1, n+b, n+1)
+        steps = kops.rls_block_steps(self.n, b)
+        Wp = np.asarray(kops.givens_block_apply(W, steps,
+                                                **self._blockfp))[0]
+        self.R, self.z = Wp[:self.n, :self.n], Wp[:self.n, self.n]
+        self._pending = []
+        return self
+
+    # -- readout --------------------------------------------------------------
+    def weights(self, ridge=1e-12):
+        """Back-substitute the carried ``R w = z`` for the filter weights.
+
+        Parameters
+        ----------
+        ridge : float
+            Diagonal loading added to R before the solve (guards the
+            cold-started diagonal; matches the historical example's
+            ``solve(R + 1e-12 I, z)``).
+
+        Returns
+        -------
+        (n,) float64 ndarray.
+        """
+        R = self.R + ridge * np.eye(self.n) if ridge else self.R
+        return np.asarray(back_substitute(jnp.asarray(R),
+                                          jnp.asarray(self.z)))
+
+    def predict(self, x):
+        """Filter output ``xᵀ w`` for a snapshot ``x``."""
+        return float(np.asarray(x, np.float64) @ self.weights())

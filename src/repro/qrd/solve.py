@@ -1,0 +1,116 @@
+"""Problem-level least squares on top of the QRD engines (DESIGN.md §9).
+
+The paper motivates its rotation unit with QRD-based least squares in
+communication systems; this module closes that loop without ever forming
+Q.  For ``min_x ||A x - b||`` the engine triangularizes the *augmented*
+matrix ``[A | b]``: the same orthogonal transform that reduces A to R
+lands ``Qᵀ b`` in the appended column (the classic augmented-column / "z
+column" trick of QRD-RLS), so a ``compute_q=False`` decomposition plus a
+triangular back-substitution yields x.  This is exactly how a hardware
+array built from the paper's rotators would solve — the b column streams
+through the same rotation pipeline as the data columns.
+
+`back_substitute` is the new batched, jit-safe triangular solve; it is
+shared by `Engine.solve` and the streaming `RLSState.weights`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["back_substitute", "lstsq_from_triangular", "SOLVE_TOLERANCES"]
+
+
+#: Documented per-backend tolerances of ``engine.solve`` vs
+#: ``np.linalg.lstsq`` (relative error on x, well-conditioned inputs of
+#: moderate dynamic range; see tests/test_qrd_api.py which enforces them).
+#: The float32 backends are limited by their working precision; the
+#: bit-accurate cordic family by the N=26-bit internal significand; the
+#: block-FP kernel by its F=24 fraction bits; the fixed-point baseline by
+#: its pre-scaling (assumes a sane ``fixed_scale_exp``).
+SOLVE_TOLERANCES = {
+    "jnp": 1e-3,
+    "givens_float": 1e-3,
+    "cordic": 1e-5,
+    "cordic_pallas": 1e-5,
+    "blockfp_pallas": 1e-3,
+    "fixed": 1e-2,
+}
+
+
+@jax.jit
+def back_substitute(R, y):
+    """Solve the upper-triangular system ``R x = y``, batched and jitted.
+
+    Parameters
+    ----------
+    R : (..., n, n) array
+        Upper-triangular coefficient matrices (entries below the diagonal
+        are ignored — the QRD engines force them to structural zeros
+        anyway).  Any leading batch shape.
+    y : (..., n) or (..., n, k) array
+        Right-hand sides (a trailing RHS axis ``k`` is broadcast through).
+
+    Returns
+    -------
+    x with the shape of ``y`` — float64.
+
+    Notes
+    -----
+    Implemented as a ``lax.fori_loop`` over rows from the bottom up —
+    fixed trip count, one dynamic row update per step — so it traces to a
+    constant-size program regardless of batch shape; the wrapper is
+    jitted here (one compile per shape, shared by `QRDEngine.solve` and
+    `RLSState.weights`).  A zero diagonal (rank-deficient R)
+    produces inf/nan, matching direct substitution; callers needing
+    ridge behavior add it to R beforehand (see `RLSState.weights`).
+    """
+    R = jnp.asarray(R, jnp.float64)
+    y = jnp.asarray(y, jnp.float64)
+    vec = y.ndim == R.ndim - 1
+    if vec:
+        y = y[..., None]
+    n = R.shape[-1]
+    if y.shape[-2] != n:
+        raise ValueError(f"shape mismatch: R is (..., {n}, {n}), "
+                         f"y rows = {y.shape[-2]}")
+
+    def body(i, x):
+        row = n - 1 - i
+        # rows below `row` are already solved; rows above still hold the
+        # zero init, and R's upper-triangular structure ignores them.
+        acc = jnp.einsum("...j,...jk->...k", R[..., row, :], x)
+        xi = (y[..., row, :] - acc) / R[..., row, row][..., None]
+        return x.at[..., row, :].set(xi)
+
+    x = jax.lax.fori_loop(0, n, body, jnp.zeros_like(y))
+    return x[..., 0] if vec else x
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def lstsq_from_triangular(Raug, n):
+    """Extract the least-squares solution from a triangularized ``[A | b]``.
+
+    Parameters
+    ----------
+    Raug : (..., m, n + k) array
+        The R factor of the augmented matrix: columns ``:n`` hold R(A),
+        columns ``n:`` hold ``Qᵀ b``.
+    n : int
+        Column count of the original A.
+
+    Returns
+    -------
+    (x, resid) where ``x`` is ``(..., n, k)`` and ``resid`` is the
+    ``(..., k)`` residual two-norms ``||A x - b||`` read off the
+    annihilated tail of the b column(s) — free with the augmented trick.
+    """
+    Raug = jnp.asarray(Raug, jnp.float64)
+    R = Raug[..., :n, :n]
+    C = Raug[..., :n, n:]
+    x = back_substitute(R, C)
+    tail = Raug[..., n:, n:]
+    resid = jnp.sqrt(jnp.sum(tail * tail, axis=-2))
+    return x, resid

@@ -1,0 +1,241 @@
+"""Solver-grade QRD API (DESIGN.md §9): registry, config, solve, shims.
+
+The contract under test: the registry-dispatched `repro.qrd.QRDEngine`
+reproduces the pre-refactor free functions exactly (bit-identical for the
+cordic family), `solve()` matches `np.linalg.lstsq` within the documented
+per-backend tolerances (`SOLVE_TOLERANCES`), the jitted-callable cache is
+*bounded* (churning 50 shapes must not grow without bound), and the
+legacy `repro.core.QRDEngine` dataclass plus `qr_*` free functions keep
+working as thin shims over the new surface.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import qrd as api
+from repro.core import (GivensConfig, GivensUnit, QRDEngine as LegacyEngine,
+                        qr_cordic, qr_cordic_pallas, qr_jnp, snr_db)
+
+RNG = np.random.default_rng(21)
+
+
+def matrices(shape, r=2.0):
+    mag = np.exp2(RNG.uniform(-r, r, size=shape))
+    return RNG.choice([-1.0, 1.0], size=shape) * mag
+
+
+def _assert_bit_exact(a, b):
+    for u, v in zip(a, b):
+        if u is None:
+            assert v is None
+            continue
+        np.testing.assert_array_equal(np.asarray(u), np.asarray(v))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_builtin_backends_registered_with_capabilities():
+    names = api.available_backends()
+    assert set(names) >= {"jnp", "givens_float", "cordic", "cordic_pallas",
+                          "blockfp_pallas", "fixed"}
+    caps = api.list_backends()
+    assert caps["cordic"].bit_exact and caps["cordic_pallas"].bit_exact
+    assert caps["cordic_pallas"].wavefront and caps["blockfp_pallas"].wavefront
+    assert not caps["jnp"].bit_exact and not caps["jnp"].sharding
+    assert caps["cordic_pallas"].sharding
+
+
+def test_register_third_party_backend_dispatches():
+    def builder(config, m, n, compute_q):
+        # a "new" backend: float64 Householder (not a built-in combination)
+        return lambda A: qr_jnp(A, jnp.float64, compute_q=compute_q)
+
+    api.register_backend("qr64_test", builder,
+                         api.BackendCapabilities(description="test entry"))
+    try:
+        A = matrices((3, 4, 4))
+        eng = api.QRDEngine(backend="qr64_test")
+        Q, R = eng(A)
+        np.testing.assert_allclose(np.asarray(Q) @ np.asarray(R), A,
+                                   atol=1e-10)
+        # duplicate registration is rejected unless overwrite=True
+        with pytest.raises(ValueError, match="already registered"):
+            api.register_backend("qr64_test", builder)
+        api.register_backend("qr64_test", builder, overwrite=True)
+    finally:
+        api.unregister_backend("qr64_test")
+    assert "qr64_test" not in api.available_backends()
+
+
+def test_registry_powered_error_messages():
+    with pytest.raises(ValueError, match="registered backends"):
+        api.QRDEngine(backend="nope")
+    with pytest.raises(ValueError, match="unknown schedule"):
+        api.QRDEngine(backend="jnp", schedule="diagonal")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="sharding capability"):
+        api.QRDEngine(backend="jnp", mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# registry-dispatched engine == pre-refactor functions (acceptance)
+# ---------------------------------------------------------------------------
+def test_registry_cordic_paths_bit_identical_to_free_functions():
+    A = matrices((3, 4, 4), r=4.0)
+    cfg = GivensConfig(hub=True, n=26)
+    unit = GivensUnit(cfg)
+    ref = qr_cordic(A, unit)
+    got_engine = api.QRDEngine(backend="cordic", givens=cfg)(A)
+    _assert_bit_exact(ref, got_engine)
+    got_pallas = api.QRDEngine(backend="cordic_pallas", givens=cfg)(A)
+    _assert_bit_exact(ref, got_pallas)
+    _assert_bit_exact(qr_cordic_pallas(A, unit), got_pallas)
+
+
+# ---------------------------------------------------------------------------
+# solve(): golden tolerances vs np.linalg.lstsq (IEEE + HUB)
+# ---------------------------------------------------------------------------
+def _lstsq_ref(A, b):
+    return np.stack([np.linalg.lstsq(A[i], b[i], rcond=None)[0]
+                     for i in range(A.shape[0])])
+
+
+@pytest.mark.parametrize("backend,kwargs", [
+    ("jnp", {}),
+    ("givens_float", {}),
+    ("cordic", {"givens": GivensConfig(hub=False, n=26)}),       # IEEE
+    ("cordic", {"givens": GivensConfig(hub=True, n=26)}),        # HUB
+    ("blockfp_pallas", {"schedule": "sameh_kuck",
+                        "givens": GivensConfig(hub=True, n=26)}),
+    ("fixed", {"fixed_scale_exp": 5}),
+])
+def test_solve_matches_lstsq_within_documented_tolerance(backend, kwargs):
+    A = matrices((3, 6, 3))
+    b = RNG.normal(size=(3, 6)) * 2.0
+    eng = api.QRDEngine(backend=backend, **kwargs)
+    x = np.asarray(eng.solve(A, b))
+    ref = _lstsq_ref(A, b)
+    tol = api.SOLVE_TOLERANCES[backend]
+    err = np.max(np.abs(x - ref) / np.maximum(np.abs(ref), 1e-6))
+    assert err < tol, (backend, err, tol)
+
+
+def test_solve_cordic_pallas_wavefront_and_multi_rhs_residuals():
+    A = matrices((2, 5, 3))
+    B = RNG.normal(size=(2, 5, 2)) * 2.0
+    eng = api.QRDEngine(backend="cordic_pallas", schedule="sameh_kuck",
+                        givens=GivensConfig(hub=True, n=26))
+    x, resid = eng.solve(A, B, return_residuals=True)
+    assert np.asarray(x).shape == (2, 3, 2)
+    for i in range(2):
+        for k in range(2):
+            xr = np.linalg.lstsq(A[i], B[i, :, k], rcond=None)[0]
+            np.testing.assert_allclose(np.asarray(x)[i, :, k], xr, atol=1e-5,
+                                       rtol=1e-4)
+            # the annihilated tail of the b column carries ||Ax - b||
+            want = np.linalg.norm(A[i] @ xr - B[i, :, k])
+            np.testing.assert_allclose(np.asarray(resid)[i, k], want,
+                                       rtol=1e-4, atol=1e-6)
+
+
+def test_solve_shape_validation():
+    eng = api.QRDEngine(backend="jnp")
+    with pytest.raises(ValueError, match="m >= n"):
+        eng.solve(np.ones((2, 3, 4)), np.ones((2, 3)))
+    with pytest.raises(ValueError, match="rows must match"):
+        eng.solve(np.ones((2, 4, 3)), np.ones((2, 5)))
+
+
+def test_back_substitute_batched_matches_dense_solve():
+    R = np.triu(RNG.normal(size=(4, 5, 5))) + 3 * np.eye(5)
+    y = RNG.normal(size=(4, 5))
+    x = np.asarray(api.back_substitute(R, y))
+    for i in range(4):
+        np.testing.assert_allclose(x[i], np.linalg.solve(R[i], y[i]),
+                                   atol=1e-10)
+    # trailing RHS axis broadcasts through
+    Y = RNG.normal(size=(4, 5, 3))
+    X = np.asarray(api.back_substitute(R, Y))
+    for i in range(4):
+        np.testing.assert_allclose(X[i], np.linalg.solve(R[i], Y[i]),
+                                   atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# bounded jitted-callable cache (satellite: 50-shape churn)
+# ---------------------------------------------------------------------------
+def test_fn_cache_is_bounded_lru_under_shape_churn():
+    eng = api.QRDEngine(backend="jnp", max_cache=16)
+    shapes = [(2 + i % 10, 2 + i % 3) for i in range(25)]
+    for i, (m, n) in enumerate(shapes):          # 50 keys: x2 for compute_q
+        for compute_q in (True, False):
+            Q, R = eng(RNG.normal(size=(2, m, max(2, min(m, n)))),
+                       compute_q=compute_q)
+            assert (Q is None) == (not compute_q)
+        assert len(eng._fn_cache) <= 16, (i, len(eng._fn_cache))
+    assert len(eng._fn_cache) == 16              # full, not overfull
+    # hot key survives churn: same shape returns the identical callable
+    key_before = next(reversed(eng._fn_cache))
+    fn_before = eng._fn_cache[key_before]
+    eng(RNG.normal(size=(2, key_before[0], key_before[1])),
+        compute_q=key_before[2])
+    assert eng._fn_cache[key_before] is fn_before
+
+
+def test_fn_cache_eviction_keeps_results_correct():
+    eng = api.QRDEngine(backend="givens_float", max_cache=1)
+    A1, A2 = matrices((2, 3, 3)), matrices((2, 4, 2))
+    Q1, R1 = eng(A1)
+    eng(A2)                                      # evicts the (3, 3) callable
+    assert len(eng._fn_cache) == 1
+    Q1b, R1b = eng(A1)                           # rebuilt, same results
+    np.testing.assert_array_equal(np.asarray(R1), np.asarray(R1b))
+
+
+# ---------------------------------------------------------------------------
+# legacy surface stays working (acceptance)
+# ---------------------------------------------------------------------------
+def test_legacy_engine_is_a_shim_over_the_registry():
+    A = matrices((3, 4, 4), r=4.0)
+    cfg = GivensConfig(hub=True, n=26)
+    legacy = LegacyEngine(backend="cordic", givens_config=cfg)
+    new = api.QRDEngine(backend="cordic", givens=cfg)
+    _assert_bit_exact(legacy(A), new(A))
+    assert len(legacy._fn_cache) >= 1            # the bounded LRU, exposed
+    # construction still fails fast on bad names
+    with pytest.raises(ValueError):
+        LegacyEngine(backend="nope")
+    with pytest.raises(ValueError):
+        LegacyEngine(schedule="nope")
+    # field mutation misses the cache instead of returning stale results
+    legacy.backend = "givens_float"
+    Q, R = legacy(A)
+    B = np.asarray(Q) @ np.asarray(R)
+    assert np.allclose(B, A, rtol=1e-3, atol=1e-3)
+    # problem-level methods ride along on the shim
+    x = legacy.solve(A[..., :2], A[..., 2])
+    assert np.asarray(x).shape == (3, 2)
+
+
+def test_qr_jnp_compute_q_uniform_signature():
+    A = matrices((4, 5, 3))
+    Q, R = qr_jnp(A, jnp.float64)
+    Qn, Rn = qr_jnp(A, jnp.float64, compute_q=False)
+    assert Qn is None
+    np.testing.assert_array_equal(np.asarray(R), np.asarray(Rn))
+    assert float(jnp.mean(snr_db(A, Q, R))) > 200.0
+
+
+def test_mesh_config_folds_sharded_dispatch_into_call():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    A = matrices((4, 4, 4), r=2.0)
+    cfg = GivensConfig(hub=True, n=26)
+    plain = api.QRDEngine(backend="cordic", givens=cfg)
+    sharded = api.QRDEngine(backend="cordic", givens=cfg, mesh=mesh)
+    _assert_bit_exact(plain(A), sharded(A))
+    # solve() rides the same mesh dispatch (augmented operand is sharded)
+    b = RNG.normal(size=(4, 4))
+    np.testing.assert_array_equal(np.asarray(plain.solve(A, b)),
+                                  np.asarray(sharded.solve(A, b)))
