@@ -141,6 +141,86 @@ def measured_solve_rates(batch=64, m=6, n=3,
     return out
 
 
+def measured_complex_qrd_rates(batch=64, m=4,
+                               combos=(("cordic", "col"),
+                                       ("cordic_pallas", "sameh_kuck"))):
+    """Complex QRD throughput on the three-rotation datapath (§10).
+
+    Every annihilation spends three unit rotations (two phase + one real
+    Givens) across twice the lanes (re/im), so the architectural cost is
+    ~6x the real path per step — these rows track that the measured ratio
+    stays in that ballpark and that the complex wavefront's cold
+    end-to-end time keeps its one-stage-body trace advantage.
+    Returns ``{f"complex:{backend}/{schedule}": record}``.
+    """
+    import jax
+    from repro import qrd as api
+    from repro.core import GivensConfig, givens_schedule, sameh_kuck_schedule
+
+    rng = np.random.default_rng(0)
+    A = (rng.choice([-1.0, 1.0], (batch, m, m))
+         * np.exp2(rng.uniform(-4, 4, (batch, m, m)))
+         + 1j * (rng.choice([-1.0, 1.0], (batch, m, m))
+                 * np.exp2(rng.uniform(-4, 4, (batch, m, m)))))
+    steps = len(givens_schedule(m, m))
+    stages = len(sameh_kuck_schedule(m, m))
+    cfg = GivensConfig(hub=True, n=26)
+    out = {}
+    for backend, sched in combos:
+        eng = api.QRDEngine(backend=backend, schedule=sched, givens=cfg,
+                            dtype="complex128")
+        t0 = time.perf_counter()
+        jax.block_until_ready(eng(A))
+        cold = time.perf_counter() - t0
+        sec = timed(lambda: eng(A))
+        wavefront = sched == "sameh_kuck" and backend != "cordic"
+        out[f"complex:{backend}/{sched}"] = {
+            "backend": backend, "schedule": sched, "dtype": "complex128",
+            "batch": batch, "m": m,
+            "qrd_per_s": batch / sec,
+            "end_to_end_s": cold,
+            "steps": steps, "stages": stages,
+            "seq_depth": stages if wavefront else steps,
+        }
+    return out
+
+
+def measured_complex_solve_rates(batch=64, m=6, n=3,
+                                 combos=(("cordic", "col"),
+                                         ("givens_float", "col"))):
+    """Complex ``engine.solve`` throughput (MIMO-detection workload, §10).
+
+    The batched complex least-squares path — triangularize ``[A | b]``
+    with the three-rotation decomposition, conjugate-aware
+    back-substitution — i.e. the per-channel-use work of the MIMO
+    zero-forcing detector (`examples/mimo_detection.py`).
+    Returns ``{f"complex-solve:{backend}/{schedule}": record}``.
+    """
+    import jax
+    from repro import qrd as api
+    from repro.core import GivensConfig
+
+    rng = np.random.default_rng(0)
+    A = (rng.normal(size=(batch, m, n))
+         + 1j * rng.normal(size=(batch, m, n)))
+    b = rng.normal(size=(batch, m)) + 1j * rng.normal(size=(batch, m))
+    cfg = GivensConfig(hub=True, n=26)
+    out = {}
+    for backend, sched in combos:
+        eng = api.QRDEngine(backend=backend, schedule=sched, givens=cfg,
+                            dtype="complex128")
+        t0 = time.perf_counter()
+        jax.block_until_ready(eng.solve(A, b))
+        cold = time.perf_counter() - t0
+        sec = timed(lambda: eng.solve(A, b))
+        out[f"complex-solve:{backend}/{sched}"] = {
+            "backend": backend, "schedule": sched, "dtype": "complex128",
+            "batch": batch, "m": m, "n": n,
+            "solve_per_s": batch / sec, "end_to_end_s": cold,
+        }
+    return out
+
+
 def main(full=False):
     print("# table6: design,fmax_mhz,latency_cyc,II_e8,mops_model,mops_paper")
     rows = []
@@ -188,8 +268,23 @@ def main(full=False):
     for key, r in solve.items():
         print(f"{key},{r['solve_per_s']:.1f},{r['end_to_end_s']:.3f}")
 
+    # Complex datapath rows (DESIGN.md §10): three-rotation QRD and the
+    # MIMO-detection solve workload on the complex-capable backends.
+    print("# complex QRD (4x4): backend/schedule,qrd_per_s,end_to_end_s,"
+          "seq_depth")
+    cqrd = measured_complex_qrd_rates(m=4)
+    for key, r in cqrd.items():
+        print(f"{key},{r['qrd_per_s']:.1f},{r['end_to_end_s']:.3f},"
+              f"{r['seq_depth']}")
+    print("# complex solve (6x3 + rhs): backend/schedule,solve_per_s,"
+          "end_to_end_s")
+    csolve = measured_complex_solve_rates()
+    for key, r in csolve.items():
+        print(f"{key},{r['solve_per_s']:.1f},{r['end_to_end_s']:.3f}")
+
     rate = measured_kernel_rate()
-    write_bench_json(qrd, qrd8, solve, speedup_8x8, rate)
+    write_bench_json(qrd, qrd8, solve, speedup_8x8, rate,
+                     complex_rows={**cqrd, **csolve})
     csv_row("table6_7_throughput", 1e6 / rate,
             f"model_speedup_vs_[32]={ours/gen:.1f}x;"
             f"pallas_interp_rot_per_s={rate:.0f};"
@@ -198,11 +293,12 @@ def main(full=False):
             f"qrd_blockfp_per_s="
             f"{qrd['blockfp_pallas/col']['qrd_per_s']:.1f};"
             f"solve_jnp_per_s={solve['solve:jnp/col']['solve_per_s']:.1f};"
+            f"complex_qrd_per_s={cqrd['complex:cordic/col']['qrd_per_s']:.1f};"
             f"wavefront_8x8_speedup={speedup_8x8:.1f}x")
 
 
 def write_bench_json(qrd4, qrd8, solve, speedup_8x8, rot_per_s,
-                     path=BENCH_JSON):
+                     complex_rows=None, path=BENCH_JSON):
     """Emit the machine-readable perf trajectory (BENCH_qrd.json).
 
     One record per (backend, schedule, m) decomposition row — steady-state
@@ -218,7 +314,9 @@ def write_bench_json(qrd4, qrd8, solve, speedup_8x8, rot_per_s,
         "rotations_per_s": rot_per_s,
         "results": {**{f"{k} (4x4)": v for k, v in qrd4.items()},
                     **{f"{k} (8x8)": v for k, v in qrd8.items()},
-                    **{f"{k} (6x3)": v for k, v in solve.items()}},
+                    **{f"{k} (6x3)": v for k, v in solve.items()},
+                    **{f"{k} ({v['m']}x{v.get('n', v['m'])})": v
+                       for k, v in (complex_rows or {}).items()}},
         "wavefront_8x8_end_to_end_speedup": speedup_8x8,
     }
     with open(path, "w") as f:

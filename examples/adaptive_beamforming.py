@@ -33,12 +33,14 @@ def steering(theta_deg, n=N_ANT):
     return np.exp(1j * k * np.arange(n))
 
 
-def make_snapshots(rng):
+def make_snapshots(rng, complex_baseband=False):
     """One (x, s) draw: desired signal + two 9x-stronger interferers.
 
-    Complex arithmetic is carried as interleaved real rotations: the
-    returned snapshot stacks real/imag parts (the real-valued QRD-RLS
-    formulation the unit operates on).
+    ``complex_baseband=False`` carries the complex arithmetic as
+    interleaved real rotations (stacked real/imag parts — the real-valued
+    QRD-RLS formulation a real-only unit operates on).  With
+    ``complex_baseband=True`` the snapshot is the physical complex
+    baseband vector itself, for the complex datapath (DESIGN.md §10).
     """
     a_sig = steering(10.0)
     a_i1 = steering(-40.0)
@@ -50,21 +52,24 @@ def make_snapshots(rng):
         i2 = rng.normal() * 3.0
         noise = (rng.normal(size=N_ANT) + 1j * rng.normal(size=N_ANT)) * 0.1
         x = s * a_sig + i1 * a_i1 + i2 * a_i2 + noise
+        if complex_baseband:
+            return x, s
         return np.concatenate([x.real, x.imag]), s
 
     return snap
 
 
-def run_beamformer(state, label, snapshots=SNAPSHOTS, mse_bound=0.05):
+def run_beamformer(state, label, snapshots=SNAPSHOTS, mse_bound=0.05,
+                   complex_baseband=False):
     """Drive a library RLS state through the snapshot stream."""
     rng = np.random.default_rng(0)
-    snap = make_snapshots(rng)
+    snap = make_snapshots(rng, complex_baseband=complex_baseband)
     errs = []
     for t in range(snapshots):
         x, d = snap()
         state.update(x, d)
         w = state.weights()          # back-substituted beamformer weights
-        errs.append((x @ w - d) ** 2)
+        errs.append(np.abs(x @ w - d) ** 2)
         if (t + 1) % 100 == 0:
             print(f"step {t+1:4d}: MSE(last 50) = {np.mean(errs[-50:]):.4f}")
 
@@ -107,6 +112,28 @@ def main_blocked(block=4, snapshots=SNAPSHOTS):
                           snapshots=snapshots)
 
 
+def main_complex(use_cordic=True, snapshots=SNAPSHOTS):
+    """Complex QRD-RLS on the physical baseband snapshots (DESIGN.md §10).
+
+    The interleaved-real formulation above doubles the filter length to
+    carry re/im parts through a real-only rotator.  With the complex
+    datapath the state carries ``N_ANT`` genuinely complex weights and
+    every snapshot is annihilated by the three-rotation decomposition —
+    two phase rotations realizing the leading entries plus the real
+    Givens of the paper's unit — so the beamformer runs on the
+    physically-meaningful complex baseband model directly.
+    """
+    backend = "cordic" if use_cordic else "givens_float"
+    eng = QRDEngine(backend=backend, dtype="complex128",
+                    givens=GivensConfig(hub=True, n=26))
+    state = eng.rls(N_ANT, lam=LAMBDA, delta=1e-3)
+    label = ("complex baseband, CORDIC-HUB unit" if use_cordic
+             else "complex baseband, f64")
+    return run_beamformer(state, label, snapshots=snapshots,
+                          complex_baseband=True)
+
+
 if __name__ == "__main__":
     main()
     main_blocked()
+    main_complex()

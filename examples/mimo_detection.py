@@ -1,0 +1,133 @@
+"""Batched 4x4 MIMO detection on the complex QRD engine (DESIGN.md §10).
+
+The paper motivates its rotation unit with "advanced signal processing
+and communication applications"; MIMO detection is the flagship one: a
+receiver with ``Nr`` antennas observes ``y = H s + n`` where ``H`` is the
+complex channel matrix and ``s`` a vector of QPSK symbols, and every
+channel use needs a fresh complex least-squares solve — exactly the
+workload a hardware array of complex Givens rotators (three-rotation
+decomposition, §10) is built for.
+
+Two classic detectors, both on `repro.qrd.QRDEngine`:
+
+* **ZF** (zero forcing): ``ŝ = slice(argmin_s ||H s - y||)`` — one
+  batched ``engine.solve(H, y)`` over all channel uses, then a symbol
+  slicer.
+* **SQRD** (sorted-QRD successive interference cancellation): columns of
+  H are sorted by norm (weakest first, so the most reliable stream is
+  detected first from the bottom row of R), ``Q, R = engine(H_sorted)``,
+  and symbols are detected successively from the last row of
+  ``R ŝ = Q^H y`` with decisions fed back — the standard V-BLAST-style
+  QRD detector.
+
+Run:  PYTHONPATH=src python examples/mimo_detection.py
+
+Prints a BER-vs-SNR table for both detectors and sanity-checks the
+expected behavior (BER decreases with SNR; SQRD does not lose to ZF at
+high SNR beyond Monte-Carlo noise).
+"""
+import numpy as np
+
+from repro.core import GivensConfig
+from repro.qrd import QRDEngine
+
+NT = NR = 4            # 4x4 MIMO
+SNRS_DB = (0.0, 5.0, 10.0, 15.0, 20.0)
+CHANNEL_USES = 400     # batch of independent channel realizations
+
+
+def qpsk_symbols(rng, shape):
+    """Unit-energy Gray-mapped QPSK: (±1 ± 1j)/√2."""
+    bits = rng.integers(0, 2, size=shape + (2,))
+    return ((1 - 2 * bits[..., 0]) + 1j * (1 - 2 * bits[..., 1])) / np.sqrt(2)
+
+
+def qpsk_slice(x):
+    """Hard decision back onto the QPSK grid."""
+    return (np.sign(x.real) + 1j * np.sign(x.imag)) / np.sqrt(2)
+
+
+def qpsk_bit_errors(s_hat, s):
+    """Bit errors between sliced symbols and the transmitted grid points."""
+    return (np.sum(np.sign(s_hat.real) != np.sign(s.real))
+            + np.sum(np.sign(s_hat.imag) != np.sign(s.imag)))
+
+
+def detect_zf(engine, H, y):
+    """Zero forcing: one batched complex least-squares solve."""
+    return qpsk_slice(np.asarray(engine.solve(H, y)))
+
+
+def detect_sqrd(engine, H, y):
+    """Sorted-QRD successive interference cancellation.
+
+    Per channel use: permute columns by ascending norm, decompose the
+    permuted channel on the engine, rotate the observation by ``Q^H``,
+    then detect from the bottom row of R upward, subtracting decided
+    symbols (decision feedback).  Returns symbols in the original
+    antenna order.
+    """
+    B = H.shape[0]
+    norms = np.linalg.norm(H, axis=1)                  # (B, NT) column norms
+    perm = np.argsort(norms, axis=1)                   # weakest first
+    Hp = np.take_along_axis(H, perm[:, None, :], axis=2)
+    Q, R = engine(Hp)
+    Q, R = np.asarray(Q), np.asarray(R)
+    z = np.einsum("bij,bi->bj", Q[:, :, :NT].conj(), y)  # (Q^H y)[:NT]
+    s_hat = np.zeros((B, NT), dtype=complex)
+    for k in range(NT - 1, -1, -1):
+        resid = z[:, k] - np.einsum("bj,bj->b", R[:, k, k + 1:],
+                                    s_hat[:, k + 1:])
+        s_hat[:, k] = qpsk_slice(resid / R[:, k, k])
+    out = np.zeros_like(s_hat)
+    np.put_along_axis(out, perm, s_hat, axis=1)
+    return out
+
+
+def run(engine=None, snrs_db=SNRS_DB, uses=CHANNEL_USES, seed=0,
+        verbose=True):
+    """BER-vs-SNR sweep for both detectors.  Returns {detector: [BER]}."""
+    if engine is None:
+        engine = QRDEngine(backend="cordic", dtype="complex64",
+                           givens=GivensConfig(hub=True, n=26))
+    rng = np.random.default_rng(seed)
+    bers = {"zf": [], "sqrd": []}
+    if verbose:
+        print(f"{NT}x{NR} MIMO, QPSK, {uses} channel uses per point, "
+              f"backend={engine.config.backend!r} "
+              f"dtype={engine.config.dtype!r}")
+        print(f"{'SNR[dB]':>8} {'BER(ZF)':>10} {'BER(SQRD)':>10}")
+    for snr_db in snrs_db:
+        # SNR per receive antenna: E|h s|^2 = NT * Es = NT, noise var sigma^2.
+        sigma = np.sqrt(NT / 10.0 ** (snr_db / 10.0))
+        H = (rng.standard_normal((uses, NR, NT))
+             + 1j * rng.standard_normal((uses, NR, NT))) / np.sqrt(2)
+        s = qpsk_symbols(rng, (uses, NT))
+        n = sigma * (rng.standard_normal((uses, NR))
+                     + 1j * rng.standard_normal((uses, NR))) / np.sqrt(2)
+        y = np.einsum("bij,bj->bi", H, s) + n
+        nbits = 2 * uses * NT
+        for name, det in (("zf", detect_zf), ("sqrd", detect_sqrd)):
+            bers[name].append(qpsk_bit_errors(det(engine, H, y), s) / nbits)
+        if verbose:
+            print(f"{snr_db:8.1f} {bers['zf'][-1]:10.4f} "
+                  f"{bers['sqrd'][-1]:10.4f}")
+    return bers
+
+
+def main():
+    bers = run()
+    # Sanity: detection actually works — BER falls with SNR and is small
+    # at 20 dB (ZF 4x4 QPSK at 20 dB is well under a few percent; SQRD's
+    # ordered decision feedback does at least as well up to MC noise).
+    assert bers["zf"][-1] < bers["zf"][0]
+    assert bers["sqrd"][-1] < bers["sqrd"][0]
+    assert bers["zf"][-1] < 0.02, bers["zf"]
+    assert bers["sqrd"][-1] <= bers["zf"][-1] + 0.01, (
+        bers["sqrd"][-1], bers["zf"][-1])
+    print("\nOK: BER decreases with SNR; SQRD >= ZF reliability at 20 dB")
+    return bers
+
+
+if __name__ == "__main__":
+    main()

@@ -16,12 +16,68 @@ Layout:
     repro.checkpoint, repro.runtime   fault-tolerance substrate
     repro.configs   per-architecture configs (--arch selectable)
     repro.launch    mesh / dryrun / train / serve entry points
+
+x64 requirement
+---------------
+The bit-accurate arithmetic emulation in ``repro.core`` requires 64-bit
+integer lanes (internal significands up to ~48 bits), so importing
+``repro`` enables ``jax_enable_x64`` globally when it is off.  All
+model/launch code pins dtypes explicitly (bf16/f32/int32), so this is
+safe for fresh sessions — but it must never *silently* override an
+explicit user choice:
+
+* an explicit disable via the ``JAX_ENABLE_X64`` environment variable or
+  a thread-local override (``jax.experimental.enable_x64`` context /
+  ``jax.config`` local state) is detected and raises ``ImportError``
+  instead of being clobbered;
+* if JAX backends are already initialized (computations have run under
+  x64=False), the flip is applied but a ``UserWarning`` is emitted —
+  arrays created before the import keep their 32-bit dtypes.
+
+An explicit ``jax.config.update("jax_enable_x64", False)`` *before* any
+computation is indistinguishable from the default through JAX's public
+config API; if you need x64 off, set ``JAX_ENABLE_X64=0`` (detected,
+loud) or simply do not import ``repro``.
 """
+import os
+import warnings
+
 import jax
 
-# The bit-accurate arithmetic emulation in repro.core requires 64-bit integer
-# lanes (internal significands up to ~48 bits).  All model/launch code pins
-# dtypes explicitly (bf16/f32/int32), so enabling x64 globally is safe.
-jax.config.update("jax_enable_x64", True)
-
 __version__ = "1.0.0"
+
+
+def _require_x64():
+    if jax.config.jax_enable_x64:
+        return
+    env = os.environ.get("JAX_ENABLE_X64", "").strip().lower()
+    explicit = env in ("0", "false", "no", "off")
+    try:  # thread-local override (enable_x64 context manager / set_local)
+        from jax._src import config as _jcfg
+        local = _jcfg.enable_x64.get_local()
+        explicit = explicit or local is False
+    except Exception:
+        pass
+    if explicit:
+        raise ImportError(
+            "repro requires jax_enable_x64 (64-bit integer lanes for the "
+            "bit-accurate Givens unit), but x64 was explicitly disabled "
+            "(JAX_ENABLE_X64 env var or a local jax.config override). "
+            "Remove the explicit disable before importing repro.")
+    already_live = False
+    try:  # backends initialized => computations may have run under x64=False
+        from jax._src import xla_bridge as _xb
+        already_live = bool(getattr(_xb, "_backends", None))
+    except Exception:
+        pass
+    jax.config.update("jax_enable_x64", True)
+    if already_live:
+        warnings.warn(
+            "importing repro enabled jax_enable_x64 globally, but JAX "
+            "backends were already initialized — arrays created earlier "
+            "keep their 32-bit dtypes.  Import repro before running "
+            "computations (or set JAX_ENABLE_X64=1) to avoid mixed-width "
+            "sessions.", UserWarning, stacklevel=3)
+
+
+_require_x64()

@@ -3,10 +3,13 @@
 # sigma-bit reuse, conventional + HUB datapaths) and the QRD engines built on
 # it.  See DESIGN.md §1-§3.
 from .formats import (FloatFormat, HALF, SINGLE, DOUBLE,
-                      encode_ieee, decode_ieee, encode_hub, decode_hub)
+                      encode_ieee, decode_ieee, encode_hub, decode_hub,
+                      packed_is_zero)
 from .givens import GivensConfig, GivensUnit
 from .qrd import (QRDEngine, qr_cordic, qr_cordic_pallas, qr_blockfp_pallas,
                   qr_cordic_wavefront, qr_blockfp_wavefront,
+                  qr_cordic_complex, qr_cordic_complex_pallas,
+                  qr_cordic_complex_wavefront,
                   qr_blocked_sharded, qr_givens_float, qr_jnp, qr_fixed,
                   snr_db, givens_schedule, sameh_kuck_schedule)
 from .hub import hub_quantize, hub_error_bound
@@ -15,9 +18,12 @@ from . import cordic, converters
 __all__ = [
     "FloatFormat", "HALF", "SINGLE", "DOUBLE",
     "encode_ieee", "decode_ieee", "encode_hub", "decode_hub",
+    "packed_is_zero",
     "GivensConfig", "GivensUnit",
     "QRDEngine", "qr_cordic", "qr_cordic_pallas", "qr_blockfp_pallas",
     "qr_cordic_wavefront", "qr_blockfp_wavefront",
+    "qr_cordic_complex", "qr_cordic_complex_pallas",
+    "qr_cordic_complex_wavefront",
     "qr_blocked_sharded", "qr_givens_float", "qr_jnp", "qr_fixed",
     "snr_db", "givens_schedule", "sameh_kuck_schedule",
     "hub_quantize", "hub_error_bound",

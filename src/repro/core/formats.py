@@ -25,7 +25,7 @@ import numpy as np
 __all__ = [
     "FloatFormat", "HALF", "SINGLE", "DOUBLE",
     "encode_ieee", "decode_ieee", "encode_hub", "decode_hub",
-    "pack_fields", "unpack_fields",
+    "pack_fields", "unpack_fields", "packed_is_zero",
 ]
 
 
@@ -78,6 +78,18 @@ def unpack_fields(packed, fmt: FloatFormat):
     exp_raw = (packed >> fmt.man_bits) & ((1 << fmt.exp_bits) - 1)
     sign = (packed >> (fmt.exp_bits + fmt.man_bits)) & 1
     return sign, exp_raw, man
+
+
+def packed_is_zero(packed, fmt: FloatFormat):
+    """True where a packed word encodes ±0 (raw exponent field 0).
+
+    Shared by both formats — E == 0 is the zero encoding for IEEE-like and
+    HUB words alike (subnormals are unsupported).  Used by the complex
+    datapath to detect exactly-real entries, for which the phase rotation
+    is skipped as an exact identity (DESIGN.md §10).
+    """
+    packed = jnp.asarray(packed, jnp.int64)
+    return ((packed >> fmt.man_bits) & ((1 << fmt.exp_bits) - 1)) == 0
 
 
 def _split_finite(x):

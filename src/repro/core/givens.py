@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from . import converters as conv
 from . import cordic
 from .formats import (FloatFormat, SINGLE, encode_hub, encode_ieee,
-                      decode_hub, decode_ieee)
+                      decode_hub, decode_ieee, packed_is_zero)
 
 __all__ = ["GivensConfig", "GivensUnit", "RotationState"]
 
@@ -183,6 +183,128 @@ class GivensUnit:
                              (flip[..., None], sig[..., None]), N, iters)
         return (jnp.concatenate([rx0[..., None], rx], axis=-1),
                 jnp.concatenate([ry0[..., None], ry], axis=-1))
+
+    # -- complex datapath: the three-rotation decomposition (DESIGN.md §10) --
+    def phase_vector(self, re_p, im_p, N=None, iters=None):
+        """Vectoring on the (re, im) lane pair of one complex entry.
+
+        The first two rotations of the complex Givens decomposition are
+        *phase* rotations: vectoring on the (re, im) pair of a row's
+        leading entry computes e^{-i·arg z} as a CORDIC control word, and
+        replaying it on every other (re, im) pair of the row multiplies
+        the whole row by that unit phasor — the same packed unit as the
+        real datapath, applied to the re/im lane pair instead of a row
+        pair.
+
+        Exactly-real entries (packed imaginary word ±0) are detected and
+        flagged for skipping: their true phase rotation is the identity
+        (or π, which the real Givens' own flip handles), so skipping keeps
+        purely-real complex inputs bit-identical to the real datapath.
+
+        Parameters
+        ----------
+        re_p, im_p : int64 packed FP words, any batch shape
+            Real and imaginary lanes of the leading entry.
+
+        Returns
+        -------
+        (mag_packed, state, skip)
+            ``mag_packed`` is the realized entry (|z| packed; the raw real
+            lane where ``skip``), ``state`` the replayable ``(flip,
+            sigmas)`` phase control word, ``skip`` the bool lanes where
+            the phase rotation must be treated as the exact identity.
+        """
+        mag, _, state = self.vector(re_p, im_p, N=N, iters=iters)
+        skip = packed_is_zero(im_p, self.cfg.fmt)
+        return jnp.where(skip, re_p, mag), state, skip
+
+    def phase_rotate(self, re_p, im_p, state, skip, N=None, iters=None):
+        """Replay a phase control word on further (re, im) lane pairs.
+
+        ``state`` and ``skip`` come from `phase_vector` and broadcast over
+        any trailing element axes; where ``skip`` the inputs pass through
+        untouched (the exact identity phase).
+        """
+        rr, ri = self.rotate(re_p, im_p, state, N=N, iters=iters)
+        return jnp.where(skip, re_p, rr), jnp.where(skip, im_p, ri)
+
+    def rotate_rows_complex(self, row_x, row_y, N=None, iters=None):
+        """Complex Givens rotation of two packed rows of (re, im) lanes.
+
+        The three-rotation decomposition (DESIGN.md §10): two vectoring
+        phase rotations realize the leading entries of the pivot and
+        target rows (each is the real unit applied to the row's (re, im)
+        lane pairs), then the real Givens of the real datapath rotates the
+        realized leads and replays across the re and im lanes
+        independently.  The composite is exactly unitary-by-construction
+        in infinite precision, and every constituent rotation is the
+        bit-accurate packed unit — IEEE/HUB bit-accuracy carries over
+        unchanged.
+
+        Rows whose leading entries are exactly real (packed imaginary
+        lane ±0) skip their phase rotation, so purely-real inputs follow
+        the real `rotate_rows` datapath bit for bit, with the imaginary
+        lanes propagating exact packed zeros.
+
+        Parameters
+        ----------
+        row_x, row_y : (..., e, 2) int64 packed FP words
+            Pivot and target rows; the trailing axis holds the (re, im)
+            lanes of each element.
+
+        Returns
+        -------
+        (row_x', row_y') : (..., e, 2) packed rows with the structural
+        zeros forced: ``row_y'[..., 0, :] == 0`` (the annihilated entry)
+        and ``row_x'[..., 0, 1] == 0`` (the realized pivot is real).
+        """
+        xr, xi = row_x[..., 0], row_x[..., 1]
+        yr, yi = row_y[..., 0], row_y[..., 1]
+        # Phase rotations: realize the leading entry of each row.
+        magx, stx, skx = self.phase_vector(xr[..., 0], xi[..., 0], N, iters)
+        magy, sty, sky = self.phase_vector(yr[..., 0], yi[..., 0], N, iters)
+        pxr, pxi = self.phase_rotate(
+            xr[..., 1:], xi[..., 1:],
+            (stx[0][..., None], stx[1][..., None]), skx[..., None], N, iters)
+        pyr, pyi = self.phase_rotate(
+            yr[..., 1:], yi[..., 1:],
+            (sty[0][..., None], sty[1][..., None]), sky[..., None], N, iters)
+        # Real Givens on the realized leads; the sigma word replays across
+        # the re and im lanes independently (a real rotation acts on a
+        # complex element as the same 2x2 on each lane).
+        r, _, stt = self.vector(magx, magy, N=N, iters=iters)
+        st_b = (stt[0][..., None], stt[1][..., None])
+        oxr, oyr = self.rotate(pxr, pyr, st_b, N=N, iters=iters)
+        oxi, oyi = self.rotate(pxi, pyi, st_b, N=N, iters=iters)
+        zero = jnp.zeros_like(r)
+        out_x = jnp.stack([jnp.concatenate([r[..., None], oxr], axis=-1),
+                           jnp.concatenate([zero[..., None], oxi], axis=-1)],
+                          axis=-1)
+        out_y = jnp.stack([jnp.concatenate([zero[..., None], oyr], axis=-1),
+                           jnp.concatenate([zero[..., None], oyi], axis=-1)],
+                          axis=-1)
+        return out_x, out_y
+
+    def annihilate_complex(self, row_x, row_y, col, N=None, iters=None):
+        """Complex-Givens-rotate two packed rows so ``row_y[col]`` is zeroed.
+
+        The pivot-anywhere form of `rotate_rows_complex` — the primitive
+        of complex QRD-RLS updates, mirroring `annihilate`: the rows are
+        rolled along the element axis so the pivot column leads, rotated
+        by the three-rotation decomposition (structural zeros included),
+        and rolled back.  ``col`` may be a traced scalar.
+
+        Parameters
+        ----------
+        row_x, row_y : (..., e, 2) int64 packed FP words
+            Pivot row and target row of (re, im) lanes.
+        col : int or traced scalar
+            Pivot column; ``row_y[..., col, :]`` is annihilated.
+        """
+        rx = jnp.roll(row_x, -col, axis=-2)
+        ry = jnp.roll(row_y, -col, axis=-2)
+        ox, oy = self.rotate_rows_complex(rx, ry, N=N, iters=iters)
+        return jnp.roll(ox, col, axis=-2), jnp.roll(oy, col, axis=-2)
 
     def annihilate(self, row_x, row_y, col, N=None, iters=None):
         """Givens-rotate two packed rows so ``row_y[col]`` is zeroed.

@@ -29,6 +29,7 @@ from __future__ import annotations
 import dataclasses
 from functools import lru_cache
 
+import jax
 import jax.numpy as jnp
 
 from . import cordic
@@ -36,6 +37,8 @@ from .givens import GivensConfig, GivensUnit
 
 __all__ = ["qr_cordic", "qr_cordic_pallas", "qr_blockfp_pallas",
            "qr_cordic_wavefront", "qr_blockfp_wavefront",
+           "qr_cordic_complex", "qr_cordic_complex_pallas",
+           "qr_cordic_complex_wavefront",
            "qr_givens_float", "qr_jnp", "qr_fixed", "qr_blocked_sharded",
            "QRDEngine", "snr_db", "givens_schedule", "sameh_kuck_schedule"]
 
@@ -235,6 +238,137 @@ def qr_blockfp_pallas(A, compute_q=True, iters=24, hub=True, frac=24,
     return _split_qr(out, m, n, compute_q)
 
 
+# --------------------------------------------------------------------------
+# Complex datapath: three-rotation Givens on (re, im) lane pairs (§10).
+# --------------------------------------------------------------------------
+def _augment_complex(A, compute_q):
+    """Append the (real) identity columns to a complex working matrix."""
+    if not compute_q:
+        return A
+    m = A.shape[-2]
+    eye = jnp.broadcast_to(jnp.eye(m, dtype=A.dtype), A.shape[:-1] + (m,))
+    return jnp.concatenate([A, eye], axis=-1)
+
+
+def _encode_complex(unit, C):
+    """complex (..., m, e) -> packed (..., m, e, 2) re/im lane pairs."""
+    return jnp.stack([unit.encode(C.real), unit.encode(C.imag)], axis=-1)
+
+
+def _decode_complex(unit, P):
+    """packed (..., m, e, 2) -> complex128 (..., m, e)."""
+    out = unit.decode(P)
+    return jax.lax.complex(out[..., 0], out[..., 1])
+
+
+def _split_qr_complex(C, m, n, compute_q):
+    """Split a decoded complex working matrix [R' | G] into (Q, R).
+
+    The rotations accumulate the unitary G with ``G A = R``, so
+    ``Q = G^H`` — the conjugate transpose, where the real datapath takes a
+    plain transpose.
+    """
+    R = C[..., :n]
+    tri = jnp.tril(jnp.ones((m, n), bool), -1)
+    R = jnp.where(tri, jnp.zeros((), R.dtype), R)
+    if not compute_q:
+        return None, R
+    Q = jnp.conj(jnp.swapaxes(C[..., n:], -1, -2))
+    return Q, R
+
+
+def qr_cordic_complex(A, unit: GivensUnit, N=None, iters=None, compute_q=True,
+                      steps=None):
+    """Complex QRD of a batch of matrices with the paper's unit.
+
+    The complex counterpart of `qr_cordic`: every schedule step runs the
+    three-rotation decomposition (`GivensUnit.rotate_rows_complex`) — two
+    vectoring phase rotations realize the leading entries, then the real
+    Givens of the real datapath replays across the re and im lanes.  R
+    comes out with a real non-negative diagonal (the phases are rotated
+    into Q), the standard convention of complex Givens QRD hardware.
+    Purely-real inputs reproduce `qr_cordic` bit for bit (the phase
+    rotations skip as exact identities).
+
+    Parameters
+    ----------
+    A : (..., m, n) array_like, complex
+        Batch of input matrices (converted to complex128).
+    unit : GivensUnit
+        The configured rotator (IEEE or HUB datapath).
+    N, iters : optional traced scalars
+        Override the config's significand width / CORDIC depth.
+    compute_q : bool
+        Augment the rows with the identity to accumulate the unitary G;
+        ``Q = G^H``.
+    steps : sequence[(int, int, int)], optional
+        Rotation schedule; defaults to the column-major `givens_schedule`.
+
+    Returns
+    -------
+    (Q, R) : complex128 arrays (Q is None when ``compute_q=False``), with
+    R's structural zeros forced and its diagonal exactly real.
+    """
+    A = jnp.asarray(A, jnp.complex128)
+    m, n = A.shape[-2], A.shape[-1]
+    P = _encode_complex(unit, _augment_complex(A, compute_q))
+    if steps is None:
+        steps = givens_schedule(m, n)
+    for (k, j, col) in steps:
+        rx, ry = unit.rotate_rows_complex(P[..., k, col:, :],
+                                          P[..., j, col:, :], N=N, iters=iters)
+        P = P.at[..., k, col:, :].set(rx)
+        P = P.at[..., j, col:, :].set(ry)
+    out = _decode_complex(unit, P)
+    return _split_qr_complex(out, m, n, compute_q)
+
+
+def qr_cordic_complex_pallas(A, unit: GivensUnit, compute_q=True, steps=None,
+                             interpret=None):
+    """Kernel-resident complex QRD: the triangularization in one Pallas call.
+
+    `qr_cordic_complex` with the step loop moved inside the kernel — the
+    (re, im) lane pairs ride along as a trailing axis of the resident
+    tile, and each step runs the same three-rotation
+    `GivensUnit.rotate_rows_complex` dataflow in registers.  (Q, R) are
+    bit-identical to `qr_cordic_complex` for the same `GivensConfig`.
+
+    Parameters as `qr_cordic_complex`; ``interpret`` is forwarded to the
+    kernel (None auto-selects: interpret on CPU).
+    """
+    from repro.kernels import ops as _kops
+    A = jnp.asarray(A, jnp.complex128)
+    m, n = A.shape[-2], A.shape[-1]
+    P = _encode_complex(unit, _augment_complex(A, compute_q))
+    if steps is None:
+        steps = givens_schedule(m, n)
+    Pout = _kops.qr_packed_complex(P, cfg=unit.cfg, steps=tuple(steps),
+                                   interpret=interpret)
+    return _split_qr_complex(_decode_complex(unit, Pout), m, n, compute_q)
+
+
+def qr_cordic_complex_wavefront(A, unit: GivensUnit, compute_q=True,
+                                stages=None, interpret=None):
+    """Wavefront kernel-resident complex QRD (one scan step per stage).
+
+    The stage-parallel counterpart of `qr_cordic_complex_pallas`: every
+    Sameh–Kuck stage's disjoint row pairs run the three-rotation
+    decomposition in one shot along the pair axis, with the (re, im)
+    lanes as an extra trailing axis and the per-pair column masks of the
+    real wavefront path unchanged (DESIGN.md §8, §10).  Bit-identical to
+    `qr_cordic_complex` on the flattened stage schedule.
+
+    Parameters as `qr_cordic_wavefront`.
+    """
+    from repro.kernels import ops as _kops
+    A = jnp.asarray(A, jnp.complex128)
+    m, n = A.shape[-2], A.shape[-1]
+    P = _encode_complex(unit, _augment_complex(A, compute_q))
+    Pout = _kops.qr_packed_complex_wavefront(
+        P, cfg=unit.cfg, stages=_as_stages(m, n, stages), interpret=interpret)
+    return _split_qr_complex(_decode_complex(unit, Pout), m, n, compute_q)
+
+
 def _as_stages(m, n, stages):
     """Normalize a stage schedule to a hashable tuple-of-tuples static."""
     if stages is None:
@@ -387,9 +521,16 @@ def qr_givens_float(A, dtype=jnp.float32, compute_q=True):
 
     The algorithmic baseline: identical column-major schedule and
     augmented-identity Q accumulation, but plain `dtype` floating point
-    instead of the paper's arithmetic.  A: (..., m, n); returns (Q, R) in
-    `dtype` (Q is None when ``compute_q=False``).
+    instead of the paper's arithmetic.  Complex dtypes use the conjugate
+    Givens rotation ``G = [[ā, b̄], [-b, a]] / r`` with ``r = √(|a|²+|b|²)``
+    — unitary, annihilates b, and reduces exactly to the real rotation
+    when the inputs are real (conjugation is the identity there, so the
+    real path is unchanged bit for bit).  A: (..., m, n); returns (Q, R)
+    in `dtype` (Q is None when ``compute_q=False``); for complex dtypes
+    ``Q = G^H`` takes the conjugate transpose and R's diagonal is real
+    non-negative.
     """
+    dtype = jnp.dtype(dtype)
     A = jnp.asarray(A, dtype)
     m, n = A.shape[-2], A.shape[-1]
     if compute_q:
@@ -400,20 +541,22 @@ def qr_givens_float(A, dtype=jnp.float32, compute_q=True):
     for (k, j, col) in givens_schedule(m, n):
         a = W[..., k, col]
         b = W[..., j, col]
-        r = jnp.sqrt(a * a + b * b)
+        r = jnp.sqrt(jnp.abs(a) ** 2 + jnp.abs(b) ** 2)
         safe = r > 0
-        c = jnp.where(safe, a / jnp.where(safe, r, 1), 1.0)
-        s = jnp.where(safe, b / jnp.where(safe, r, 1), 0.0)
+        rs = jnp.where(safe, r, 1).astype(dtype)
+        c = jnp.where(safe, jnp.conj(a) / rs, 1.0).astype(dtype)
+        s = jnp.where(safe, jnp.conj(b) / rs, 0.0).astype(dtype)
         rk = c[..., None] * W[..., k, :] + s[..., None] * W[..., j, :]
-        rj = -s[..., None] * W[..., k, :] + c[..., None] * W[..., j, :]
+        rj = (-jnp.conj(s)[..., None] * W[..., k, :]
+              + jnp.conj(c)[..., None] * W[..., j, :])
         rj = rj.at[..., col].set(0)
-        rk = rk.at[..., col].set(r)
+        rk = rk.at[..., col].set(r.astype(dtype))
         W = W.at[..., k, :].set(rk)
         W = W.at[..., j, :].set(rj)
     R = W[..., :n]
     if not compute_q:
         return None, R
-    Q = jnp.swapaxes(W[..., n:], -1, -2)
+    Q = jnp.conj(jnp.swapaxes(W[..., n:], -1, -2))
     return Q, R
 
 

@@ -21,6 +21,7 @@ from . import qrd_blocked as qb
 
 __all__ = ["vectoring_fixed", "rotation_fixed", "givens_rotate_rows_fixed",
            "givens_rotate_rows_fused", "qr_packed", "qr_packed_wavefront",
+           "qr_packed_complex", "qr_packed_complex_wavefront",
            "givens_block_apply", "givens_block_apply_wavefront",
            "rls_block_steps"]
 
@@ -177,6 +178,81 @@ def qr_packed(P, *, cfg, steps, interpret=None, tile_b=qb.TILE_B):
     out = qb.qr_packed_call(Pp, cfg=cfg, steps=steps, interpret=interpret,
                             tile_b=tile_b)
     return out[:B].reshape(batch + (m, e))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "steps", "interpret", "tile_b"))
+def qr_packed_complex(P, *, cfg, steps, interpret=None, tile_b=qb.TILE_B):
+    """Kernel-resident blocked complex QR over packed (re, im) lane pairs.
+
+    The complex counterpart of `qr_packed` (DESIGN.md §10): the operand
+    carries a trailing axis of size 2 holding the packed real and
+    imaginary lanes of each element, and every schedule step runs the
+    three-rotation decomposition in-kernel.
+
+    Parameters
+    ----------
+    P : (..., m, e, 2) int64
+        Packed FP words of the augmented complex working matrices; any
+        leading batch shape.
+    cfg : GivensConfig
+        Static unit configuration.
+    steps : tuple[(int, int, int), ...]
+        Static `(pivot_row, target_row, col)` rotation schedule.
+
+    Returns
+    -------
+    (..., m, e, 2) int64 — triangularized packed words, bit-identical to
+    running `GivensUnit.rotate_rows_complex` step by step
+    (`qr_cordic_complex`).
+    """
+    interpret = _auto_interpret(interpret)
+    batch = P.shape[:-3]
+    m, e, _ = P.shape[-3:]
+    Pf = P.astype(jnp.int64).reshape((-1,) + (m, e, 2))
+    B = Pf.shape[0]
+    Pp = _pad_to(Pf, tile_b, 0)
+    out = qb.qr_packed_complex_call(Pp, cfg=cfg, steps=steps,
+                                    interpret=interpret, tile_b=tile_b)
+    return out[:B].reshape(batch + (m, e, 2))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "stages", "interpret", "tile_b"))
+def qr_packed_complex_wavefront(P, *, cfg, stages, interpret=None,
+                                tile_b=qb.TILE_B):
+    """Wavefront blocked complex QR over packed (re, im) lane pairs.
+
+    The stage-parallel counterpart of `qr_packed_complex`: the Sameh–Kuck
+    stage index tables of `qr_packed_wavefront` drive the scan, with the
+    re/im lanes as an extra trailing axis and the per-pair column masks
+    unchanged (DESIGN.md §8, §10).  Bit-identical to `qr_packed_complex`
+    on the flattened stage schedule.
+
+    Parameters
+    ----------
+    P : (..., m, e, 2) int64
+        Packed FP words of the augmented complex working matrices.
+    cfg : GivensConfig
+        Static unit configuration.
+    stages : tuple[tuple[(pivot, target, col), ...], ...]
+        Static stage schedule (`sameh_kuck_schedule(m, n)`).
+
+    Returns
+    -------
+    (..., m, e, 2) int64 — triangularized packed words.
+    """
+    interpret = _auto_interpret(interpret)
+    batch = P.shape[:-3]
+    m, e, _ = P.shape[-3:]
+    piv, tgt, col = _stage_tables(stages, m)
+    Pf = P.astype(jnp.int64).reshape((-1,) + (m, e, 2))
+    B = Pf.shape[0]
+    Pp = _pad_to(Pf, tile_b, 0)
+    out = qb.qr_packed_complex_wavefront_call(Pp, piv, tgt, col, cfg=cfg,
+                                              interpret=interpret,
+                                              tile_b=tile_b)
+    return out[:B].reshape(batch + (m, e, 2))
 
 
 @functools.lru_cache(maxsize=None)

@@ -70,7 +70,8 @@ from .cordic_givens import (TILE_B, comp_q30, fused_rotate_block,
                             fused_rotate_pairs)
 
 __all__ = ["qr_packed_call", "qr_blockfp_call", "qr_packed_wavefront_call",
-           "qr_blockfp_wavefront_call", "TILE_B"]
+           "qr_blockfp_wavefront_call", "qr_packed_complex_call",
+           "qr_packed_complex_wavefront_call", "TILE_B"]
 
 
 # ---------------------------------------------------------------------------
@@ -125,6 +126,163 @@ def qr_packed_call(P, *, cfg: GivensConfig, steps, interpret: bool = True,
         out_shape=jax.ShapeDtypeStruct((B, m, e), jnp.int64),
         interpret=interpret,
     )(P)
+
+
+# ---------------------------------------------------------------------------
+# Complex packed-word kernels: three-rotation Givens on (re, im) lane pairs
+# (DESIGN.md §10).  The resident tile gains a trailing axis of size 2; the
+# schedule machinery (static step unroll / stage-table scan) is unchanged.
+# ---------------------------------------------------------------------------
+def _qr_packed_complex_kernel(p_ref, o_ref, *, cfg: GivensConfig, steps):
+    """Triangularize the resident (TB, m, e, 2) tile of packed re/im lanes.
+
+    Replays `qr_cordic_complex`'s per-step three-rotation dataflow with
+    the identical `GivensUnit` arithmetic, so the output words match the
+    host reference loop bit for bit (IEEE and HUB).
+    """
+    unit = GivensUnit(cfg)
+    P = p_ref[...]                       # (TB, m, e, 2) int64 packed words
+    for (k, j, col) in steps:
+        rx, ry = unit.rotate_rows_complex(P[:, k, col:, :], P[:, j, col:, :])
+        P = P.at[:, k, col:, :].set(rx)
+        P = P.at[:, j, col:, :].set(ry)
+    o_ref[...] = P
+
+
+def qr_packed_complex_call(P, *, cfg: GivensConfig, steps,
+                           interpret: bool = True, tile_b: int = TILE_B):
+    """Blocked complex QR over packed (re, im) lane pairs.
+
+    Parameters
+    ----------
+    P : (B, m, e, 2) int64
+        Packed FP words of the augmented complex working matrices; the
+        trailing axis holds the (re, im) lanes.  ``B`` must be a multiple
+        of ``tile_b`` (`ops.py` pads).
+    cfg, steps, interpret : as `qr_packed_call`.
+
+    Returns
+    -------
+    (B, m, e, 2) int64 — triangularized packed words, bit-identical to
+    the `qr_cordic_complex` reference loop.
+    """
+    B, m, e, two = P.shape
+    assert B % tile_b == 0 and two == 2
+    grid = (B // tile_b,)
+    spec = pl.BlockSpec((tile_b, m, e, 2), lambda b: (b, 0, 0, 0))
+    kernel = functools.partial(_qr_packed_complex_kernel, cfg=cfg,
+                               steps=tuple(steps))
+    return pl.pallas_call(
+        kernel, grid=grid,
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B, m, e, 2), jnp.int64),
+        interpret=interpret,
+    )(P)
+
+
+def _wavefront_scan_complex(P, tables, stage_fn):
+    """Complex counterpart of `_wavefront_scan` on a (TB, m, e, 2) tile.
+
+    Identical gather/scatter machinery with the (re, im) lane axis riding
+    along; the per-pair column masks are unchanged — they address the
+    element axis and broadcast across the re/im lanes.  The structural
+    zeros of the complex step are forced here: the annihilated target
+    lead (both lanes) and the imaginary lane of the realized pivot lead.
+    """
+    TB, m, e, _ = P.shape
+
+    def body(P, tab):
+        piv, tgt, col = tab
+        X = jnp.take(P, piv, axis=1, mode="fill", fill_value=0)
+        Y = jnp.take(P, tgt, axis=1, mode="fill", fill_value=0)
+        colid = jax.lax.broadcasted_iota(jnp.int32, (col.shape[0], e), 1)
+        lead = (colid == col[:, None])[None, ..., None]   # (1, P, e, 1)
+        active = (colid >= col[:, None])[None, ..., None]
+        rx, ry = stage_fn(X, Y, lead[0, ..., 0])
+        rx = jnp.where(active, rx, X)                # untouched left lanes
+        ry = jnp.where(active, ry, Y)
+        im = jnp.arange(2) == 1
+        rx = jnp.where(lead & im, 0, rx)             # realized pivot is real
+        ry = jnp.where(lead, 0, ry)                  # structural zero
+        P = P.at[:, piv, :, :].set(rx, mode="drop")
+        P = P.at[:, tgt, :, :].set(ry, mode="drop")
+        return P, None
+
+    P, _ = jax.lax.scan(body, P, tables)
+    return P
+
+
+def _qr_packed_complex_wavefront_kernel(piv_ref, tgt_ref, col_ref, p_ref,
+                                        o_ref, *, cfg: GivensConfig):
+    """Wavefront complex triangularization of the resident (TB, m, e, 2) tile.
+
+    One scan step per Sameh–Kuck stage: every pair of the stage runs the
+    three-rotation decomposition along a (TB, P, e) pair axis — the phase
+    control words come from vectoring on the gathered lead (re, im)
+    pairs, replay across the whole row at uniform width (replaying a
+    control word on the pair that produced it reproduces the vectoring
+    output bit for bit), and the realized leads re-extracted from the
+    phase-rotated rows drive the real Givens across both lanes.
+    Bit-identical to `_qr_packed_complex_kernel` on the flattened stage
+    schedule.
+    """
+    unit = GivensUnit(cfg)
+
+    def stage(X, Y, lead):
+        sel = lead[None].astype(X.dtype)             # (1, P, e) 0/1
+        xr, xi = X[..., 0], X[..., 1]                # (TB, P, e)
+        yr, yi = Y[..., 0], Y[..., 1]
+        _, stx, skx = unit.phase_vector(
+            jnp.sum(xr * sel, axis=-1, dtype=X.dtype),
+            jnp.sum(xi * sel, axis=-1, dtype=X.dtype))
+        _, sty, sky = unit.phase_vector(
+            jnp.sum(yr * sel, axis=-1, dtype=Y.dtype),
+            jnp.sum(yi * sel, axis=-1, dtype=Y.dtype))
+        pxr, pxi = unit.phase_rotate(
+            xr, xi, (stx[0][..., None], stx[1][..., None]), skx[..., None])
+        pyr, pyi = unit.phase_rotate(
+            yr, yi, (sty[0][..., None], sty[1][..., None]), sky[..., None])
+        magx = jnp.sum(pxr * sel, axis=-1, dtype=X.dtype)
+        magy = jnp.sum(pyr * sel, axis=-1, dtype=Y.dtype)
+        _, _, (flip, sig) = unit.vector(magx, magy)
+        st_b = (flip[..., None], sig[..., None])
+        rxr, ryr = unit.rotate(pxr, pyr, st_b)
+        rxi, ryi = unit.rotate(pxi, pyi, st_b)
+        return (jnp.stack([rxr, rxi], axis=-1),
+                jnp.stack([ryr, ryi], axis=-1))
+
+    tables = (piv_ref[...], tgt_ref[...], col_ref[...])
+    o_ref[...] = _wavefront_scan_complex(p_ref[...], tables, stage)
+
+
+def qr_packed_complex_wavefront_call(P, piv, tgt, col, *, cfg: GivensConfig,
+                                     interpret: bool = True,
+                                     tile_b: int = TILE_B):
+    """Wavefront blocked complex QR over packed (re, im) lane pairs.
+
+    Parameters as `qr_packed_wavefront_call` with the (B, m, e, 2)
+    operand of `qr_packed_complex_call`.
+
+    Returns
+    -------
+    (B, m, e, 2) int64 — triangularized packed words, bit-identical to
+    `qr_packed_complex_call` on the flattened stage schedule.
+    """
+    B, m, e, two = P.shape
+    assert B % tile_b == 0 and two == 2
+    S, Pmax = piv.shape
+    grid = (B // tile_b,)
+    spec = pl.BlockSpec((tile_b, m, e, 2), lambda b: (b, 0, 0, 0))
+    tspec = pl.BlockSpec((S, Pmax), lambda b: (0, 0))
+    kernel = functools.partial(_qr_packed_complex_wavefront_kernel, cfg=cfg)
+    return pl.pallas_call(
+        kernel, grid=grid,
+        in_specs=[tspec, tspec, tspec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B, m, e, 2), jnp.int64),
+        interpret=interpret,
+    )(piv, tgt, col, P)
 
 
 # ---------------------------------------------------------------------------

@@ -20,7 +20,7 @@ functions) keep working as thin shims over this package.
 """
 from .registry import (BackendCapabilities, BackendSpec, register_backend,
                        unregister_backend, get_backend, list_backends,
-                       available_backends)
+                       available_backends, complex_capable_backends)
 from .config import QRDConfig
 from .solve import back_substitute, lstsq_from_triangular, SOLVE_TOLERANCES
 from .rls import RLSState
@@ -30,7 +30,7 @@ from .engine import QRDEngine
 __all__ = [
     "BackendCapabilities", "BackendSpec", "register_backend",
     "unregister_backend", "get_backend", "list_backends",
-    "available_backends",
+    "available_backends", "complex_capable_backends",
     "QRDConfig", "QRDEngine",
     "back_substitute", "lstsq_from_triangular", "SOLVE_TOLERANCES",
     "RLSState",

@@ -41,6 +41,9 @@ def _build_givens_float(config, m, n, compute_q):
 def _build_cordic(config, m, n, compute_q):
     unit = GivensUnit(config.givens)
     steps = _flat_steps(config, m, n)
+    if config.is_complex():               # complex datapath (DESIGN.md §10)
+        return lambda A: _q.qr_cordic_complex(A, unit, compute_q=compute_q,
+                                              steps=steps)
     return lambda A: _q.qr_cordic(A, unit, compute_q=compute_q, steps=steps)
 
 
@@ -48,9 +51,16 @@ def _build_cordic_pallas(config, m, n, compute_q):
     unit = GivensUnit(config.givens)
     if config.schedule == "sameh_kuck":   # wavefront datapath (DESIGN.md §8)
         stages = _q.sameh_kuck_schedule(m, n)
+        if config.is_complex():
+            return lambda A: _q.qr_cordic_complex_wavefront(
+                A, unit, compute_q=compute_q, stages=stages,
+                interpret=config.interpret)
         return lambda A: _q.qr_cordic_wavefront(
             A, unit, compute_q=compute_q, stages=stages,
             interpret=config.interpret)
+    if config.is_complex():
+        return lambda A: _q.qr_cordic_complex_pallas(
+            A, unit, compute_q=compute_q, interpret=config.interpret)
     return lambda A: _q.qr_cordic_pallas(A, unit, compute_q=compute_q,
                                          interpret=config.interpret)
 
@@ -78,19 +88,25 @@ def register_builtin_backends(overwrite=False):
     entries = (
         ("jnp", _build_jnp, BackendCapabilities(
             bit_exact=False, wavefront=False, sharding=False,
-            dtypes=("float16", "float32", "float64"),
+            dtypes=("float16", "float32", "float64",
+                    "complex64", "complex128"),
             description="jnp.linalg.qr Householder reference "
                         "(schedule-agnostic; 'sameh_kuck' degrades to it)")),
         ("givens_float", _build_givens_float, BackendCapabilities(
             bit_exact=False, wavefront=False, sharding=False,
-            dtypes=("float16", "float32", "float64"),
-            description="float Givens baseline, column-major schedule")),
+            dtypes=("float16", "float32", "float64",
+                    "complex64", "complex128"),
+            description="float Givens baseline, column-major schedule "
+                        "(complex via conjugate rotations)")),
         ("cordic", _build_cordic, BackendCapabilities(
             bit_exact=True, wavefront=False, sharding=True,
+            dtypes=("float64", "complex128"),
             description="the paper's unit, host reference loop "
-                        "('sameh_kuck' consumes the flattened stage order)")),
+                        "('sameh_kuck' consumes the flattened stage order; "
+                        "complex via the three-rotation decomposition)")),
         ("cordic_pallas", _build_cordic_pallas, BackendCapabilities(
             bit_exact=True, wavefront=True, sharding=True,
+            dtypes=("float64", "complex128"),
             description="kernel-resident unit, bit-identical to 'cordic'; "
                         "'sameh_kuck' routes onto the wavefront datapath")),
         ("blockfp_pallas", _build_blockfp_pallas, BackendCapabilities(

@@ -16,6 +16,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any
 
+import jax.numpy as jnp
+
 from repro.core.givens import GivensConfig
 
 __all__ = ["QRDConfig"]
@@ -42,10 +44,18 @@ class QRDConfig:
         significands (F=24 keeps m ≲ 64 inside int32).
     fixed_width, fixed_iters, fixed_scale_exp : int
         Parameters of the ``'fixed'`` baseline rotator of [20].
-    dtype : str
-        Output dtype for the float backends (``'jnp'``,
-        ``'givens_float'``); the bit-accurate backends always return
-        float64.
+    dtype : str or dtype-like
+        Element dtype of the problem.  Real dtypes select the real
+        datapath (output dtype for the float backends ``'jnp'`` /
+        ``'givens_float'``; the bit-accurate backends always return
+        float64).  Complex dtypes (``'complex64'`` / ``'complex128'``)
+        select the **complex datapath** (DESIGN.md §10) on
+        complex-capable backends — three-rotation Givens on (re, im)
+        lane pairs; the bit-accurate backends then return complex128
+        (precision still comes from ``givens.fmt``).  Normalized to the
+        canonical dtype name string on construction; requesting a
+        complex dtype on a backend without complex capability raises
+        ``TypeError`` at validation.
     interpret : bool, optional
         Forwarded to the Pallas kernels; ``None`` auto-selects
         (interpret on CPU, Mosaic on TPU).
@@ -74,8 +84,23 @@ class QRDConfig:
 
     SCHEDULES = ("col", "sameh_kuck")
 
+    def __post_init__(self):
+        # Normalize dtype-likes (jnp.complex64, np.dtype('float32'), ...) to
+        # the canonical name so the frozen dataclass stays hashable and the
+        # cache key is canonical.
+        try:
+            name = jnp.dtype(self.dtype).name
+        except TypeError:
+            raise TypeError(f"dtype must be a dtype or dtype name, got "
+                            f"{self.dtype!r}") from None
+        object.__setattr__(self, "dtype", name)
+
     def replace(self, **changes) -> "QRDConfig":
         return dataclasses.replace(self, **changes)
+
+    def is_complex(self) -> bool:
+        """Whether this config selects the complex datapath."""
+        return jnp.dtype(self.dtype).kind == "c"
 
     # -- resolved block-FP parameters ----------------------------------------
     def blockfp_iters(self) -> int:
@@ -106,6 +131,15 @@ class QRDConfig:
             raise ValueError(
                 f"backend {self.backend!r} does not support "
                 f"schedule={self.schedule!r} (supported: {caps.schedules})")
+        if jnp.dtype(self.dtype).kind not in "fc":
+            raise TypeError(
+                f"dtype {self.dtype!r} is not a floating or complex dtype; "
+                "QRD backends operate on real or complex matrices")
+        if self.is_complex() and not caps.supports_complex:
+            raise TypeError(
+                f"backend {self.backend!r} has no complex datapath "
+                f"(dtype={self.dtype!r}); complex-capable backends: "
+                f"{', '.join(registry.complex_capable_backends())}")
         if self.mesh is not None and not caps.sharding:
             capable = [n for n, c in registry.list_backends().items()
                        if c.sharding]

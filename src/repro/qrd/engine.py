@@ -80,16 +80,60 @@ class QRDEngine:
                 f"cached={len(self._fn_cache)}/{self._max_cache})")
 
     # -- decomposition --------------------------------------------------------
+    def _validate_operand(self, A, config: QRDConfig):
+        """Validate the operand dtype against the backend's capabilities.
+
+        Historically complex (and integer) operands were cast straight
+        through ``jnp.asarray(..., float64)`` inside the backends — a
+        complex matrix lost its imaginary part with nothing but a
+        ``ComplexWarning`` from deep inside the cast.  Now:
+
+        * bool/integer operands are promoted to float64 explicitly (an
+          exact, documented promotion, as in ``np.linalg``);
+        * complex operands require a complex-capable backend — otherwise
+          ``TypeError`` names the backend and the complex-capable set —
+          and are routed onto the complex datapath by upgrading the
+          config's dtype to the matching complex dtype;
+        * anything else (strings, objects) raises ``TypeError``.
+
+        Returns the (possibly promoted) operand and the routing config.
+        """
+        A = jnp.asarray(A)
+        kind = A.dtype.kind
+        if kind in "biu":
+            A = A.astype(jnp.float64)
+        elif kind == "c":
+            if not config.is_complex():
+                from . import registry
+                caps = registry.get_backend(config.backend).capabilities
+                if not caps.supports_complex:
+                    raise TypeError(
+                        f"complex operand (dtype {A.dtype}) but backend "
+                        f"{config.backend!r} has no complex datapath; "
+                        "complex-capable backends: "
+                        f"{', '.join(registry.complex_capable_backends())}."
+                        "  Configure one with e.g. QRDConfig("
+                        "backend='cordic', dtype='complex64'), or take "
+                        "A.real explicitly if that was intended.")
+                config = config.replace(dtype=A.dtype.name)
+        elif kind != "f":
+            raise TypeError(f"operand dtype {A.dtype} is not a real, "
+                            "complex, or integer numeric dtype")
+        return A, config
+
     def _dispatch(self, A, compute_q, config: QRDConfig | None = None):
         """Registry dispatch with the bounded jitted-callable LRU.
 
         ``config`` defaults to the engine's own; the legacy shim passes a
         per-call config rebuilt from its mutable fields, so field
         mutation misses the cache instead of returning stale results.
+        The operand dtype is validated against the backend capabilities
+        first (`_validate_operand`) — complex operands route onto the
+        complex datapath where capable and raise ``TypeError`` otherwise.
         """
         if config is None:
             config = self.config
-        A = jnp.asarray(A)
+        A, config = self._validate_operand(A, config)
         if A.ndim < 2:
             raise ValueError(f"expected (..., m, n) operand, got {A.shape}")
         m, n = A.shape[-2], A.shape[-1]
@@ -103,7 +147,9 @@ class QRDEngine:
             self._fn_cache.popitem(last=False)
         if config.mesh is not None:
             from repro.launch.sharding import shard_qrd_batch
-            A = shard_qrd_batch(jnp.asarray(A, jnp.float64), config.mesh)
+            work_dtype = (jnp.complex128 if config.is_complex()
+                          else jnp.float64)
+            A = shard_qrd_batch(jnp.asarray(A, work_dtype), config.mesh)
         return fn(A)
 
     def __call__(self, A, compute_q=True):
@@ -124,6 +170,13 @@ class QRDEngine:
         ``np.linalg.lstsq`` is documented in
         `repro.qrd.solve.SOLVE_TOLERANCES`.
 
+        Complex systems (complex ``A``/``b``, or a complex-dtype config)
+        run on the complex datapath of a complex-capable backend: the
+        rotations triangularizing ``[A | b]`` are unitary, the appended
+        columns come out as ``Q^H b``, and the conjugate-aware
+        back-substitution recovers x; residual norms are the usual
+        ``√Σ|·|²`` over the annihilated tail.
+
         Parameters
         ----------
         A : (..., m, n) array_like, with ``m >= n`` (full-rank for a
@@ -137,11 +190,19 @@ class QRDEngine:
 
         Returns
         -------
-        x : (..., n) or (..., n, k) float64 (matching ``b``), or
-        ``(x, residuals)`` when ``return_residuals``.
+        x : (..., n) or (..., n, k) float64 — complex128 for complex
+        problems — (matching ``b``), or ``(x, residuals)`` when
+        ``return_residuals`` (residuals are always real).
         """
-        A = jnp.asarray(A, jnp.float64)
-        b = jnp.asarray(b, jnp.float64)
+        A = jnp.asarray(A)
+        b = jnp.asarray(b)
+        if (self.config.is_complex() or A.dtype.kind == "c"
+                or b.dtype.kind == "c"):
+            work_dtype = jnp.complex128
+        else:
+            work_dtype = jnp.float64
+        A = A.astype(work_dtype)
+        b = b.astype(work_dtype)
         m, n = A.shape[-2], A.shape[-1]
         if m < n:
             raise ValueError(f"solve() needs m >= n (got {m} x {n}); "
@@ -180,6 +241,13 @@ class QRDEngine:
             use a plain f64 rotation loop.  An explicit ``block`` forces
             the blocked-kernel path on any backend.
 
+        A complex-dtype config creates a **complex QRD-RLS** state
+        (complex128 carried ``[R | z]``, snapshots rotated by the
+        three-rotation decomposition on the unit path or conjugate
+        Givens on the float path) — the adaptive-beamforming scenario on
+        complex baseband snapshots.  The blocked-kernel path has no
+        complex datapath; requesting it raises ``TypeError``.
+
         Returns
         -------
         `repro.qrd.rls.RLSState` — ``state.update(x, d)`` /
@@ -189,12 +257,18 @@ class QRDEngine:
         from .rls import RLSState
 
         cfg = self.config
+        dtype = "complex128" if cfg.is_complex() else "float64"
         if block is not None or cfg.backend == "blockfp_pallas":
+            if cfg.is_complex():
+                raise TypeError(
+                    "the blocked-kernel RLS path has no complex datapath; "
+                    "use the cordic family (mode='unit') or a float "
+                    "backend for complex QRD-RLS")
             return RLSState(n, lam=lam, delta=delta, mode="block",
                             block=4 if block is None else int(block),
                             hub=cfg.blockfp_hub(), iters=cfg.blockfp_iters(),
                             frac=cfg.frac, interpret=cfg.interpret)
         if cfg.backend in ("cordic", "cordic_pallas"):
             return RLSState(n, lam=lam, delta=delta, mode="unit",
-                            unit=GivensUnit(cfg.givens))
-        return RLSState(n, lam=lam, delta=delta, mode="float")
+                            unit=GivensUnit(cfg.givens), dtype=dtype)
+        return RLSState(n, lam=lam, delta=delta, mode="float", dtype=dtype)

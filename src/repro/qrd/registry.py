@@ -28,7 +28,7 @@ from typing import Callable
 
 __all__ = ["BackendCapabilities", "BackendSpec", "register_backend",
            "unregister_backend", "get_backend", "list_backends",
-           "available_backends"]
+           "available_backends", "complex_capable_backends"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,7 +51,17 @@ class BackendCapabilities:
         The backend composes with a batch-sharding mesh
         (``QRDConfig.mesh``, `repro.launch.sharding.shard_qrd_batch`).
     dtypes : tuple[str, ...]
-        Output dtypes the backend can produce.
+        Dtypes the backend can produce.  These gate the *dtype family*
+        (real vs complex), not the exact precision: requesting a dtype
+        of a listed family is always valid, and the backend outputs its
+        natural precision for that family (the bit-accurate backends
+        list only float64/complex128 and return those regardless of the
+        requested precision — their accuracy comes from ``givens.fmt``,
+        exactly as the real path has always worked with the default
+        float32 config).  Complex entries declare the backend
+        complex-capable: `QRDConfig` validation rejects complex dtypes on
+        backends without one, and `QRDEngine` routes complex operands
+        onto the complex datapath only where one is declared.
     description : str
         One line for docs and error messages.
     """
@@ -62,6 +72,11 @@ class BackendCapabilities:
     sharding: bool = False
     dtypes: tuple[str, ...] = ("float64",)
     description: str = ""
+
+    @property
+    def supports_complex(self) -> bool:
+        """Whether the backend declares a complex datapath."""
+        return any(d.startswith("complex") for d in self.dtypes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,3 +148,13 @@ def list_backends() -> dict[str, BackendCapabilities]:
 
 def available_backends() -> tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
+
+
+def complex_capable_backends() -> tuple[str, ...]:
+    """Names of registered backends with a complex datapath (sorted).
+
+    The single source of truth for 'complex-capable backends: ...' error
+    messages (`QRDConfig.validate`, `QRDEngine._validate_operand`).
+    """
+    return tuple(n for n in sorted(_REGISTRY)
+                 if _REGISTRY[n].capabilities.supports_complex)

@@ -57,11 +57,19 @@ class RLSState:
         Blocked-kernel parameters (``mode='block'``): snapshots per
         kernel launch and the block-FP datapath knobs of
         `repro.kernels.ops.givens_block_apply`.
+    dtype : str
+        ``'float64'`` (default) or ``'complex128'``.  Complex states
+        carry complex ``[R | z]`` and rotate snapshots with unitary
+        complex Givens — the three-rotation decomposition on the unit
+        path (`GivensUnit.annihilate_complex`, DESIGN.md §10), conjugate
+        rotations on the float path.  The blocked-kernel path has no
+        complex datapath (``mode='block'`` with a complex dtype raises
+        ``TypeError``).
 
     Attributes
     ----------
-    R : (n, n) float64 ndarray — carried triangular factor.
-    z : (n,) float64 ndarray — carried rotated target vector.
+    R : (n, n) ndarray — carried triangular factor (dtype as configured).
+    z : (n,) ndarray — carried rotated target vector.
     updates : int — snapshots absorbed (committed + pending).
 
     Notes
@@ -72,30 +80,53 @@ class RLSState:
     """
 
     def __init__(self, n, lam=0.99, delta=1e-3, *, mode="float", unit=None,
-                 block=4, hub=True, iters=24, frac=24, interpret=None):
+                 block=4, hub=True, iters=24, frac=24, interpret=None,
+                 dtype="float64"):
         if mode not in _MODES:
             raise ValueError(f"unknown mode {mode!r}; expected one of {_MODES}")
         if not 0.0 < lam <= 1.0:
             raise ValueError(f"forgetting factor must be in (0, 1], got {lam}")
         if mode == "unit" and unit is None:
             raise ValueError("mode='unit' needs a GivensUnit")
+        if dtype not in ("float64", "complex128"):
+            raise ValueError(f"dtype must be 'float64' or 'complex128', "
+                             f"got {dtype!r}")
+        if mode == "block" and dtype == "complex128":
+            raise TypeError("the blocked-kernel RLS path has no complex "
+                            "datapath; use mode='unit' or mode='float' for "
+                            "complex QRD-RLS")
         self.n = int(n)
         self.lam = float(lam)
         self.mode = mode
         self.unit = unit
         self.block = int(block)
+        self.dtype = np.dtype(dtype)
         self._blockfp = dict(hub=hub, iters=iters, frac=frac,
                              interpret=interpret)
-        self.R = np.eye(self.n) * float(delta)
-        self.z = np.zeros(self.n)
+        self.R = np.eye(self.n, dtype=self.dtype) * float(delta)
+        self.z = np.zeros(self.n, dtype=self.dtype)
         self.updates = 0
         self._pending: list[np.ndarray] = []
         if mode == "unit":
             self._unit_update = jax.jit(self._make_unit_update())
 
+    @property
+    def is_complex(self):
+        return self.dtype.kind == "c"
+
     # -- update paths ---------------------------------------------------------
     def _make_unit_update(self):
         unit, n = self.unit, self.n
+        if self.is_complex:
+            def update(P, prow):
+                """Annihilate one packed complex snapshot into [R | z]."""
+                def body(k, carry):
+                    P, prow = carry
+                    xk, prow = unit.annihilate_complex(P[k], prow, k)
+                    return P.at[k].set(xk), prow
+                P, _ = jax.lax.fori_loop(0, n, body, (P, prow))
+                return P
+            return update
 
         def update(P, prow):
             """Annihilate one packed snapshot row into packed [R | z]."""
@@ -107,6 +138,23 @@ class RLSState:
             return P
 
         return update
+
+    def _encode(self, work):
+        """float/complex ndarray -> packed words ((..., 2) lanes if complex).
+
+        The complex lane packing is the shared `repro.core.qrd` codec —
+        one source of truth for the (re, im) trailing-axis convention.
+        """
+        from repro.core.qrd import _encode_complex
+        if self.is_complex:
+            return _encode_complex(self.unit, jnp.asarray(work))
+        return self.unit.encode(jnp.asarray(work))
+
+    def _decode(self, P):
+        from repro.core.qrd import _decode_complex
+        if self.is_complex:
+            return np.asarray(_decode_complex(self.unit, P))
+        return np.asarray(self.unit.decode(P))
 
     def _work(self, weight):
         return np.concatenate([self.R, self.z[:, None]], axis=1) * weight
@@ -123,8 +171,15 @@ class RLSState:
         -------
         self (for chaining).
         """
-        row = np.concatenate([np.asarray(x, np.float64).ravel(),
-                              [float(d)]])
+        x = np.asarray(x)
+        if ((x.dtype.kind == "c" or np.asarray(d).dtype.kind == "c")
+                and not self.is_complex):
+            raise TypeError(
+                "complex snapshot on a real-dtype RLS state (no silent "
+                "real cast); create the state with dtype='complex128' — "
+                "e.g. engine.rls() on a complex-dtype QRDConfig")
+        row = np.concatenate([x.astype(self.dtype).ravel(),
+                              [self.dtype.type(d)]])
         if row.shape[0] != self.n + 1:
             raise ValueError(f"snapshot length {row.shape[0] - 1} != n="
                              f"{self.n}")
@@ -136,21 +191,22 @@ class RLSState:
             return self
         work = self._work(np.sqrt(self.lam))
         if self.mode == "unit":
-            P = self._unit_update(self.unit.encode(jnp.asarray(work)),
-                                  self.unit.encode(jnp.asarray(row)))
-            out = np.asarray(self.unit.decode(P))
-        else:  # float
+            P = self._unit_update(self._encode(work), self._encode(row))
+            out = self._decode(P)
+        else:  # float: conjugate Givens (reduces to the real rotation
+            #    for real dtypes — conjugation is the identity there)
             out = work
             for k in range(self.n):
                 a, b = out[k, k], row[k]
-                r = np.hypot(a, b)
+                r = np.hypot(abs(a), abs(b))
                 if r == 0.0:
                     continue
-                c, s = a / r, b / r
+                c, s = np.conj(a) / r, np.conj(b) / r
                 wk = c * out[k] + s * row
-                row = -s * out[k] + c * row
+                row = -np.conj(s) * out[k] + np.conj(c) * row
                 row[k] = 0.0
                 out[k] = wk
+                out[k, k] = r
         self.R, self.z = out[:, :self.n], out[:, self.n]
         return self
 
@@ -198,5 +254,11 @@ class RLSState:
                                           jnp.asarray(self.z)))
 
     def predict(self, x):
-        """Filter output ``xᵀ w`` for a snapshot ``x``."""
-        return float(np.asarray(x, np.float64) @ self.weights())
+        """Filter output ``xᵀ w`` for a snapshot ``x`` (complex for
+        complex states)."""
+        x = np.asarray(x)
+        if x.dtype.kind == "c" and not self.is_complex:
+            raise TypeError("complex snapshot on a real-dtype RLS state "
+                            "(no silent real cast)")
+        out = x.astype(self.dtype) @ self.weights()
+        return complex(out) if self.is_complex else float(out)

@@ -30,6 +30,10 @@ __all__ = ["back_substitute", "lstsq_from_triangular", "SOLVE_TOLERANCES"]
 #: bit-accurate cordic family by the N=26-bit internal significand; the
 #: block-FP kernel by its F=24 fraction bits; the fixed-point baseline by
 #: its pre-scaling (assumes a sane ``fixed_scale_exp``).
+#: Complex problems are keyed ``"<backend>:complex"`` — the complex
+#: datapath spends three rotations per annihilation (two phase + one
+#: Givens, DESIGN.md §10), so its error is a small multiple of the real
+#: path's; backends without a complex datapath have no complex entry.
 SOLVE_TOLERANCES = {
     "jnp": 1e-3,
     "givens_float": 1e-3,
@@ -37,6 +41,10 @@ SOLVE_TOLERANCES = {
     "cordic_pallas": 1e-5,
     "blockfp_pallas": 1e-3,
     "fixed": 1e-2,
+    "jnp:complex": 1e-3,
+    "givens_float:complex": 1e-3,
+    "cordic:complex": 3e-5,
+    "cordic_pallas:complex": 3e-5,
 }
 
 
@@ -55,7 +63,8 @@ def back_substitute(R, y):
 
     Returns
     -------
-    x with the shape of ``y`` — float64.
+    x with the shape of ``y`` — float64, or complex128 when either
+    operand is complex.
 
     Notes
     -----
@@ -66,9 +75,18 @@ def back_substitute(R, y):
     `RLSState.weights`).  A zero diagonal (rank-deficient R)
     produces inf/nan, matching direct substitution; callers needing
     ridge behavior add it to R beforehand (see `RLSState.weights`).
+
+    Complex systems use plain complex arithmetic — R is applied as
+    stored, *not* conjugated: the engines hand this the already-rotated
+    ``[R | Q^H b]``, so conjugation has been absorbed by the unitary
+    reduction (the "conjugate-aware" contract of DESIGN.md §10).
     """
-    R = jnp.asarray(R, jnp.float64)
-    y = jnp.asarray(y, jnp.float64)
+    R = jnp.asarray(R)
+    y = jnp.asarray(y)
+    work_dtype = (jnp.complex128 if R.dtype.kind == "c"
+                  or y.dtype.kind == "c" else jnp.float64)
+    R = R.astype(work_dtype)
+    y = y.astype(work_dtype)
     vec = y.ndim == R.ndim - 1
     if vec:
         y = y[..., None]
@@ -104,13 +122,16 @@ def lstsq_from_triangular(Raug, n):
     Returns
     -------
     (x, resid) where ``x`` is ``(..., n, k)`` and ``resid`` is the
-    ``(..., k)`` residual two-norms ``||A x - b||`` read off the
-    annihilated tail of the b column(s) — free with the augmented trick.
+    ``(..., k)`` *real* residual two-norms ``||A x - b||`` read off the
+    annihilated tail of the b column(s) — free with the augmented trick
+    (``√Σ|·|²`` over the tail, conjugate-aware for complex problems).
     """
-    Raug = jnp.asarray(Raug, jnp.float64)
+    Raug = jnp.asarray(Raug)
+    Raug = Raug.astype(jnp.complex128 if Raug.dtype.kind == "c"
+                       else jnp.float64)
     R = Raug[..., :n, :n]
     C = Raug[..., :n, n:]
     x = back_substitute(R, C)
     tail = Raug[..., n:, n:]
-    resid = jnp.sqrt(jnp.sum(tail * tail, axis=-2))
+    resid = jnp.sqrt(jnp.sum(jnp.real(tail * jnp.conj(tail)), axis=-2))
     return x, resid

@@ -82,6 +82,7 @@ def test_registry_powered_error_messages():
 # ---------------------------------------------------------------------------
 # registry-dispatched engine == pre-refactor functions (acceptance)
 # ---------------------------------------------------------------------------
+@pytest.mark.slow   # pallas_call interpret-mode compile
 def test_registry_cordic_paths_bit_identical_to_free_functions():
     A = matrices((3, 4, 4), r=4.0)
     cfg = GivensConfig(hub=True, n=26)
@@ -122,6 +123,7 @@ def test_solve_matches_lstsq_within_documented_tolerance(backend, kwargs):
     assert err < tol, (backend, err, tol)
 
 
+@pytest.mark.slow   # pallas_call interpret-mode compile
 def test_solve_cordic_pallas_wavefront_and_multi_rhs_residuals():
     A = matrices((2, 5, 3))
     B = RNG.normal(size=(2, 5, 2)) * 2.0

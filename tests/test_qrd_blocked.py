@@ -18,6 +18,10 @@ from repro.core import (GivensConfig, GivensUnit, QRDEngine, givens_schedule,
                         sameh_kuck_schedule, snr_db)
 from repro.kernels import ops
 
+# Interpret-mode kernel compiles dominate this module's runtime
+# (tens of seconds per pallas_call trace): full lane only.
+pytestmark = pytest.mark.slow
+
 RNG = np.random.default_rng(7)
 
 

@@ -1,0 +1,284 @@
+"""Complex-valued QRD datapath (DESIGN.md §10).
+
+The contract under test, layer by layer:
+
+* **no silent real-cast** — complex operands on a backend without a
+  complex datapath raise ``TypeError`` naming the backend and the
+  complex-capable set (historically they were cast to real with only a
+  ``ComplexWarning`` and returned wrong answers);
+* **bit-parity on purely-real inputs** — the three-rotation
+  decomposition skips its phase rotations when the imaginary lanes are
+  exact packed zeros, so a real matrix pushed through the complex
+  datapath reproduces the real datapath bit for bit (cordic family,
+  IEEE and HUB), with exactly-zero imaginary parts;
+* **complex correctness** — unitary Q (``Q^H Q = I``), ``Q R = A``,
+  upper-triangular R with a real non-negative diagonal;
+* **solve golden** — batched complex least squares vs
+  ``np.linalg.lstsq`` within `SOLVE_TOLERANCES`, multi-RHS included;
+* **complex QRD-RLS** — convergence on complex snapshots (the
+  adaptive-beamforming scenario) on the unit and float paths.
+"""
+import importlib.util
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro import qrd as api
+from repro.core import GivensConfig, GivensUnit
+from repro.core import qrd as cq
+
+RNG = np.random.default_rng(42)
+
+
+def _complex(rng, shape, scale=1.0):
+    return scale * (rng.standard_normal(shape)
+                    + 1j * rng.standard_normal(shape))
+
+
+# ---------------------------------------------------------------------------
+# dtype validation: the silent-cast bug is dead
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["blockfp_pallas", "fixed"])
+def test_complex_operand_on_noncapable_backend_raises(backend):
+    C = _complex(RNG, (2, 4, 4))
+    eng = api.QRDEngine(backend=backend)
+    with pytest.raises(TypeError) as ei:
+        eng(C)
+    msg = str(ei.value)
+    assert backend in msg                       # names the backend
+    assert "cordic" in msg and "jnp" in msg     # names the capable set
+
+
+@pytest.mark.parametrize("backend", ["blockfp_pallas", "fixed"])
+def test_complex_config_on_noncapable_backend_raises_at_construction(backend):
+    with pytest.raises(TypeError, match="complex"):
+        api.QRDEngine(backend=backend, dtype="complex64")
+
+
+def test_solve_rejects_complex_rhs_on_noncapable_backend():
+    A = RNG.standard_normal((6, 3))
+    b = _complex(RNG, (6,))
+    with pytest.raises(TypeError, match="complex"):
+        api.QRDEngine(backend="fixed").solve(A, b)
+
+
+def test_non_numeric_operand_raises():
+    with pytest.raises(TypeError):
+        api.QRDEngine(backend="jnp")(np.array([["a", "b"], ["c", "d"]]))
+
+
+def test_integer_operand_promotes_exactly():
+    A = np.arange(12).reshape(4, 3)
+    Q, R = api.QRDEngine(backend="jnp")(A)
+    np.testing.assert_allclose(np.asarray(Q) @ np.asarray(R), A, atol=1e-4)
+
+
+def test_dtype_normalization_and_capability_listing():
+    import jax.numpy as jnp
+    cfg = api.QRDConfig(backend="cordic", dtype=jnp.complex64)
+    assert cfg.dtype == "complex64" and cfg.is_complex()
+    caps = api.list_backends()
+    capable = {n for n, c in caps.items() if c.supports_complex}
+    assert capable == {"jnp", "givens_float", "cordic", "cordic_pallas"}
+
+
+def test_complex_operand_auto_routes_on_capable_backend():
+    C = _complex(RNG, (2, 4, 3))
+    eng = api.QRDEngine(backend="cordic")     # real-dtype config
+    Q, R = eng(C)
+    assert np.asarray(Q).dtype.kind == "c"
+    np.testing.assert_allclose(np.asarray(Q) @ np.asarray(R), C, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# bit-parity of the three-rotation decomposition on purely-real inputs
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("hub", [False, True])
+def test_purely_real_complex_bit_identical_to_real_datapath(hub):
+    unit = GivensUnit(GivensConfig(hub=hub, n=26))
+    A = RNG.standard_normal((4, 5, 3)) * np.exp2(
+        RNG.uniform(-3, 3, (4, 5, 3)))
+    Qr, Rr = cq.qr_cordic(A, unit)
+    Qc, Rc = cq.qr_cordic_complex(A.astype(np.complex128), unit)
+    assert np.array_equal(np.asarray(Qc.real), np.asarray(Qr))
+    assert np.array_equal(np.asarray(Rc.real), np.asarray(Rr))
+    assert np.all(np.asarray(Qc.imag) == 0.0)
+    assert np.all(np.asarray(Rc.imag) == 0.0)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("hub", [False, True])
+def test_complex_pallas_bit_identical_to_host_loop(hub):
+    unit = GivensUnit(GivensConfig(hub=hub, n=26))
+    C = _complex(RNG, (3, 4, 4))
+    Qh, Rh = cq.qr_cordic_complex(C, unit)
+    Qp, Rp = cq.qr_cordic_complex_pallas(C, unit)
+    assert np.array_equal(np.asarray(Qp), np.asarray(Qh))
+    assert np.array_equal(np.asarray(Rp), np.asarray(Rh))
+
+
+@pytest.mark.slow
+def test_complex_wavefront_bit_identical_to_flattened_stage_order():
+    unit = GivensUnit(GivensConfig(hub=True, n=26))
+    C = _complex(RNG, (3, 5, 4))
+    flat = tuple(s for st in cq.sameh_kuck_schedule(5, 4) for s in st)
+    Qf, Rf = cq.qr_cordic_complex(C, unit, steps=flat)
+    Qw, Rw = cq.qr_cordic_complex_wavefront(C, unit)
+    assert np.array_equal(np.asarray(Qw), np.asarray(Qf))
+    assert np.array_equal(np.asarray(Rw), np.asarray(Rf))
+
+
+# ---------------------------------------------------------------------------
+# complex correctness
+# ---------------------------------------------------------------------------
+@pytest.mark.slow   # unrolled complex host-loop trace per hub mode
+@pytest.mark.parametrize("hub", [False, True])
+def test_complex_qrd_unitary_reconstruction_real_diagonal(hub):
+    eng = api.QRDEngine(backend="cordic", dtype="complex128",
+                        givens=GivensConfig(hub=hub, n=26))
+    C = _complex(RNG, (3, 5, 4))
+    Q, R = eng(C)
+    Q, R = np.asarray(Q), np.asarray(R)
+    np.testing.assert_allclose(Q @ R, C, atol=2e-5)
+    eye = np.broadcast_to(np.eye(5), (3, 5, 5))
+    np.testing.assert_allclose(np.swapaxes(Q.conj(), -1, -2) @ Q, eye,
+                               atol=2e-5)
+    diag = np.diagonal(R, axis1=-2, axis2=-1)
+    assert np.all(diag.imag == 0.0)             # phases rotated into Q
+    assert np.all(diag.real >= 0.0)
+    assert np.all(np.tril(R[..., :4, :], -1) == 0.0)
+
+
+def test_complex_givens_float_matches_real_path_on_real_input():
+    A = RNG.standard_normal((2, 5, 3)).astype(np.float32)
+    Qr, Rr = cq.qr_givens_float(A, dtype=np.float32)
+    Qc, Rc = cq.qr_givens_float(A, dtype=np.complex64)
+    np.testing.assert_allclose(np.asarray(Qc.real), np.asarray(Qr),
+                               atol=1e-6)
+    assert np.all(np.asarray(Qc.imag) == 0.0)
+    np.testing.assert_allclose(np.asarray(Rc.real), np.asarray(Rr),
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# solve golden vs np.linalg.lstsq (IEEE + HUB, multi-RHS)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend,kwargs", [
+    ("jnp", {}),
+    ("givens_float", {}),
+    pytest.param("cordic", {"givens": GivensConfig(hub=False, n=26)},
+                 marks=pytest.mark.slow),   # unrolled host-loop trace
+    pytest.param("cordic", {"givens": GivensConfig(hub=True, n=26)},
+                 marks=pytest.mark.slow),
+])
+def test_complex_solve_matches_lstsq(backend, kwargs):
+    rng = np.random.default_rng(3)
+    B, m, n, k = 3, 6, 3, 2
+    A = _complex(rng, (B, m, n))
+    b = _complex(rng, (B, m, k))
+    eng = api.QRDEngine(backend=backend, dtype="complex128", **kwargs)
+    x, resid = eng.solve(A, b, return_residuals=True)
+    x = np.asarray(x)
+    assert x.dtype.kind == "c" and x.shape == (B, n, k)
+    tol = api.SOLVE_TOLERANCES[f"{backend}:complex"]
+    for i in range(B):
+        xr, res2, *_ = np.linalg.lstsq(A[i], b[i], rcond=None)
+        rel = np.linalg.norm(x[i] - xr) / np.linalg.norm(xr)
+        assert rel < tol, (backend, i, rel, tol)
+        np.testing.assert_allclose(np.asarray(resid)[i] ** 2, res2,
+                                   rtol=1e-3, atol=1e-6)
+    # single-RHS vector shape round-trips
+    xv = eng.solve(A, b[..., 0])
+    assert np.asarray(xv).shape == (B, n)
+    np.testing.assert_allclose(np.asarray(xv), x[..., 0], atol=1e-12)
+
+
+@pytest.mark.slow
+def test_complex_solve_on_cordic_pallas_matches_host():
+    rng = np.random.default_rng(4)
+    A = _complex(rng, (2, 5, 3))
+    b = _complex(rng, (2, 5))
+    xh = api.QRDEngine(backend="cordic", dtype="complex128").solve(A, b)
+    xp = api.QRDEngine(backend="cordic_pallas",
+                       dtype="complex128").solve(A, b)
+    assert np.array_equal(np.asarray(xh), np.asarray(xp))
+
+
+def test_back_substitute_complex():
+    rng = np.random.default_rng(5)
+    n = 5
+    R = np.triu(_complex(rng, (n, n))) + 2 * np.eye(n)
+    y = _complex(rng, (n,))
+    x = np.asarray(api.back_substitute(R, y))
+    np.testing.assert_allclose(R @ x, y, atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# complex QRD-RLS (the beamforming scenario)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode_kwargs", [
+    dict(mode="float"),
+    dict(mode="unit", unit=GivensUnit(GivensConfig(hub=True, n=26))),
+])
+def test_complex_rls_converges(mode_kwargs):
+    rng = np.random.default_rng(6)
+    n, T = 4, 150
+    w_true = _complex(rng, (n,))
+    st = api.RLSState(n, lam=0.995, dtype="complex128", **mode_kwargs)
+    for _ in range(T):
+        x = _complex(rng, (n,))
+        st.update(x, w_true @ x + 0.01 * _complex(rng, ()))
+    err = np.linalg.norm(st.weights() - w_true)
+    assert err < 0.05, (mode_kwargs["mode"], err)
+    assert st.weights().dtype.kind == "c"
+
+
+def test_complex_rls_block_mode_rejected():
+    with pytest.raises(TypeError, match="complex"):
+        api.RLSState(4, mode="block", dtype="complex128")
+    eng = api.QRDEngine(backend="cordic", dtype="complex128")
+    with pytest.raises(TypeError, match="complex"):
+        eng.rls(4, block=2)
+
+
+def test_complex_snapshot_on_real_rls_state_rejected():
+    """The no-silent-real-cast contract holds on the RLS surface too."""
+    st = api.RLSState(4)                    # real float64 state
+    with pytest.raises(TypeError, match="real"):
+        st.update(_complex(RNG, (4,)), 1.0)
+    with pytest.raises(TypeError, match="real"):
+        st.update(np.ones(4), np.complex128(1 + 2j))   # complex target too
+    with pytest.raises(TypeError, match="real"):
+        st.predict(_complex(RNG, (4,)))
+
+
+def test_complex_beamforming_example():
+    """The adaptive-beamforming example on physical complex baseband
+    snapshots reaches the same interference-rejection bound as the
+    interleaved-real formulation."""
+    path = os.path.join(os.path.dirname(__file__), "..", "examples",
+                        "adaptive_beamforming.py")
+    spec = importlib.util.spec_from_file_location("adaptive_beamforming",
+                                                  path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    mse = mod.main_complex(use_cordic=True)
+    assert mse < 0.05
+
+
+# ---------------------------------------------------------------------------
+# x64 import guard (satellite: no silent global-config clobber)
+# ---------------------------------------------------------------------------
+def test_import_repro_with_explicit_x64_off_raises():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ, JAX_ENABLE_X64="0",
+               PYTHONPATH=os.pathsep.join(
+                   [src, os.environ.get("PYTHONPATH", "")]))
+    proc = subprocess.run(
+        [sys.executable, "-c", "import repro"],
+        capture_output=True, text=True, env=env)
+    assert proc.returncode != 0
+    assert "jax_enable_x64" in proc.stderr

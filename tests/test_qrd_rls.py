@@ -45,6 +45,7 @@ def test_rls_float_and_unit_modes_converge_identically():
     assert sf.updates == su.updates == T
 
 
+@pytest.mark.slow   # kernel-resident block annihilation compile
 def test_rls_block_mode_matches_float_weights():
     n, T, block = 5, 60, 3
     w_true = RNG.normal(size=n)
@@ -58,6 +59,7 @@ def test_rls_block_mode_matches_float_weights():
     assert np.linalg.norm(sb.weights() - w_true) < 0.05
 
 
+@pytest.mark.slow   # kernel-resident block annihilation compile
 def test_rls_block_partial_flush():
     n = 3
     w_true = RNG.normal(size=n)

@@ -19,6 +19,10 @@ from repro.core import (GivensConfig, GivensUnit, QRDEngine, givens_schedule,
                         qr_blockfp_pallas, qr_blockfp_wavefront, qr_cordic,
                         qr_cordic_wavefront, sameh_kuck_schedule, snr_db)
 
+# Interpret-mode kernel compiles dominate this module's runtime
+# (tens of seconds per pallas_call trace): full lane only.
+pytestmark = pytest.mark.slow
+
 RNG = np.random.default_rng(11)
 
 
