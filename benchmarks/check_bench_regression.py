@@ -1,21 +1,31 @@
 """Diff a fresh BENCH_qrd.json against the committed baseline — CI gate.
 
-Fails (exit 1) when any backend×schedule row present in both files has a
-cold end-to-end time (``end_to_end_s``: trace + compile + first run) more
-than ``factor`` times the baseline's, or when a baseline row disappeared
-from the fresh run (coverage regression).  New rows in the fresh run are
-reported but never fail — adding benchmarks is progress.
+Schema-version aware (``schema_version`` 2 is current):
 
-Cold time is the gated metric because it is the one the wavefront/trace
-work optimizes and the least noisy across CI machines at interpret-mode
-magnitudes (tens of seconds); steady-state rates are printed for
-eyeballing but not gated.
+* **Warm gate** — fails (exit 1) when any row present in both files has
+  a warm time (``warm_s``: median of steady-state ``block_until_ready``
+  reps) more than ``factor`` times the baseline's.  v1 documents (no
+  ``warm_s``) fall back to the old cold ``end_to_end_s`` gate with a
+  warning — cold times conflate trace/compile with execution and are
+  reported but never gated on v2 documents.
+* **Coverage gate** — a baseline row missing from the fresh run fails.
+* **Roofline gate** — a fresh row measured **compiled**
+  (``interpret_mode`` explicitly false) must achieve at least
+  ``--min-roofline`` of its analytic bound (``roofline_fraction``);
+  interpret-mode rows are exempt (they measure the emulator, not the
+  device), so the gate is inert on CPU-only CI and arms itself the
+  moment a compiled lane produces numbers.
+
+New rows in the fresh run are reported but never fail — adding
+benchmarks is progress.
 
     PYTHONPATH=src python -m benchmarks.check_bench_regression \
-        BENCH_qrd.json BENCH_qrd.fresh.json [--factor 2.0]
+        BENCH_qrd.json BENCH_qrd.fresh.json [--factor 2.0] \
+        [--min-roofline 0.02]
 
-``REPRO_BENCH_REGRESSION_FACTOR`` overrides the factor (CI escape hatch
-for known-slow runners without editing the workflow).
+``REPRO_BENCH_REGRESSION_FACTOR`` / ``REPRO_BENCH_MIN_ROOFLINE``
+override the thresholds (CI escape hatches for known-slow runners
+without editing the workflow).
 """
 from __future__ import annotations
 
@@ -25,32 +35,75 @@ import os
 import sys
 
 DEFAULT_FACTOR = 2.0
+DEFAULT_MIN_ROOFLINE = 0.02
 
 
-def compare(baseline: dict, fresh: dict, factor: float):
+def _gate_metric(doc: dict):
+    """('warm_s', None) for v2 docs, ('end_to_end_s', warning) for v1."""
+    if doc.get("schema_version", 1) >= 2:
+        return "warm_s", None
+    return "end_to_end_s", ("baseline is schema v1 (no warm_s): gating on "
+                            "cold end_to_end_s — regenerate the baseline")
+
+
+def compare(baseline: dict, fresh: dict, factor: float,
+            min_roofline: float = DEFAULT_MIN_ROOFLINE):
     """Return (failures, report_lines) for two BENCH_qrd.json documents."""
     base_rows = baseline.get("results", {})
     fresh_rows = fresh.get("results", {})
     failures, lines = [], []
+    metric, warning = _gate_metric(baseline)
+    f_metric, f_warning = _gate_metric(fresh)
+    gate = metric if metric == f_metric else "end_to_end_s"
+    for w in {warning, f_warning} - {None}:
+        lines.append(f"warn {w}")
+    if gate != metric or gate != f_metric:
+        lines.append("warn mixed schema versions: gating on cold "
+                     "end_to_end_s for comparability")
+
     for key in sorted(base_rows):
         if key not in fresh_rows:
             failures.append(f"{key}: row missing from fresh run")
             continue
-        b = base_rows[key].get("end_to_end_s")
-        f = fresh_rows[key].get("end_to_end_s")
+        b = base_rows[key].get(gate)
+        f = fresh_rows[key].get(gate)
         if b is None or f is None:
             continue
         ratio = f / b if b > 0 else float("inf")
         status = "FAIL" if ratio > factor else "ok"
-        lines.append(f"{status:4s} {key}: cold {f:8.3f}s vs baseline "
-                     f"{b:8.3f}s ({ratio:.2f}x)")
+        label = "warm" if gate == "warm_s" else "cold"
+        cold_note = ""
+        if gate == "warm_s":
+            bc = base_rows[key].get("cold_s")
+            fc = fresh_rows[key].get("cold_s")
+            if bc and fc:
+                cold_note = f"  [cold {fc:.3f}s vs {bc:.3f}s]"
+        lines.append(f"{status:4s} {key}: {label} {f:8.4f}s vs baseline "
+                     f"{b:8.4f}s ({ratio:.2f}x){cold_note}")
         if ratio > factor:
-            failures.append(f"{key}: cold end-to-end {f:.3f}s is "
-                            f"{ratio:.2f}x the baseline {b:.3f}s "
+            failures.append(f"{key}: {label} time {f:.4f}s is "
+                            f"{ratio:.2f}x the baseline {b:.4f}s "
                             f"(> {factor:.1f}x)")
+
+    # Roofline gate: compiled rows only (interpret_mode explicitly False).
+    for key in sorted(fresh_rows):
+        row = fresh_rows[key]
+        if row.get("interpret_mode") is not False:
+            continue
+        frac = row.get("roofline_fraction")
+        if frac is None:
+            continue
+        status = "FAIL" if frac < min_roofline else "ok"
+        lines.append(f"{status:4s} {key}: compiled roofline fraction "
+                     f"{frac:.3f} (floor {min_roofline:.3f})")
+        if frac < min_roofline:
+            failures.append(f"{key}: compiled row achieves only "
+                            f"{frac:.3f} of the analytic roofline "
+                            f"(< {min_roofline:.3f})")
+
     for key in sorted(set(fresh_rows) - set(base_rows)):
-        lines.append(f"new  {key}: cold "
-                     f"{fresh_rows[key].get('end_to_end_s', float('nan')):.3f}s"
+        v = fresh_rows[key].get(gate)
+        lines.append(f"new  {key}: {v if v is None else format(v, '.4f')}s"
                      " (no baseline)")
     return failures, lines
 
@@ -62,14 +115,20 @@ def main(argv=None):
     ap.add_argument("--factor", type=float,
                     default=float(os.environ.get(
                         "REPRO_BENCH_REGRESSION_FACTOR", DEFAULT_FACTOR)),
-                    help="max allowed cold-time ratio fresh/baseline")
+                    help="max allowed warm-time ratio fresh/baseline")
+    ap.add_argument("--min-roofline", type=float,
+                    default=float(os.environ.get(
+                        "REPRO_BENCH_MIN_ROOFLINE", DEFAULT_MIN_ROOFLINE)),
+                    help="min roofline fraction for compiled rows")
     args = ap.parse_args(argv)
     with open(args.baseline) as fh:
         baseline = json.load(fh)
     with open(args.fresh) as fh:
         fresh = json.load(fh)
-    failures, lines = compare(baseline, fresh, args.factor)
-    print(f"# bench regression check (factor {args.factor:.1f}x): "
+    failures, lines = compare(baseline, fresh, args.factor,
+                              args.min_roofline)
+    print(f"# bench regression check (factor {args.factor:.1f}x, "
+          f"roofline floor {args.min_roofline:.3f}): "
           f"{args.fresh} vs {args.baseline}")
     for line in lines:
         print(line)
@@ -78,7 +137,7 @@ def main(argv=None):
         for f in failures:
             print(f"  {f}", file=sys.stderr)
         return 1
-    print("# no cold-time regressions")
+    print("# no regressions")
     return 0
 
 

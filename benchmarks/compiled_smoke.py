@@ -1,0 +1,63 @@
+"""Compiled-Pallas smoke: blockfp interpret=False parity where possible.
+
+CI entry point for the compiled lane (DESIGN.md §11).  On a host with a
+compiled Pallas backend (TPU/GPU), runs the int32 block-FP blocked QRD
+with ``interpret=False`` and asserts bit-identity against the interpret
+path — the "compiled-mode performance truth" guarantee that the numbers
+BENCH_qrd.json reports for compiled rows come from the same arithmetic
+CI validates in interpret mode.  On CPU-only hosts it exits 0 with a
+notice (there is nothing to compile against; the interpret path is
+already covered by the tier-1 suite).
+
+    PYTHONPATH=src python -m benchmarks.compiled_smoke
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+
+def main():
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    from repro.kernels.ops import compiled_backend_available
+
+    if not compiled_backend_available():
+        print(f"compiled_smoke: no compiled Pallas backend on "
+              f"'{jax.default_backend()}' — skipping (exit 0). "
+              "Run on TPU/GPU to exercise interpret=False.")
+        return 0
+
+    import jax.numpy as jnp
+    from repro.core.qrd import (givens_schedule, qr_blockfp_pallas,
+                                qr_blockfp_wavefront, sameh_kuck_schedule)
+
+    rng = np.random.default_rng(0)
+    failures = 0
+    for m, batch in ((4, 64), (8, 32)):
+        A = jnp.asarray(rng.standard_normal((batch, m, m)))
+        for name, fn in (
+                ("col", lambda X, i: qr_blockfp_pallas(
+                    X, steps=givens_schedule(m, m), interpret=i)),
+                ("sameh_kuck", lambda X, i: qr_blockfp_wavefront(
+                    X, stages=sameh_kuck_schedule(m, m), interpret=i))):
+            Qc, Rc = fn(A, False)   # compiled
+            Qi, Ri = fn(A, True)    # interpret reference
+            q_ok = bool(jnp.all(Qc == Qi))
+            r_ok = bool(jnp.all(Rc == Ri))
+            status = "ok " if (q_ok and r_ok) else "FAIL"
+            print(f"{status} blockfp/{name} {m}x{m} batch={batch}: "
+                  f"compiled == interpret (Q: {q_ok}, R: {r_ok})")
+            if not (q_ok and r_ok):
+                failures += 1
+    if failures:
+        print(f"{failures} compiled-vs-interpret mismatch(es)",
+              file=sys.stderr)
+        return 1
+    print("compiled_smoke: all compiled outputs bit-identical to interpret")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,7 +9,17 @@ technological):
 Throughput at each design's reported fmax reproduces the paper's MOp/s
 column; we also measure our emulation's actual throughput on this CPU
 (vectorized over a batch of rotations — the "spatial" analogue of the
-pipeline) and the Pallas-kernel (interpret mode) rotations/s.
+pipeline) and the Pallas-kernel rotations/s.
+
+Timing hygiene (schema_version 2): every engine row records **cold**
+(first call: trace + compile + run) and **warm** (median of
+``REPRO_BENCH_WARM_REPS`` ``block_until_ready`` reps) separately —
+the old ``end_to_end_s`` conflated them and is kept as an alias of cold
+for v1 consumers.  Rates (``qrd_per_s``/``solve_per_s``) are computed
+from warm.  Each row also carries its resolved ``interpret_mode`` and
+``tile_b`` plus the measured-vs-analytic ``roofline_fraction``
+(`repro.launch.roofline.roofline_for_row`), and the run exercises the
+`repro.kernels.autotune` tuner on two shapes before measuring.
 """
 from __future__ import annotations
 
@@ -23,6 +33,34 @@ from .common import csv_row, timed
 
 E = 8  # elements per row (4x4 QRD with Q, as in the paper)
 BENCH_JSON = os.environ.get("REPRO_BENCH_QRD_JSON", "BENCH_qrd.json")
+WARM_REPS = int(os.environ.get("REPRO_BENCH_WARM_REPS", "5"))
+SCHEMA_VERSION = 2
+
+
+def _cold_warm(run, warm_reps=None):
+    """(cold first-call seconds, median warm seconds) for a thunk."""
+    import jax
+    warm_reps = WARM_REPS if warm_reps is None else warm_reps
+    t0 = time.perf_counter()
+    jax.block_until_ready(run())
+    cold = time.perf_counter() - t0
+    times = []
+    for _ in range(warm_reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run())
+        times.append(time.perf_counter() - t0)
+    return cold, float(np.median(times))
+
+
+def _engine_tile_b(eng):
+    """The tile_b the engine actually dispatched with (autotuned or
+    default) — read off the jitted-callable LRU key's resolved config."""
+    from repro.kernels.qrd_blocked import TILE_B
+    cache = getattr(eng, "_fn_cache", None) or {}
+    for key in cache:
+        cfg = key[3][0]
+        return cfg.tile_b if cfg.tile_b is not None else TILE_B
+    return TILE_B
 
 DESIGNS = {
     # name: (fmax MHz, latency cycles, II(e) lambda)
@@ -68,15 +106,18 @@ def measured_qrd_rates(batch=64, m=4,
       m·n/2-ish.
 
     Returns ``{f"{backend}/{schedule}": record}`` where each record holds
-    the steady-state rate (``qrd_per_s``), the cold first-call wall time
-    including trace + compile (``end_to_end_s`` — the wavefront's biggest
-    win: its trace is one stage body, not the unrolled schedule), and the
-    depth/pass accounting.
+    the warm steady-state rate (``qrd_per_s``), cold vs warm wall times
+    (``cold_s`` / ``warm_s``; cold includes trace + compile — the
+    wavefront's biggest win: its trace is one stage body, not the
+    unrolled schedule), the resolved ``interpret_mode`` / ``tile_b``,
+    the measured-vs-analytic ``roofline_fraction``, and the depth/pass
+    accounting.
     """
-    import jax
     import jax.numpy as jnp
     from repro.core import (GivensConfig, QRDEngine, givens_schedule,
                             sameh_kuck_schedule)
+    from repro.kernels.ops import auto_interpret
+    from repro.launch.roofline import roofline_for_row
 
     rng = np.random.default_rng(0)
     A = jnp.asarray(rng.choice([-1.0, 1.0], (batch, m, m))
@@ -84,23 +125,32 @@ def measured_qrd_rates(batch=64, m=4,
     steps = len(givens_schedule(m, m))
     stages = len(sameh_kuck_schedule(m, m))
     cfg = GivensConfig(hub=True, n=26)
+    interp = auto_interpret(None)
     out = {}
     for backend, sched in combos:
         eng = QRDEngine(backend=backend, givens_config=cfg, schedule=sched)
-        t0 = time.perf_counter()
-        jax.block_until_ready(eng(A))
-        cold = time.perf_counter() - t0
-        sec = timed(lambda: eng(A))
+        cold, warm = _cold_warm(lambda: eng(A))
         wavefront = sched == "sameh_kuck" and backend != "cordic"
-        out[f"{backend}/{sched}"] = {
+        pallas = backend.endswith("_pallas")
+        row = {
             "backend": backend, "schedule": sched,
             "batch": batch, "m": m,
-            "qrd_per_s": batch / sec,
-            "end_to_end_s": cold,
+            "qrd_per_s": batch / warm,
+            "cold_s": cold, "warm_s": warm,
+            "end_to_end_s": cold,        # v1 alias (cold time)
+            "interpret_mode": interp if pallas else None,
+            "tile_b": _engine_tile_b(eng) if pallas else None,
+            "iters": cfg.resolved_iters(),
             "steps": steps, "stages": stages,
             "seq_depth": stages if wavefront else steps,
             "hbm_passes_per_qrd": 2 * steps if backend == "cordic" else 2,
         }
+        terms = roofline_for_row(row)
+        if terms is not None:
+            row["roofline_fraction"] = terms["roofline_fraction"]
+            row["roofline_bound_qrd_per_s"] = terms["bound_qrd_per_s"]
+            row["roofline_dominant"] = terms["dominant"]
+        out[f"{backend}/{sched}"] = row
     return out
 
 
@@ -114,29 +164,30 @@ def measured_solve_rates(batch=64, m=6, n=3,
     ``[A | b]`` with ``compute_q=False`` on the registry-dispatched
     engine, then back-substitute — the workload the paper's rotator
     exists for (QRD-based least squares in communication systems).
-    Returns ``{f"solve:{backend}/{schedule}": record}`` with steady-state
-    ``solve_per_s`` and the cold first-call wall time (``end_to_end_s``).
+    Returns ``{f"solve:{backend}/{schedule}": record}`` with the warm
+    steady-state ``solve_per_s`` plus cold/warm wall times.
     """
-    import jax
     from repro import qrd as api
     from repro.core import GivensConfig
+    from repro.kernels.ops import auto_interpret
 
     rng = np.random.default_rng(0)
     A = (rng.choice([-1.0, 1.0], (batch, m, n))
          * np.exp2(rng.uniform(-2, 2, (batch, m, n))))
     b = rng.normal(size=(batch, m)) * 2.0
     cfg = GivensConfig(hub=True, n=26)
+    interp = auto_interpret(None)
     out = {}
     for backend, sched in combos:
         eng = api.QRDEngine(backend=backend, schedule=sched, givens=cfg)
-        t0 = time.perf_counter()
-        jax.block_until_ready(eng.solve(A, b))
-        cold = time.perf_counter() - t0
-        sec = timed(lambda: eng.solve(A, b))
+        cold, warm = _cold_warm(lambda: eng.solve(A, b))
         out[f"solve:{backend}/{sched}"] = {
             "backend": backend, "schedule": sched, "batch": batch,
             "m": m, "n": n,
-            "solve_per_s": batch / sec, "end_to_end_s": cold,
+            "solve_per_s": batch / warm,
+            "cold_s": cold, "warm_s": warm, "end_to_end_s": cold,
+            "interpret_mode": (interp if backend.endswith("_pallas")
+                               else None),
         }
     return out
 
@@ -153,9 +204,9 @@ def measured_complex_qrd_rates(batch=64, m=4,
     end-to-end time keeps its one-stage-body trace advantage.
     Returns ``{f"complex:{backend}/{schedule}": record}``.
     """
-    import jax
     from repro import qrd as api
     from repro.core import GivensConfig, givens_schedule, sameh_kuck_schedule
+    from repro.kernels.ops import auto_interpret
 
     rng = np.random.default_rng(0)
     A = (rng.choice([-1.0, 1.0], (batch, m, m))
@@ -165,20 +216,20 @@ def measured_complex_qrd_rates(batch=64, m=4,
     steps = len(givens_schedule(m, m))
     stages = len(sameh_kuck_schedule(m, m))
     cfg = GivensConfig(hub=True, n=26)
+    interp = auto_interpret(None)
     out = {}
     for backend, sched in combos:
         eng = api.QRDEngine(backend=backend, schedule=sched, givens=cfg,
                             dtype="complex128")
-        t0 = time.perf_counter()
-        jax.block_until_ready(eng(A))
-        cold = time.perf_counter() - t0
-        sec = timed(lambda: eng(A))
+        cold, warm = _cold_warm(lambda: eng(A))
         wavefront = sched == "sameh_kuck" and backend != "cordic"
         out[f"complex:{backend}/{sched}"] = {
             "backend": backend, "schedule": sched, "dtype": "complex128",
             "batch": batch, "m": m,
-            "qrd_per_s": batch / sec,
-            "end_to_end_s": cold,
+            "qrd_per_s": batch / warm,
+            "cold_s": cold, "warm_s": warm, "end_to_end_s": cold,
+            "interpret_mode": (interp if backend.endswith("_pallas")
+                               else None),
             "steps": steps, "stages": stages,
             "seq_depth": stages if wavefront else steps,
         }
@@ -196,28 +247,71 @@ def measured_complex_solve_rates(batch=64, m=6, n=3,
     zero-forcing detector (`examples/mimo_detection.py`).
     Returns ``{f"complex-solve:{backend}/{schedule}": record}``.
     """
-    import jax
     from repro import qrd as api
     from repro.core import GivensConfig
+    from repro.kernels.ops import auto_interpret
 
     rng = np.random.default_rng(0)
     A = (rng.normal(size=(batch, m, n))
          + 1j * rng.normal(size=(batch, m, n)))
     b = rng.normal(size=(batch, m)) + 1j * rng.normal(size=(batch, m))
     cfg = GivensConfig(hub=True, n=26)
+    interp = auto_interpret(None)
     out = {}
     for backend, sched in combos:
         eng = api.QRDEngine(backend=backend, schedule=sched, givens=cfg,
                             dtype="complex128")
-        t0 = time.perf_counter()
-        jax.block_until_ready(eng.solve(A, b))
-        cold = time.perf_counter() - t0
-        sec = timed(lambda: eng.solve(A, b))
+        cold, warm = _cold_warm(lambda: eng.solve(A, b))
         out[f"complex-solve:{backend}/{sched}"] = {
             "backend": backend, "schedule": sched, "dtype": "complex128",
             "batch": batch, "m": m, "n": n,
-            "solve_per_s": batch / sec, "end_to_end_s": cold,
+            "solve_per_s": batch / warm,
+            "cold_s": cold, "warm_s": warm, "end_to_end_s": cold,
+            "interpret_mode": (interp if backend.endswith("_pallas")
+                               else None),
         }
+    return out
+
+
+#: (m, batch) shapes the autotune demonstration covers: a tall batch of
+#: tiny matrices (tile candidates run up to the batch) vs a small batch
+#: of big matrices (the batch itself caps the tile) — the shapes whose
+#: winning tiles should differ.
+AUTOTUNE_SHAPES = ((4, 64), (32, 8))
+
+
+def run_autotune_demo(backend="blockfp_pallas", schedule="sameh_kuck",
+                      shapes=AUTOTUNE_SHAPES):
+    """Tune (tile_b, table_layout) on two shapes; compare vs fixed TILE_B.
+
+    Populates the persisted autotune cache (so the engine rows above it
+    in future runs dispatch on tuned tiles) and returns the comparison
+    record for BENCH_qrd.json: per shape, the winner, its warm time, and
+    the fixed-``TILE_B`` candidate's warm time from the same sweep.
+    """
+    from repro.core import GivensConfig
+    from repro.kernels import autotune
+    from repro.kernels.qrd_blocked import TILE_B
+
+    cfg = GivensConfig(hub=True, n=26)
+    out = {"backend": backend, "schedule": schedule, "fixed_tile_b": TILE_B,
+           "cache_path": autotune.cache_path(), "shapes": {}}
+    for m, batch in shapes:
+        # dtype must match the engine rows' dispatch key (the legacy
+        # shim's default problem dtype) or the lookup misses.
+        entry = autotune.tune(backend, schedule, m, m, batch, givens=cfg,
+                              dtype="float32", warm_reps=3)
+        fixed = next((c for c in entry.candidates
+                      if c["tile_b"] == TILE_B
+                      and c["table_layout"] in ("split", None)), None)
+        rec = {"batch": batch,
+               "tile_b": entry.tile_b, "table_layout": entry.table_layout,
+               "warm_s": entry.warm_s,
+               "fixed_tile_warm_s": fixed["warm_s"] if fixed else None,
+               "speedup_vs_fixed": (fixed["warm_s"] / entry.warm_s
+                                    if fixed else None),
+               "candidates": list(entry.candidates)}
+        out["shapes"][f"m{m}_b{batch}"] = rec
     return out
 
 
@@ -236,14 +330,26 @@ def main(full=False):
                  ("hub_fp_rotator", 8463)]:
         print(f"{n},double,{l}")
 
-    hdr = ("backend/schedule,qrd_per_s,end_to_end_s,seq_depth,steps,"
-           "stages,hbm_passes_per_qrd")
+    # Tune first: the 4x4 engine rows below then dispatch on the tuned
+    # tile (the tuner writes the persisted cache the engine consults).
+    tuned = run_autotune_demo()
+    print("# autotune: shape,tile_b,table_layout,warm_s,speedup_vs_fixed")
+    for shape, r in tuned["shapes"].items():
+        sp = r["speedup_vs_fixed"]
+        print(f"{shape},{r['tile_b']},{r['table_layout']},"
+              f"{r['warm_s']:.4f},{sp:.2f}x" if sp else
+              f"{shape},{r['tile_b']},{r['table_layout']},"
+              f"{r['warm_s']:.4f},n/a")
+
+    hdr = ("backend/schedule,qrd_per_s,warm_s,cold_s,seq_depth,steps,"
+           "stages,hbm_passes_per_qrd,tile_b,roofline_fraction")
     print(f"# blocked QRD engines (4x4): {hdr}")
     qrd = measured_qrd_rates(m=4)
     for key, r in qrd.items():
-        print(f"{key},{r['qrd_per_s']:.1f},{r['end_to_end_s']:.3f},"
-              f"{r['seq_depth']},{r['steps']},{r['stages']},"
-              f"{r['hbm_passes_per_qrd']}")
+        print(f"{key},{r['qrd_per_s']:.1f},{r['warm_s']:.4f},"
+              f"{r['cold_s']:.3f},{r['seq_depth']},{r['steps']},"
+              f"{r['stages']},{r['hbm_passes_per_qrd']},{r['tile_b']},"
+              f"{r.get('roofline_fraction', float('nan')):.2e}")
 
     # The wavefront acceptance point (ISSUE 2): batched 8x8 QRD with Q —
     # the sequential blocked path's trace unrolls all 28 steps, the
@@ -252,9 +358,10 @@ def main(full=False):
     qrd8 = measured_qrd_rates(m=8, combos=(("blockfp_pallas", "col"),
                                            ("blockfp_pallas", "sameh_kuck")))
     for key, r in qrd8.items():
-        print(f"{key},{r['qrd_per_s']:.1f},{r['end_to_end_s']:.3f},"
-              f"{r['seq_depth']},{r['steps']},{r['stages']},"
-              f"{r['hbm_passes_per_qrd']}")
+        print(f"{key},{r['qrd_per_s']:.1f},{r['warm_s']:.4f},"
+              f"{r['cold_s']:.3f},{r['seq_depth']},{r['steps']},"
+              f"{r['stages']},{r['hbm_passes_per_qrd']},{r['tile_b']},"
+              f"{r.get('roofline_fraction', float('nan')):.2e}")
     speedup_8x8 = (qrd8["blockfp_pallas/col"]["end_to_end_s"]
                    / qrd8["blockfp_pallas/sameh_kuck"]["end_to_end_s"])
     print(f"# wavefront 8x8 end-to-end speedup vs sequential blocked: "
@@ -284,7 +391,7 @@ def main(full=False):
 
     rate = measured_kernel_rate()
     write_bench_json(qrd, qrd8, solve, speedup_8x8, rate,
-                     complex_rows={**cqrd, **csolve})
+                     complex_rows={**cqrd, **csolve}, autotune=tuned)
     csv_row("table6_7_throughput", 1e6 / rate,
             f"model_speedup_vs_[32]={ours/gen:.1f}x;"
             f"pallas_interp_rot_per_s={rate:.0f};"
@@ -298,19 +405,23 @@ def main(full=False):
 
 
 def write_bench_json(qrd4, qrd8, solve, speedup_8x8, rot_per_s,
-                     complex_rows=None, path=BENCH_JSON):
+                     complex_rows=None, autotune=None, path=BENCH_JSON):
     """Emit the machine-readable perf trajectory (BENCH_qrd.json).
 
-    One record per (backend, schedule, m) decomposition row — steady-state
-    qrd/s, cold end-to-end seconds (trace + compile + run), sequential
-    depth (steps vs stages) and HBM passes — plus one per solve-path row.
-    These are the numbers future PRs diff against:
-    `benchmarks.check_bench_regression` fails CI when any row's cold
-    end-to-end time regresses more than 2x vs the committed baseline.
+    Schema version 2: one record per (backend, schedule, m) row with
+    warm/cold times split (``warm_s`` drives the rates and the CI gate;
+    ``cold_s`` = trace + compile + first run, aliased as the v1
+    ``end_to_end_s``), per-row ``interpret_mode`` / ``tile_b`` (the old
+    top-level interpret flag is gone — rows can differ once a compiled
+    backend exists), ``roofline_fraction`` for modeled rows, and the
+    ``autotune`` comparison section.  These are the numbers future PRs
+    diff against: `benchmarks.check_bench_regression` fails CI when any
+    row's warm time regresses more than 2x vs the committed baseline,
+    or a compiled row falls below the roofline floor.
     """
     doc = {
         "bench": "table6_7_throughput",
-        "interpret_mode": True,
+        "schema_version": SCHEMA_VERSION,
         "rotations_per_s": rot_per_s,
         "results": {**{f"{k} (4x4)": v for k, v in qrd4.items()},
                     **{f"{k} (8x8)": v for k, v in qrd8.items()},
@@ -319,6 +430,8 @@ def write_bench_json(qrd4, qrd8, solve, speedup_8x8, rot_per_s,
                        for k, v in (complex_rows or {}).items()}},
         "wavefront_8x8_end_to_end_speedup": speedup_8x8,
     }
+    if autotune is not None:
+        doc["autotune"] = autotune
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
     print(f"# wrote {path}")

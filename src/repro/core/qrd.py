@@ -162,7 +162,7 @@ def qr_cordic(A, unit: GivensUnit, N=None, iters=None, compute_q=True,
 
 
 def qr_cordic_pallas(A, unit: GivensUnit, compute_q=True, steps=None,
-                     interpret=None):
+                     interpret=None, tile_b=None):
     """Kernel-resident QRD: the whole triangularization in one Pallas call.
 
     Semantically `qr_cordic` with the Python loop moved *inside* the
@@ -183,6 +183,10 @@ def qr_cordic_pallas(A, unit: GivensUnit, compute_q=True, steps=None,
         `sameh_kuck_schedule` for the parallel-pairing order.
     interpret : bool, optional
         Forwarded to the kernel; None auto-selects (interpret on CPU).
+    tile_b : int, optional
+        Batch tile of the blocked kernel; None takes the default
+        (``TILE_B``, or the engine's autotuned value when dispatched
+        through `repro.qrd.QRDEngine`).
 
     Returns
     -------
@@ -196,13 +200,13 @@ def qr_cordic_pallas(A, unit: GivensUnit, compute_q=True, steps=None,
     if steps is None:
         steps = givens_schedule(m, n)
     Pout = _kops.qr_packed(P, cfg=unit.cfg, steps=tuple(steps),
-                           interpret=interpret)
+                           interpret=interpret, tile_b=tile_b)
     out = unit.decode(Pout)
     return _split_qr(out, m, n, compute_q)
 
 
 def qr_blockfp_pallas(A, compute_q=True, iters=24, hub=True, frac=24,
-                      steps=None, interpret=None):
+                      steps=None, interpret=None, tile_b=None):
     """Blocked QRD on the int32 block-fixed-point kernel (the fast path).
 
     The working matrix is quantized once to per-column block fixed point,
@@ -234,7 +238,8 @@ def qr_blockfp_pallas(A, compute_q=True, iters=24, hub=True, frac=24,
     if steps is None:
         steps = givens_schedule(m, n)
     out = _kops.givens_block_apply(work, tuple(steps), iters=iters, hub=hub,
-                                   frac=frac, interpret=interpret)
+                                   frac=frac, interpret=interpret,
+                                   tile_b=tile_b)
     return _split_qr(out, m, n, compute_q)
 
 
@@ -324,7 +329,7 @@ def qr_cordic_complex(A, unit: GivensUnit, N=None, iters=None, compute_q=True,
 
 
 def qr_cordic_complex_pallas(A, unit: GivensUnit, compute_q=True, steps=None,
-                             interpret=None):
+                             interpret=None, tile_b=None):
     """Kernel-resident complex QRD: the triangularization in one Pallas call.
 
     `qr_cordic_complex` with the step loop moved inside the kernel — the
@@ -343,12 +348,13 @@ def qr_cordic_complex_pallas(A, unit: GivensUnit, compute_q=True, steps=None,
     if steps is None:
         steps = givens_schedule(m, n)
     Pout = _kops.qr_packed_complex(P, cfg=unit.cfg, steps=tuple(steps),
-                                   interpret=interpret)
+                                   interpret=interpret, tile_b=tile_b)
     return _split_qr_complex(_decode_complex(unit, Pout), m, n, compute_q)
 
 
 def qr_cordic_complex_wavefront(A, unit: GivensUnit, compute_q=True,
-                                stages=None, interpret=None):
+                                stages=None, interpret=None, tile_b=None,
+                                table_layout=None):
     """Wavefront kernel-resident complex QRD (one scan step per stage).
 
     The stage-parallel counterpart of `qr_cordic_complex_pallas`: every
@@ -365,7 +371,8 @@ def qr_cordic_complex_wavefront(A, unit: GivensUnit, compute_q=True,
     m, n = A.shape[-2], A.shape[-1]
     P = _encode_complex(unit, _augment_complex(A, compute_q))
     Pout = _kops.qr_packed_complex_wavefront(
-        P, cfg=unit.cfg, stages=_as_stages(m, n, stages), interpret=interpret)
+        P, cfg=unit.cfg, stages=_as_stages(m, n, stages), interpret=interpret,
+        tile_b=tile_b, table_layout=table_layout)
     return _split_qr_complex(_decode_complex(unit, Pout), m, n, compute_q)
 
 
@@ -377,7 +384,7 @@ def _as_stages(m, n, stages):
 
 
 def qr_cordic_wavefront(A, unit: GivensUnit, compute_q=True, stages=None,
-                        interpret=None):
+                        interpret=None, tile_b=None, table_layout=None):
     """Wavefront kernel-resident QRD: one scan step per Sameh–Kuck stage.
 
     The stage-parallel counterpart of `qr_cordic_pallas` (DESIGN.md §8):
@@ -410,13 +417,15 @@ def qr_cordic_wavefront(A, unit: GivensUnit, compute_q=True, stages=None,
     P = unit.encode(_augment(A, compute_q))
     Pout = _kops.qr_packed_wavefront(P, cfg=unit.cfg,
                                      stages=_as_stages(m, n, stages),
-                                     interpret=interpret)
+                                     interpret=interpret, tile_b=tile_b,
+                                     table_layout=table_layout)
     out = unit.decode(Pout)
     return _split_qr(out, m, n, compute_q)
 
 
 def qr_blockfp_wavefront(A, compute_q=True, iters=24, hub=True, frac=24,
-                         stages=None, interpret=None):
+                         stages=None, interpret=None, tile_b=None,
+                         table_layout=None):
     """Wavefront blocked QRD on the int32 block-FP kernel (fastest path).
 
     `qr_blockfp_pallas` with the step-serial schedule replaced by the
@@ -442,7 +451,7 @@ def qr_blockfp_wavefront(A, compute_q=True, iters=24, hub=True, frac=24,
     work = _augment(A, compute_q)
     out = _kops.givens_block_apply_wavefront(
         work, _as_stages(m, n, stages), iters=iters, hub=hub, frac=frac,
-        interpret=interpret)
+        interpret=interpret, tile_b=tile_b, table_layout=table_layout)
     return _split_qr(out, m, n, compute_q)
 
 

@@ -35,10 +35,31 @@ from repro.core.cordic import GAIN_TABLE
 
 __all__ = ["vectoring_call", "rotation_call", "fused_call",
            "fused_rotate_block", "fused_rotate_pairs", "comp_q30",
-           "TILE_B", "TILE_L"]
+           "packed_to_lanes", "lanes_to_packed", "TILE_B", "TILE_L"]
 
 TILE_B = 8     # sublane tile (int32 native tile is (8, 128))
 TILE_L = 128   # lane tile
+
+
+def packed_to_lanes(p):
+    """Packed int64 FP words -> stacked (hi, lo) int32 lane words (..., 2).
+
+    The hi/lo split that makes the packed-word kernels compilable: Mosaic
+    and Triton reject 64-bit integer lanes, so the compiled datapath
+    (`repro.kernels.packed_lanes`) carries each word as two int32 lanes
+    — ``[..., 0] = int32(p >> 32)``, ``[..., 1] = int32(p)``.  Exact
+    (two's complement) and inverted by `lanes_to_packed`.
+    """
+    p = jnp.asarray(p, jnp.int64)
+    return jnp.stack([(p >> 32).astype(jnp.int32), p.astype(jnp.int32)],
+                     axis=-1)
+
+
+def lanes_to_packed(L):
+    """Stacked (hi, lo) int32 lane words (..., 2) -> packed int64 FP words."""
+    hi = L[..., 0].astype(jnp.int64)
+    lo = L[..., 1].astype(jnp.int64) & 0xFFFFFFFF
+    return (hi << 32) | lo
 
 
 def comp_q30(iters: int) -> int:

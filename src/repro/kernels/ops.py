@@ -6,7 +6,14 @@ row-pair, rotation of all remaining elements with the broadcast sigma words.
 Padding to the (8, 128) int32 tile is handled here; callers pass any (B, L).
 
 On CPU (this container) the kernels run in interpret mode; on TPU they
-compile to Mosaic.  `interpret=None` auto-selects.
+compile to Mosaic.  `interpret=None` auto-selects (`auto_interpret`).
+When the packed-word QR wrappers target a compiled backend they
+automatically reroute onto the dual-int32 lane kernels
+(`qrd_blocked.qr_packed_lanes_call`) — Mosaic/Triton reject int64 lanes;
+the split is bit-exact (`lanes=None`/`True`/`False` overrides).
+
+``tile_b=None`` resolves to the fixed `TILE_B` here; shape-tuned values
+come from `repro.kernels.autotune` via `repro.qrd.engine` (DESIGN.md §11).
 """
 from __future__ import annotations
 
@@ -23,7 +30,7 @@ __all__ = ["vectoring_fixed", "rotation_fixed", "givens_rotate_rows_fixed",
            "givens_rotate_rows_fused", "qr_packed", "qr_packed_wavefront",
            "qr_packed_complex", "qr_packed_complex_wavefront",
            "givens_block_apply", "givens_block_apply_wavefront",
-           "rls_block_steps"]
+           "rls_block_steps", "auto_interpret", "compiled_backend_available"]
 
 
 @functools.lru_cache(maxsize=None)
@@ -43,10 +50,33 @@ def rls_block_steps(n: int, block: int):
     return tuple((k, n + j, k) for k in range(n) for j in range(block))
 
 
-def _auto_interpret(interpret):
+def compiled_backend_available() -> bool:
+    """True when a Pallas compiler (Mosaic/Triton) backs the default device.
+
+    The device-detection guard of DESIGN.md §11: CPU has no Pallas
+    compiler, so CI on this container stays on the interpret path while
+    TPU/GPU hosts run the same code with ``interpret=False``.
+    """
+    return jax.default_backend() in ("tpu", "gpu")
+
+
+def auto_interpret(interpret=None) -> bool:
+    """Resolve ``interpret=None`` to the device default (interpret on CPU)."""
     if interpret is None:
-        return jax.default_backend() == "cpu"
+        return not compiled_backend_available()
     return interpret
+
+
+_auto_interpret = auto_interpret
+
+
+def _resolve_tile_b(tile_b):
+    """``tile_b=None`` -> the fixed default; tuned values come from callers."""
+    return qb.TILE_B if tile_b is None else tile_b
+
+
+def _resolve_layout(table_layout):
+    return "split" if table_layout is None else table_layout
 
 
 def _pad_to(x, mult, axis):
@@ -150,8 +180,9 @@ def givens_rotate_rows_fused(x_rows, y_rows, *, iters=24, hub=False,
 # Blocked QR wrappers (kernel-resident triangularization, DESIGN.md §5)
 # ---------------------------------------------------------------------------
 @functools.partial(jax.jit,
-                   static_argnames=("cfg", "steps", "interpret", "tile_b"))
-def qr_packed(P, *, cfg, steps, interpret=None, tile_b=qb.TILE_B):
+                   static_argnames=("cfg", "steps", "interpret", "tile_b",
+                                    "lanes"))
+def qr_packed(P, *, cfg, steps, interpret=None, tile_b=None, lanes=None):
     """Kernel-resident blocked QR over packed FP words (bit-exact path).
 
     Parameters
@@ -163,6 +194,11 @@ def qr_packed(P, *, cfg, steps, interpret=None, tile_b=qb.TILE_B):
         Static unit configuration — hashable, used as a jit static.
     steps : tuple[(int, int, int), ...]
         Static `(pivot_row, target_row, col)` rotation schedule.
+    lanes : bool, optional
+        Carry the words as dual int32 lanes (`qr_packed_lanes_call`)
+        instead of int64 — required for compiled execution, bit-identical
+        by construction.  ``None`` auto-selects: lanes whenever the kernel
+        compiles (``interpret=False``).
 
     Returns
     -------
@@ -170,19 +206,24 @@ def qr_packed(P, *, cfg, steps, interpret=None, tile_b=qb.TILE_B):
     running `GivensUnit.rotate_rows` step by step (`qr_cordic`).
     """
     interpret = _auto_interpret(interpret)
+    lanes = (not interpret) if lanes is None else lanes
+    tile_b = _resolve_tile_b(tile_b)
     batch = P.shape[:-2]
     m, e = P.shape[-2:]
     Pf = P.astype(jnp.int64).reshape((-1,) + (m, e))
-    B = Pf.shape[0]
-    Pp = _pad_to(Pf, tile_b, 0)
-    out = qb.qr_packed_call(Pp, cfg=cfg, steps=steps, interpret=interpret,
-                            tile_b=tile_b)
-    return out[:B].reshape(batch + (m, e))
+    if lanes:
+        out = k.lanes_to_packed(qb.qr_packed_lanes_call(
+            k.packed_to_lanes(Pf), cfg=cfg, steps=steps,
+            interpret=interpret, tile_b=tile_b))
+    else:
+        out = qb.qr_packed_call(Pf, cfg=cfg, steps=steps,
+                                interpret=interpret, tile_b=tile_b)
+    return out.reshape(batch + (m, e))
 
 
 @functools.partial(jax.jit,
                    static_argnames=("cfg", "steps", "interpret", "tile_b"))
-def qr_packed_complex(P, *, cfg, steps, interpret=None, tile_b=qb.TILE_B):
+def qr_packed_complex(P, *, cfg, steps, interpret=None, tile_b=None):
     """Kernel-resident blocked complex QR over packed (re, im) lane pairs.
 
     The complex counterpart of `qr_packed` (DESIGN.md §10): the operand
@@ -207,20 +248,20 @@ def qr_packed_complex(P, *, cfg, steps, interpret=None, tile_b=qb.TILE_B):
     (`qr_cordic_complex`).
     """
     interpret = _auto_interpret(interpret)
+    tile_b = _resolve_tile_b(tile_b)
     batch = P.shape[:-3]
     m, e, _ = P.shape[-3:]
     Pf = P.astype(jnp.int64).reshape((-1,) + (m, e, 2))
-    B = Pf.shape[0]
-    Pp = _pad_to(Pf, tile_b, 0)
-    out = qb.qr_packed_complex_call(Pp, cfg=cfg, steps=steps,
+    out = qb.qr_packed_complex_call(Pf, cfg=cfg, steps=steps,
                                     interpret=interpret, tile_b=tile_b)
-    return out[:B].reshape(batch + (m, e, 2))
+    return out.reshape(batch + (m, e, 2))
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("cfg", "stages", "interpret", "tile_b"))
+                   static_argnames=("cfg", "stages", "interpret", "tile_b",
+                                    "table_layout"))
 def qr_packed_complex_wavefront(P, *, cfg, stages, interpret=None,
-                                tile_b=qb.TILE_B):
+                                tile_b=None, table_layout=None):
     """Wavefront blocked complex QR over packed (re, im) lane pairs.
 
     The stage-parallel counterpart of `qr_packed_complex`: the Sameh–Kuck
@@ -243,16 +284,17 @@ def qr_packed_complex_wavefront(P, *, cfg, stages, interpret=None,
     (..., m, e, 2) int64 — triangularized packed words.
     """
     interpret = _auto_interpret(interpret)
+    tile_b = _resolve_tile_b(tile_b)
+    table_layout = _resolve_layout(table_layout)
     batch = P.shape[:-3]
     m, e, _ = P.shape[-3:]
     piv, tgt, col = _stage_tables(stages, m)
     Pf = P.astype(jnp.int64).reshape((-1,) + (m, e, 2))
-    B = Pf.shape[0]
-    Pp = _pad_to(Pf, tile_b, 0)
-    out = qb.qr_packed_complex_wavefront_call(Pp, piv, tgt, col, cfg=cfg,
+    out = qb.qr_packed_complex_wavefront_call(Pf, piv, tgt, col, cfg=cfg,
                                               interpret=interpret,
-                                              tile_b=tile_b)
-    return out[:B].reshape(batch + (m, e, 2))
+                                              tile_b=tile_b,
+                                              table_layout=table_layout)
+    return out.reshape(batch + (m, e, 2))
 
 
 @functools.lru_cache(maxsize=None)
@@ -291,8 +333,10 @@ def _stage_tables(stages, m):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("cfg", "stages", "interpret", "tile_b"))
-def qr_packed_wavefront(P, *, cfg, stages, interpret=None, tile_b=qb.TILE_B):
+                   static_argnames=("cfg", "stages", "interpret", "tile_b",
+                                    "lanes", "table_layout"))
+def qr_packed_wavefront(P, *, cfg, stages, interpret=None, tile_b=None,
+                        lanes=None, table_layout=None):
     """Wavefront blocked QR over packed FP words (bit-exact path).
 
     The stage-parallel counterpart of `qr_packed`: all rotations of each
@@ -310,21 +354,32 @@ def qr_packed_wavefront(P, *, cfg, stages, interpret=None, tile_b=qb.TILE_B):
     stages : tuple[tuple[(pivot, target, col), ...], ...]
         Static stage schedule (`sameh_kuck_schedule(m, n)`); every inner
         tuple's row pairs must be disjoint.
+    lanes : bool, optional
+        Dual-int32 lane datapath, as in `qr_packed` (None auto-selects).
+    table_layout : 'split' | 'stacked', optional
+        Stage-table transfer layout (autotuner dimension; None = 'split').
 
     Returns
     -------
     (..., m, e) int64 — triangularized packed words.
     """
     interpret = _auto_interpret(interpret)
+    lanes = (not interpret) if lanes is None else lanes
+    tile_b = _resolve_tile_b(tile_b)
+    table_layout = _resolve_layout(table_layout)
     batch = P.shape[:-2]
     m, e = P.shape[-2:]
     piv, tgt, col = _stage_tables(stages, m)
     Pf = P.astype(jnp.int64).reshape((-1,) + (m, e))
-    B = Pf.shape[0]
-    Pp = _pad_to(Pf, tile_b, 0)
-    out = qb.qr_packed_wavefront_call(Pp, piv, tgt, col, cfg=cfg,
-                                      interpret=interpret, tile_b=tile_b)
-    return out[:B].reshape(batch + (m, e))
+    if lanes:
+        out = k.lanes_to_packed(qb.qr_packed_lanes_wavefront_call(
+            k.packed_to_lanes(Pf), piv, tgt, col, cfg=cfg,
+            interpret=interpret, tile_b=tile_b, table_layout=table_layout))
+    else:
+        out = qb.qr_packed_wavefront_call(Pf, piv, tgt, col, cfg=cfg,
+                                          interpret=interpret, tile_b=tile_b,
+                                          table_layout=table_layout)
+    return out.reshape(batch + (m, e))
 
 
 def _blockfp_encode(Wf, frac):
@@ -351,7 +406,7 @@ def _blockfp_decode(X, ex, frac):
 @functools.partial(jax.jit, static_argnames=("steps", "iters", "hub", "frac",
                                              "interpret", "tile_b"))
 def givens_block_apply(W, steps, *, iters=24, hub=True, frac=24,
-                       interpret=None, tile_b=qb.TILE_B):
+                       interpret=None, tile_b=None):
     """Apply a Givens schedule to float matrices on the int32 blocked kernel.
 
     The fast (TPU-shaped) path: ``W`` is quantized **once** to int32
@@ -379,21 +434,22 @@ def givens_block_apply(W, steps, *, iters=24, hub=True, frac=24,
     (..., m, e) float64 — the rotated working matrices.
     """
     interpret = _auto_interpret(interpret)
+    tile_b = _resolve_tile_b(tile_b)
     W = jnp.asarray(W, jnp.float64)
     batch = W.shape[:-2]
     m, e = W.shape[-2:]
     X, ex = _blockfp_encode(W.reshape((-1, m, e)), frac)
-    B = X.shape[0]
-    Xp = _pad_to(X, tile_b, 0)
-    out = qb.qr_blockfp_call(Xp, iters=iters, hub=hub, steps=steps,
+    out = qb.qr_blockfp_call(X, iters=iters, hub=hub, steps=steps,
                              interpret=interpret, tile_b=tile_b)
-    return _blockfp_decode(out[:B], ex, frac).reshape(batch + (m, e))
+    return _blockfp_decode(out, ex, frac).reshape(batch + (m, e))
 
 
 @functools.partial(jax.jit, static_argnames=("stages", "iters", "hub", "frac",
-                                             "interpret", "tile_b"))
+                                             "interpret", "tile_b",
+                                             "table_layout"))
 def givens_block_apply_wavefront(W, stages, *, iters=24, hub=True, frac=24,
-                                 interpret=None, tile_b=qb.TILE_B):
+                                 interpret=None, tile_b=None,
+                                 table_layout=None):
     """Wavefront variant of `givens_block_apply` (the stage-parallel path).
 
     Identical quantize-once / decode-once block-FP dataflow, but the step
@@ -410,20 +466,23 @@ def givens_block_apply_wavefront(W, stages, *, iters=24, hub=True, frac=24,
         Static stage schedule; every inner tuple's row pairs must be
         disjoint (`sameh_kuck_schedule`).
     iters, hub, frac : as `givens_block_apply`.
+    table_layout : 'split' | 'stacked', optional
+        Stage-table transfer layout (autotuner dimension; None = 'split').
 
     Returns
     -------
     (..., m, e) float64 — the rotated working matrices.
     """
     interpret = _auto_interpret(interpret)
+    tile_b = _resolve_tile_b(tile_b)
+    table_layout = _resolve_layout(table_layout)
     W = jnp.asarray(W, jnp.float64)
     batch = W.shape[:-2]
     m, e = W.shape[-2:]
     piv, tgt, col = _stage_tables(stages, m)
     X, ex = _blockfp_encode(W.reshape((-1, m, e)), frac)
-    B = X.shape[0]
-    Xp = _pad_to(X, tile_b, 0)
-    out = qb.qr_blockfp_wavefront_call(Xp, piv, tgt, col, iters=iters,
+    out = qb.qr_blockfp_wavefront_call(X, piv, tgt, col, iters=iters,
                                        hub=hub, interpret=interpret,
-                                       tile_b=tile_b)
-    return _blockfp_decode(out[:B], ex, frac).reshape(batch + (m, e))
+                                       tile_b=tile_b,
+                                       table_layout=table_layout)
+    return _blockfp_decode(out, ex, frac).reshape(batch + (m, e))

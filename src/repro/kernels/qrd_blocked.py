@@ -10,19 +10,27 @@ TPU: the whole (batched) m×e working tile is staged into VMEM once, every
 schedule step runs on the resident tile, and the result is written back
 once.
 
-Two datapaths, one schedule machinery:
+Three datapaths, one schedule machinery:
 
-`qr_packed_call` — bit-exact packed-word datapath
+`qr_packed_call` — bit-exact packed-word datapath (int64 lanes)
     The tile holds *packed FP words* (int64, see `repro.core.formats`).
     Each schedule step performs the unit's full per-step dataflow in
     registers — input-convert (block-FP align), CORDIC vectoring on the
     leading pair, sigma-replay rotation across the rows, gain compensation,
     output-convert — by calling the same `GivensUnit` arithmetic as the
     reference loop.  (Q, R) are therefore **bit-identical** to `qr_cordic`
-    for any `GivensConfig` (IEEE and HUB).  int64 lanes: runs in interpret
-    mode (CPU) today; it is the semantic reference for the fast datapath.
+    for any `GivensConfig` (IEEE and HUB).  int64 lanes: interpret mode
+    only; it is the semantic reference for the two fast datapaths.
 
-`qr_blockfp_call` — int32 block-fixed-point datapath (the TPU path)
+`qr_packed_lanes_call` — bit-exact packed-word datapath (dual int32 lanes)
+    The same packed words carried as (hi, lo) int32 lane pairs on a
+    trailing axis of size 2 (`cordic_givens.packed_to_lanes`), rotated by
+    the emulated-64-bit `LaneUnit` (`repro.kernels.packed_lanes`) — no
+    64-bit integer types anywhere in the kernel, so this datapath lowers
+    through Mosaic/Triton (DESIGN.md §11).  Bit-identical to
+    `qr_packed_call` by construction (asserted by tests).
+
+`qr_blockfp_call` — int32 block-fixed-point datapath (the TPU fast path)
     The tile holds int32 significands quantized once, outside the kernel,
     with one shared exponent per (matrix, column) — Givens rotations only
     ever combine same-column elements of two rows, so per-column block-FP
@@ -30,31 +38,43 @@ Two datapaths, one schedule machinery:
     across *all* rotation steps: no per-step FP round-trips at all, a
     single FP decode after the kernel returns.  Arithmetic is the fused
     int32 pipeline of `cordic_givens` (w ≤ 30 bits, Q30 gain compensation),
-    so every intermediate fits the VPU's native int32 lanes.
+    so every intermediate fits the VPU's native int32 lanes — this path
+    runs ``interpret=False`` today wherever a Pallas compiler exists.
 
 Two schedule machineries (one per sequential-depth regime):
 
-step-serial (`qr_packed_call` / `qr_blockfp_call`)
+step-serial (`qr_packed_call` / `qr_packed_lanes_call` / `qr_blockfp_call`)
     Schedules are static tuples of `(pivot_row, target_row, col)` triples
     (column-major `givens_schedule` or a flattened Sameh–Kuck pairing from
     `repro.core.qrd`), unrolled at trace time — the kernel body is a
     straight line of micro-rotation recurrences, exactly like the FPGA
     pipeline.  Depth: one dependent rotation per step.
 
-wavefront (`qr_packed_wavefront_call` / `qr_blockfp_wavefront_call`, §8)
+wavefront (`qr_*_wavefront_call`, §8)
     The Sameh–Kuck schedule enters as (S, Pmax) stage index tables
     consumed by `lax.scan`: each iteration gathers ALL row pairs of one
     stage into two (TILE_B, Pmax, e) tensors, rotates the whole pair axis
     in one shot (per-pair column masks replace the ragged `[col:]`
     slices), and scatters the rows back.  Depth: one scan iteration per
     stage — min(m+n−2, 2m−3) instead of ~m·n/2 — and the trace holds one
-    stage body instead of the unrolled schedule.
+    stage body instead of the unrolled schedule.  ``table_layout``
+    selects how the three tables travel to the kernel: ``'split'`` (three
+    (S, Pmax) operands) or ``'stacked'`` (one (3S, Pmax) operand, a
+    single block transfer) — an autotuner search dimension
+    (`repro.kernels.autotune`).
 
-VMEM budget (DESIGN.md §5, §8): one (TILE_B, m, e) tile per operand/result
-— int64 packed: 2·8·m·e·8 bytes; int32 block-FP: 2·8·m·e·4 bytes.  A
-64×128 augmented tall-skinny tile in block-FP is 8·64·192·4 ≈ 393 KiB ·2,
-well inside the ~16 MiB VMEM of a TPU core.  The wavefront path adds two
-(TILE_B, Pmax ≤ m/2, e) pair tensors per stage (≈ the tile itself) plus
+Batch handling: every ``*_call`` wrapper pads the leading batch axis up to
+a multiple of ``tile_b`` with all-zero matrices (harmless through every
+datapath — vectoring on packed/block-FP zeros is exact) and slices the
+result back, so ragged batches are first-class here, not just in `ops.py`.
+
+VMEM budget (DESIGN.md §5, §8): one (tile_b, m, e) tile per operand/result
+— int64 packed: 2·tb·m·e·8 bytes; dual-lane packed: the same bytes as
+int32 (tile_b, m, e, 2); int32 block-FP: 2·tb·m·e·4 bytes.  A 64×128
+augmented tall-skinny tile in block-FP at tile_b=8 is 8·64·192·4 ≈ 393 KiB
+·2, well inside the ~16 MiB VMEM of a TPU core; `autotune` searches
+tile_b under an explicit budget.  The wavefront path adds two
+(tile_b, Pmax ≤ m/2, e) pair tensors per stage (≈ the tile itself) plus
 < 1 KiB of stage tables.
 """
 from __future__ import annotations
@@ -68,14 +88,66 @@ from jax.experimental import pallas as pl
 from repro.core.givens import GivensConfig, GivensUnit
 from .cordic_givens import (TILE_B, comp_q30, fused_rotate_block,
                             fused_rotate_pairs)
+from .packed_lanes import LaneUnit
 
 __all__ = ["qr_packed_call", "qr_blockfp_call", "qr_packed_wavefront_call",
            "qr_blockfp_wavefront_call", "qr_packed_complex_call",
-           "qr_packed_complex_wavefront_call", "TILE_B"]
+           "qr_packed_complex_wavefront_call", "qr_packed_lanes_call",
+           "qr_packed_lanes_wavefront_call", "TILE_B", "TABLE_LAYOUTS",
+           "HBM_PASSES_PER_QRD"]
+
+TABLE_LAYOUTS = ("split", "stacked")
+
+#: The kernel-resident HBM-traffic contract every `*_call` here honors:
+#: the working tile is staged into VMEM once and written back once —
+#: two passes over the (B, m, e) working set per decomposition,
+#: independent of schedule length.  `repro.launch.perfmodel` builds the
+#: roofline's memory term from this.
+HBM_PASSES_PER_QRD = 2
+
+
+def _pad_batch(X, tile_b: int):
+    """Pad the leading batch axis to a multiple of tile_b with zeros.
+
+    Packed words, lane words and block-FP significands all encode exact
+    zero as the all-zero bit pattern, and the whole datapath is exact on
+    all-zero matrices (the wavefront gather already relies on this), so
+    zero-padding is harmless.  Returns (padded, original_B).
+    """
+    B = X.shape[0]
+    pad = (-B) % tile_b
+    if pad:
+        X = jnp.pad(X, ((0, pad),) + ((0, 0),) * (X.ndim - 1))
+    return X, B
+
+
+def _table_operands(piv, tgt, col, table_layout: str):
+    """Stage tables -> (operands, in_specs) for the chosen layout."""
+    if table_layout not in TABLE_LAYOUTS:
+        raise ValueError(f"table_layout must be one of {TABLE_LAYOUTS}, "
+                         f"got {table_layout!r}")
+    S, Pmax = piv.shape
+    if table_layout == "stacked":
+        tab = jnp.concatenate([jnp.asarray(piv), jnp.asarray(tgt),
+                               jnp.asarray(col)], axis=0)
+        return (tab,), [pl.BlockSpec((3 * S, Pmax), lambda b: (0, 0))]
+    tspec = pl.BlockSpec((S, Pmax), lambda b: (0, 0))
+    return ((jnp.asarray(piv), jnp.asarray(tgt), jnp.asarray(col)),
+            [tspec, tspec, tspec])
+
+
+def _read_tables(tab_refs, S: int, table_layout: str):
+    """Kernel-side inverse of `_table_operands` (static S slicing)."""
+    if table_layout == "stacked":
+        (t_ref,) = tab_refs
+        tab = t_ref[...]
+        return tab[:S], tab[S:2 * S], tab[2 * S:]
+    piv_ref, tgt_ref, col_ref = tab_refs
+    return piv_ref[...], tgt_ref[...], col_ref[...]
 
 
 # ---------------------------------------------------------------------------
-# Bit-exact packed-word kernel
+# Bit-exact packed-word kernel (int64 lanes, interpret-mode reference)
 # ---------------------------------------------------------------------------
 def _qr_packed_kernel(p_ref, o_ref, *, cfg: GivensConfig, steps):
     """Triangularize the resident (TB, m, e) tile of packed FP words.
@@ -95,43 +167,174 @@ def _qr_packed_kernel(p_ref, o_ref, *, cfg: GivensConfig, steps):
 
 def qr_packed_call(P, *, cfg: GivensConfig, steps, interpret: bool = True,
                    tile_b: int = TILE_B):
-    """Blocked QR over packed FP words, one grid cell per TILE_B matrices.
+    """Blocked QR over packed FP words, one grid cell per tile_b matrices.
 
     Parameters
     ----------
     P : (B, m, e) int64
         Packed FP words of the augmented working matrices ([A | I] rows for
-        a full QRD).  ``B`` must be a multiple of ``tile_b`` (`ops.py`
-        pads).
+        a full QRD).  Ragged ``B`` is padded to a multiple of ``tile_b``
+        with zero matrices and sliced back.
     cfg : GivensConfig
         Static unit configuration (format, N, iters, HUB flags).
     steps : tuple[(int, int, int), ...]
         Static rotation schedule ``(pivot_row, target_row, col)``.
     interpret : bool
-        int64 lanes + in-kernel converters: interpret mode only today.
+        int64 lanes: interpret mode only — the compiled path is
+        `qr_packed_lanes_call` on the hi/lo split of the same words.
 
     Returns
     -------
     (B, m, e) int64 — the triangularized packed working matrices.
     """
-    B, m, e = P.shape
-    assert B % tile_b == 0
-    grid = (B // tile_b,)
+    P, B = _pad_batch(P, tile_b)
+    Bp, m, e = P.shape
+    grid = (Bp // tile_b,)
     spec = pl.BlockSpec((tile_b, m, e), lambda b: (b, 0, 0))
     kernel = functools.partial(_qr_packed_kernel, cfg=cfg, steps=tuple(steps))
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel, grid=grid,
         in_specs=[spec],
         out_specs=spec,
-        out_shape=jax.ShapeDtypeStruct((B, m, e), jnp.int64),
+        out_shape=jax.ShapeDtypeStruct((Bp, m, e), jnp.int64),
         interpret=interpret,
     )(P)
+    return out[:B]
+
+
+# ---------------------------------------------------------------------------
+# Bit-exact packed-word kernels on dual int32 lanes (the compilable path)
+# ---------------------------------------------------------------------------
+def _qr_packed_lanes_kernel(p_ref, o_ref, *, cfg: GivensConfig, steps):
+    """`_qr_packed_kernel` on the (TB, m, e, 2) hi/lo lane tile.
+
+    The `LaneUnit` emulates the unit's int64 arithmetic over (hi, lo)
+    int32 pairs (`repro.kernels.packed_lanes`), so this body contains no
+    64-bit types and lowers through Mosaic/Triton.  Bit-identical to the
+    int64 kernel on `lanes_to_packed` of the result.
+    """
+    unit = LaneUnit(cfg)
+    P = p_ref[...]                       # (TB, m, e, 2) int32 lane words
+    for (k, j, col) in steps:
+        rx, ry = unit.rotate_rows(P[:, k, col:, :], P[:, j, col:, :])
+        ry = ry.at[:, 0, :].set(0)       # structural zero (both lanes)
+        P = P.at[:, k, col:, :].set(rx)
+        P = P.at[:, j, col:, :].set(ry)
+    o_ref[...] = P
+
+
+def qr_packed_lanes_call(P, *, cfg: GivensConfig, steps,
+                         interpret: bool = False, tile_b: int = TILE_B):
+    """Blocked QR over dual-int32 packed lane words (compilable bit-exact).
+
+    Parameters as `qr_packed_call` with ``P : (B, m, e, 2) int32`` from
+    `cordic_givens.packed_to_lanes`; returns the rotated lane words,
+    satisfying ``lanes_to_packed(out) == qr_packed_call(packed)`` bit for
+    bit.  ``interpret`` defaults to False — this datapath exists to
+    compile; pass True on CPU (ops.py auto-selects).
+    """
+    P, B = _pad_batch(P, tile_b)
+    Bp, m, e, two = P.shape
+    assert two == 2
+    grid = (Bp // tile_b,)
+    spec = pl.BlockSpec((tile_b, m, e, 2), lambda b: (b, 0, 0, 0))
+    kernel = functools.partial(_qr_packed_lanes_kernel, cfg=cfg,
+                               steps=tuple(steps))
+    out = pl.pallas_call(
+        kernel, grid=grid,
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((Bp, m, e, 2), jnp.int32),
+        interpret=interpret,
+    )(P)
+    return out[:B]
+
+
+def _wavefront_scan_lanes(P, tables, stage_fn):
+    """`_wavefront_scan` for tiles with a trailing lane axis (TB, m, e, 2).
+
+    The element-axis masks gain a trailing singleton so they broadcast
+    across the (hi, lo) lanes; the structural zero forces both lanes (the
+    packed zero word is the all-zero bit pattern).
+    """
+    TB, m, e, _ = P.shape
+
+    def body(P, tab):
+        piv, tgt, col = tab
+        X = jnp.take(P, piv, axis=1, mode="fill", fill_value=0)
+        Y = jnp.take(P, tgt, axis=1, mode="fill", fill_value=0)
+        colid = jax.lax.broadcasted_iota(jnp.int32, (col.shape[0], e), 1)
+        lead = colid == col[:, None]                      # (P, e)
+        active = (colid >= col[:, None])[None, ..., None]
+        rx, ry = stage_fn(X, Y, lead)
+        rx = jnp.where(active, rx, X)                # untouched left lanes
+        ry = jnp.where(active, ry, Y)
+        ry = jnp.where(lead[None, ..., None], 0, ry)      # structural zero
+        P = P.at[:, piv, :, :].set(rx, mode="drop")
+        P = P.at[:, tgt, :, :].set(ry, mode="drop")
+        return P, None
+
+    P, _ = jax.lax.scan(body, P, tables)
+    return P
+
+
+def _qr_packed_lanes_wavefront_kernel(*refs, cfg: GivensConfig, S: int,
+                                      table_layout: str):
+    """Wavefront triangularization of the resident (TB, m, e, 2) lane tile.
+
+    The lane-pair mirror of `_qr_packed_wavefront_kernel`: same stage
+    machinery, `LaneUnit` arithmetic, one-hot lead contraction over the
+    element axis per lane (exact — the contraction just selects words).
+    """
+    *tab_refs, p_ref, o_ref = refs
+    unit = LaneUnit(cfg)
+
+    def stage(X, Y, lead):
+        sel = lead[None, ..., None].astype(X.dtype)       # (1, P, e, 1)
+        xl = jnp.sum(X * sel, axis=-2, dtype=X.dtype)     # (TB, P, 2)
+        yl = jnp.sum(Y * sel, axis=-2, dtype=Y.dtype)
+        _, _, (flip, sig) = unit.vector(xl, yl)
+        return unit.rotate(X, Y, (flip[..., None], sig[..., None, :]))
+
+    tables = _read_tables(tab_refs, S, table_layout)
+    o_ref[...] = _wavefront_scan_lanes(p_ref[...], tables, stage)
+
+
+def qr_packed_lanes_wavefront_call(P, piv, tgt, col, *, cfg: GivensConfig,
+                                   interpret: bool = False,
+                                   tile_b: int = TILE_B,
+                                   table_layout: str = "split"):
+    """Wavefront blocked QR over dual-int32 packed lane words.
+
+    Parameters as `qr_packed_wavefront_call` with the (B, m, e, 2) lane
+    operand of `qr_packed_lanes_call`; bit-identical to it on the
+    flattened stage schedule.
+    """
+    P, B = _pad_batch(P, tile_b)
+    Bp, m, e, two = P.shape
+    assert two == 2
+    S, Pmax = piv.shape
+    grid = (Bp // tile_b,)
+    spec = pl.BlockSpec((tile_b, m, e, 2), lambda b: (b, 0, 0, 0))
+    tab_ops, tab_specs = _table_operands(piv, tgt, col, table_layout)
+    kernel = functools.partial(_qr_packed_lanes_wavefront_kernel, cfg=cfg,
+                               S=S, table_layout=table_layout)
+    out = pl.pallas_call(
+        kernel, grid=grid,
+        in_specs=[*tab_specs, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((Bp, m, e, 2), jnp.int32),
+        interpret=interpret,
+    )(*tab_ops, P)
+    return out[:B]
 
 
 # ---------------------------------------------------------------------------
 # Complex packed-word kernels: three-rotation Givens on (re, im) lane pairs
 # (DESIGN.md §10).  The resident tile gains a trailing axis of size 2; the
 # schedule machinery (static step unroll / stage-table scan) is unchanged.
+# int64 lanes (interpret mode) — the dual-lane split covers the real
+# datapath only today (DESIGN.md §11).
 # ---------------------------------------------------------------------------
 def _qr_packed_complex_kernel(p_ref, o_ref, *, cfg: GivensConfig, steps):
     """Triangularize the resident (TB, m, e, 2) tile of packed re/im lanes.
@@ -157,8 +360,8 @@ def qr_packed_complex_call(P, *, cfg: GivensConfig, steps,
     ----------
     P : (B, m, e, 2) int64
         Packed FP words of the augmented complex working matrices; the
-        trailing axis holds the (re, im) lanes.  ``B`` must be a multiple
-        of ``tile_b`` (`ops.py` pads).
+        trailing axis holds the (re, im) lanes.  Ragged ``B`` is padded
+        to a multiple of ``tile_b`` and sliced back.
     cfg, steps, interpret : as `qr_packed_call`.
 
     Returns
@@ -166,19 +369,21 @@ def qr_packed_complex_call(P, *, cfg: GivensConfig, steps,
     (B, m, e, 2) int64 — triangularized packed words, bit-identical to
     the `qr_cordic_complex` reference loop.
     """
-    B, m, e, two = P.shape
-    assert B % tile_b == 0 and two == 2
-    grid = (B // tile_b,)
+    P, B = _pad_batch(P, tile_b)
+    Bp, m, e, two = P.shape
+    assert two == 2
+    grid = (Bp // tile_b,)
     spec = pl.BlockSpec((tile_b, m, e, 2), lambda b: (b, 0, 0, 0))
     kernel = functools.partial(_qr_packed_complex_kernel, cfg=cfg,
                                steps=tuple(steps))
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel, grid=grid,
         in_specs=[spec],
         out_specs=spec,
-        out_shape=jax.ShapeDtypeStruct((B, m, e, 2), jnp.int64),
+        out_shape=jax.ShapeDtypeStruct((Bp, m, e, 2), jnp.int64),
         interpret=interpret,
     )(P)
+    return out[:B]
 
 
 def _wavefront_scan_complex(P, tables, stage_fn):
@@ -213,8 +418,8 @@ def _wavefront_scan_complex(P, tables, stage_fn):
     return P
 
 
-def _qr_packed_complex_wavefront_kernel(piv_ref, tgt_ref, col_ref, p_ref,
-                                        o_ref, *, cfg: GivensConfig):
+def _qr_packed_complex_wavefront_kernel(*refs, cfg: GivensConfig, S: int,
+                                        table_layout: str):
     """Wavefront complex triangularization of the resident (TB, m, e, 2) tile.
 
     One scan step per Sameh–Kuck stage: every pair of the stage runs the
@@ -227,6 +432,7 @@ def _qr_packed_complex_wavefront_kernel(piv_ref, tgt_ref, col_ref, p_ref,
     Bit-identical to `_qr_packed_complex_kernel` on the flattened stage
     schedule.
     """
+    *tab_refs, p_ref, o_ref = refs
     unit = GivensUnit(cfg)
 
     def stage(X, Y, lead):
@@ -252,13 +458,14 @@ def _qr_packed_complex_wavefront_kernel(piv_ref, tgt_ref, col_ref, p_ref,
         return (jnp.stack([rxr, rxi], axis=-1),
                 jnp.stack([ryr, ryi], axis=-1))
 
-    tables = (piv_ref[...], tgt_ref[...], col_ref[...])
+    tables = _read_tables(tab_refs, S, table_layout)
     o_ref[...] = _wavefront_scan_complex(p_ref[...], tables, stage)
 
 
 def qr_packed_complex_wavefront_call(P, piv, tgt, col, *, cfg: GivensConfig,
                                      interpret: bool = True,
-                                     tile_b: int = TILE_B):
+                                     tile_b: int = TILE_B,
+                                     table_layout: str = "split"):
     """Wavefront blocked complex QR over packed (re, im) lane pairs.
 
     Parameters as `qr_packed_wavefront_call` with the (B, m, e, 2)
@@ -269,20 +476,23 @@ def qr_packed_complex_wavefront_call(P, piv, tgt, col, *, cfg: GivensConfig,
     (B, m, e, 2) int64 — triangularized packed words, bit-identical to
     `qr_packed_complex_call` on the flattened stage schedule.
     """
-    B, m, e, two = P.shape
-    assert B % tile_b == 0 and two == 2
+    P, B = _pad_batch(P, tile_b)
+    Bp, m, e, two = P.shape
+    assert two == 2
     S, Pmax = piv.shape
-    grid = (B // tile_b,)
+    grid = (Bp // tile_b,)
     spec = pl.BlockSpec((tile_b, m, e, 2), lambda b: (b, 0, 0, 0))
-    tspec = pl.BlockSpec((S, Pmax), lambda b: (0, 0))
-    kernel = functools.partial(_qr_packed_complex_wavefront_kernel, cfg=cfg)
-    return pl.pallas_call(
+    tab_ops, tab_specs = _table_operands(piv, tgt, col, table_layout)
+    kernel = functools.partial(_qr_packed_complex_wavefront_kernel, cfg=cfg,
+                               S=S, table_layout=table_layout)
+    out = pl.pallas_call(
         kernel, grid=grid,
-        in_specs=[tspec, tspec, tspec, spec],
+        in_specs=[*tab_specs, spec],
         out_specs=spec,
-        out_shape=jax.ShapeDtypeStruct((B, m, e, 2), jnp.int64),
+        out_shape=jax.ShapeDtypeStruct((Bp, m, e, 2), jnp.int64),
         interpret=interpret,
-    )(piv, tgt, col, P)
+    )(*tab_ops, P)
+    return out[:B]
 
 
 # ---------------------------------------------------------------------------
@@ -344,8 +554,8 @@ def _wavefront_scan(P, tables, stage_fn):
     return P
 
 
-def _qr_packed_wavefront_kernel(piv_ref, tgt_ref, col_ref, p_ref, o_ref,
-                                *, cfg: GivensConfig):
+def _qr_packed_wavefront_kernel(*refs, cfg: GivensConfig, S: int,
+                                table_layout: str):
     """Wavefront triangularization of the resident packed (TB, m, e) tile.
 
     Same `GivensUnit` arithmetic as `_qr_packed_kernel`, but one scan step
@@ -355,6 +565,7 @@ def _qr_packed_wavefront_kernel(piv_ref, tgt_ref, col_ref, p_ref, o_ref,
     disjoint rows, so the result is bit-identical to replaying the
     flattened schedule pair by pair.
     """
+    *tab_refs, p_ref, o_ref = refs
     unit = GivensUnit(cfg)
 
     def stage(X, Y, lead):
@@ -366,56 +577,63 @@ def _qr_packed_wavefront_kernel(piv_ref, tgt_ref, col_ref, p_ref, o_ref,
         # output bit for bit, so the whole row rotates at uniform width.
         return unit.rotate(X, Y, (flip[..., None], sig[..., None]))
 
-    tables = (piv_ref[...], tgt_ref[...], col_ref[...])
+    tables = _read_tables(tab_refs, S, table_layout)
     o_ref[...] = _wavefront_scan(p_ref[...], tables, stage)
 
 
 def qr_packed_wavefront_call(P, piv, tgt, col, *, cfg: GivensConfig,
-                             interpret: bool = True, tile_b: int = TILE_B):
+                             interpret: bool = True, tile_b: int = TILE_B,
+                             table_layout: str = "split"):
     """Wavefront blocked QR over packed FP words (bit-exact path).
 
     Parameters
     ----------
     P : (B, m, e) int64
-        Packed FP words of the augmented working matrices; ``B`` must be a
-        multiple of ``tile_b`` (`ops.py` pads).
+        Packed FP words of the augmented working matrices; ragged ``B``
+        is padded to a multiple of ``tile_b`` and sliced back.
     piv, tgt, col : (S, Pmax) int32
         Stage index tables — one row per Sameh–Kuck stage, padded with
         ``piv = tgt = m`` / ``col = 0`` (see `ops._stage_tables`).
     cfg : GivensConfig
         Static unit configuration.
+    table_layout : 'split' | 'stacked'
+        How the stage tables travel to the kernel (autotuner dimension).
 
     Returns
     -------
     (B, m, e) int64 — triangularized packed words, bit-identical to
     `qr_packed_call` on the flattened stage schedule.
     """
-    B, m, e = P.shape
-    assert B % tile_b == 0
+    P, B = _pad_batch(P, tile_b)
+    Bp, m, e = P.shape
     S, Pmax = piv.shape
-    grid = (B // tile_b,)
+    grid = (Bp // tile_b,)
     spec = pl.BlockSpec((tile_b, m, e), lambda b: (b, 0, 0))
-    tspec = pl.BlockSpec((S, Pmax), lambda b: (0, 0))
-    kernel = functools.partial(_qr_packed_wavefront_kernel, cfg=cfg)
-    return pl.pallas_call(
+    tab_ops, tab_specs = _table_operands(piv, tgt, col, table_layout)
+    kernel = functools.partial(_qr_packed_wavefront_kernel, cfg=cfg,
+                               S=S, table_layout=table_layout)
+    out = pl.pallas_call(
         kernel, grid=grid,
-        in_specs=[tspec, tspec, tspec, spec],
+        in_specs=[*tab_specs, spec],
         out_specs=spec,
-        out_shape=jax.ShapeDtypeStruct((B, m, e), jnp.int64),
+        out_shape=jax.ShapeDtypeStruct((Bp, m, e), jnp.int64),
         interpret=interpret,
-    )(piv, tgt, col, P)
+    )(*tab_ops, P)
+    return out[:B]
 
 
-def _qr_blockfp_wavefront_kernel(piv_ref, tgt_ref, col_ref, x_ref, o_ref,
-                                 *, iters: int, hub: bool, comp: int):
+def _qr_blockfp_wavefront_kernel(*refs, iters: int, hub: bool, comp: int,
+                                 S: int, table_layout: str):
+    *tab_refs, x_ref, o_ref = refs
     stage = functools.partial(fused_rotate_pairs, iters=iters, hub=hub,
                               comp=comp)
-    tables = (piv_ref[...], tgt_ref[...], col_ref[...])
+    tables = _read_tables(tab_refs, S, table_layout)
     o_ref[...] = _wavefront_scan(x_ref[...], tables, stage)
 
 
 def qr_blockfp_wavefront_call(X, piv, tgt, col, *, iters: int, hub: bool,
-                              interpret: bool = True, tile_b: int = TILE_B):
+                              interpret: bool = True, tile_b: int = TILE_B,
+                              table_layout: str = "split"):
     """Wavefront blocked QR over int32 block-FP significands.
 
     Parameters as `qr_blockfp_call`, with the static step schedule replaced
@@ -424,21 +642,24 @@ def qr_blockfp_wavefront_call(X, piv, tgt, col, *, iters: int, hub: bool,
     (within-stage pairs are disjoint; the pair-axis datapath replays the
     same int32 recurrence).
     """
-    B, m, e = X.shape
-    assert B % tile_b == 0 and iters <= 30
+    X, B = _pad_batch(X, tile_b)
+    Bp, m, e = X.shape
+    assert iters <= 30
     S, Pmax = piv.shape
-    grid = (B // tile_b,)
+    grid = (Bp // tile_b,)
     spec = pl.BlockSpec((tile_b, m, e), lambda b: (b, 0, 0))
-    tspec = pl.BlockSpec((S, Pmax), lambda b: (0, 0))
+    tab_ops, tab_specs = _table_operands(piv, tgt, col, table_layout)
     kernel = functools.partial(_qr_blockfp_wavefront_kernel, iters=iters,
-                               hub=hub, comp=comp_q30(iters))
-    return pl.pallas_call(
+                               hub=hub, comp=comp_q30(iters), S=S,
+                               table_layout=table_layout)
+    out = pl.pallas_call(
         kernel, grid=grid,
-        in_specs=[tspec, tspec, tspec, spec],
+        in_specs=[*tab_specs, spec],
         out_specs=spec,
-        out_shape=jax.ShapeDtypeStruct((B, m, e), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((Bp, m, e), jnp.int32),
         interpret=interpret,
-    )(piv, tgt, col, X)
+    )(*tab_ops, X)
+    return out[:B]
 
 
 def qr_blockfp_call(X, *, iters: int, hub: bool, steps,
@@ -452,7 +673,8 @@ def qr_blockfp_call(X, *, iters: int, hub: bool, steps,
         (matrix, column) — see `ops.givens_block_apply` for the
         quantization.  |X| ≤ 2^F on entry; the two CORDIC growth bits plus
         column-norm accumulation (≤ √m) must keep intermediates inside
-        int32, so F = 24 supports m up to ~64.
+        int32, so F = 24 supports m up to ~64.  Ragged ``B`` is padded to
+        a multiple of ``tile_b`` and sliced back.
     iters, hub : static CORDIC depth and HUB/conventional arithmetic.
     steps : static (pivot, target, col) schedule.
 
@@ -460,16 +682,18 @@ def qr_blockfp_call(X, *, iters: int, hub: bool, steps,
     -------
     (B, m, e) int32 — triangularized significands (same per-column scale).
     """
-    B, m, e = X.shape
-    assert B % tile_b == 0 and iters <= 30
-    grid = (B // tile_b,)
+    X, B = _pad_batch(X, tile_b)
+    Bp, m, e = X.shape
+    assert iters <= 30
+    grid = (Bp // tile_b,)
     spec = pl.BlockSpec((tile_b, m, e), lambda b: (b, 0, 0))
     kernel = functools.partial(_qr_blockfp_kernel, iters=iters, hub=hub,
                                comp=comp_q30(iters), steps=tuple(steps))
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel, grid=grid,
         in_specs=[spec],
         out_specs=spec,
-        out_shape=jax.ShapeDtypeStruct((B, m, e), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((Bp, m, e), jnp.int32),
         interpret=interpret,
     )(X)
+    return out[:B]

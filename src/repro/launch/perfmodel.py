@@ -1,188 +1,222 @@
-"""Analytic per-cell performance model (FLOPs, HBM traffic, collectives).
+"""Analytic QRD performance model: ops + HBM bytes per decomposition.
 
-Why analytic: the CPU dry-run pipeline makes two compiler artifacts
-unavoidable — (a) `cost_analysis()` does not count library-call dots, and
-(b) ops inside `while` (scan) bodies are counted once instead of
-trip-count times.  The sharding *structure* (what is gathered/reduced, by
-whom, how often) is fully determined by the dry-run's partitioning, so the
-three roofline terms are derived here from first principles and
-cross-checked against the post-SPMD HLO (per-body collective shapes match;
-see EXPERIMENTS.md §Roofline notes).
+Why analytic: the interpret-mode kernels measure Python dispatch, not
+hardware, and compiled-mode wall clocks mix achievable throughput with
+achieved.  The *work* of a blocked Givens QRD, by contrast, is exact —
+the rotation schedule, the per-rotation element counts, the CORDIC
+iteration depth and the kernels' HBM-pass contract are all architectural
+— so the two roofline terms are derived here from first principles and
+measured rates are reported as a fraction of the resulting bound
+(DESIGN.md §11).
 
-All quantities are per device per step, on a mesh with `dp` data shards and
-`tp` model shards (n_dev = dp * tp).
+Work accounting for one m x n QRD (e = n + m row elements with Q):
 
-FLOPs (forward):
-    matmul     2 * N_active * tokens / n_dev
-    attention  4 * B*S^2/2 * H*dh / n_dev  (causal)        [train/prefill]
-               4 * B*S_cache * H*dh / n_dev                [decode]
-    ssd        4 * B*S*H*hd*(chunk/2 + d_state) / n_dev
-train = fwd * (1 fwd + 2 bwd + 1 remat-replay) = 4x fwd.
+    rotations        len(givens_schedule(m, n))  — the Sameh–Kuck stages
+                     reorder but never change this set
+    elements/rot     2 * (e - col)               — both rows from `col`
+    ops/element      iters * OPS_PER_MICROROTATION + OPS_GAIN
+                     (+ OPS_CONVERT on the packed path: the converter
+                     dataflow runs per element per rotation)
+    word factor      1.0 for the int32 block-FP datapath, ~2x for the
+                     int64 packed word (64-bit ALU emulation), ~3.5x for
+                     the dual-int32 lane split (carry/shift cross terms)
 
-HBM traffic:
-    weights    2*N_total/tp read per pass (TP-resident after FSDP gather;
-               MoE reads ALL experts — capacity slots are dense)
-    optimizer  20 * N_total / n_dev (m,v f32 r+w, p r+w, grads)
-    residuals  layer-stack saved by scan+remat: L*B/dp*S*D*2 (w+r)
-               (/tp when sequence-parallel)
-    logits     3 passes * B/dp * S * V/tp * 4
-    kv/state   cache bytes read once per decode step
+HBM bytes: the kernel-resident paths stage the working tile into VMEM
+once and write it back once (``qrd_blocked.HBM_PASSES_PER_QRD`` = 2
+passes over ``m * e * itemsize``); the step-serial host loop
+('cordic' backend) round-trips every rotation — ``2 * len(steps)``
+passes.  Encode/decode round-trips of the float64 operand add two more
+8-byte passes on every path.
 
-Collectives (wire bytes, ring-model):
-    FSDP AG    passes * 2*N_total/tp * (dp-1)/dp
-    grad RS+AG 2 * 2*N_total/tp  (reduce-scatter + opt all-gather)
-    TP AR      2 * n_ar_per_layer * L * (B/dp * S * D * 2) * (tp-1)/tp
-               (n_ar = 2 fwd + 2 bwd, halved to RS+AG pairs under SP)
-    MoE A2A    2 passes * top_k * B/dp * S * D * 2  (dispatch + combine)
+`DeviceSpec` carries the peak elementwise-op rate and HBM bandwidth per
+device kind; `roofline` turns (cost, spec) into the achievable QRD/s
+bound and `roofline_fraction` scores a measured rate against it.
 """
 from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
+__all__ = ["DeviceSpec", "QRDCost", "DEVICE_SPECS", "device_spec",
+           "qrd_cost", "roofline", "roofline_fraction",
+           "OPS_PER_MICROROTATION", "OPS_GAIN", "OPS_CONVERT",
+           "WORD_FACTOR"]
 
-from repro.configs import get_config, shape_of
+#: Integer ops per element per CORDIC micro-rotation: two shifted
+#: adds/subtracts (x', y'), the direction select, and the sigma/flip
+#: bookkeeping amortized across the row.
+OPS_PER_MICROROTATION = 8.0
 
-PEAK_FLOPS = 197e12     # bf16/chip, v5e-class target
-HBM_BW = 819e9          # bytes/s/chip
-ICI_BW = 50e9           # bytes/s/link
+#: Gain compensation per element: the fixed-point multiply by 1/K
+#: (two 16-bit partial products, shift, optional RNE round).
+OPS_GAIN = 12.0
+
+#: Packed-path converter dataflow per element per rotation: unpack,
+#: exponent align, expand (hidden bit / HUB extension), renormalize,
+#: saturate/pack — roughly 40 elementwise ops each way.
+OPS_CONVERT = 80.0
+
+#: Relative ALU cost of one "op" in each datapath's word representation.
+WORD_FACTOR = {
+    "int32": 1.0,      # blockfp: native 32-bit lanes
+    "int64": 2.0,      # packed word on a 64-bit ALU (interpret / CPU)
+    "lanes": 3.5,      # dual-int32 split: carries, two-case shifts, muls
+}
 
 
-@dataclasses.dataclass
-class CellModel:
-    flops_pd: float
-    hbm_pd: float
-    coll_pd: float
-    model_flops: float          # global useful FLOPs (6/2 * N_active * D)
-    hlo_flops_global: float
+@dataclasses.dataclass(frozen=True)
+class DeviceSpec:
+    """Peak rates the roofline divides by.
+
+    ``peak_ops`` is the sustained *elementwise integer/vector* op rate
+    (ops/s) — these kernels run shifts/adds/selects, not MXU matmuls, so
+    the VPU-class number is the honest ceiling, not the headline FLOPs.
+    ``hbm_bw`` is bytes/s of main-memory bandwidth.
+    """
+
+    name: str
+    peak_ops: float
+    hbm_bw: float
+
+
+#: Keyed by `jax.devices()[0].device_kind` (lowercased prefix match).
+DEVICE_SPECS = {
+    # Generic host CPU: ~12 int32 lanes x ~4 GHz sustained vector ALU,
+    # dual-channel DDR-class bandwidth.  Deliberately round numbers —
+    # the CPU lane is interpret-mode anyway; fractions are directional.
+    "cpu": DeviceSpec("cpu", peak_ops=4.8e10, hbm_bw=2.0e10),
+    # TPU v5e: 8 VPU lanes x 8x128 x 940 MHz ~ 1e12 int32 ops/s/core,
+    # 819 GB/s HBM.
+    "tpu v5 lite": DeviceSpec("tpu v5 lite", peak_ops=9.6e11, hbm_bw=8.19e11),
+    "tpu v4": DeviceSpec("tpu v4", peak_ops=1.1e12, hbm_bw=1.2e12),
+}
+
+_GENERIC = DeviceSpec("generic", peak_ops=1.0e11, hbm_bw=1.0e11)
+
+
+def device_spec(kind: str | None = None) -> DeviceSpec:
+    """Resolve a `DeviceSpec` for a device kind (default: this process's
+    first device).  Unknown kinds get a generic mid-range spec — the
+    fraction column stays defined, clearly labeled by spec name."""
+    if kind is None:
+        import jax
+        kind = jax.devices()[0].device_kind
+    k = kind.lower()
+    for prefix, spec in DEVICE_SPECS.items():
+        if k.startswith(prefix):
+            return spec
+    return _GENERIC
+
+
+@dataclasses.dataclass(frozen=True)
+class QRDCost:
+    """Work of one QRD: elementwise ops and HBM bytes (per matrix)."""
+
+    ops: float
+    hbm_bytes: float
 
     @property
-    def t_compute(self):
-        return self.flops_pd / PEAK_FLOPS
+    def intensity(self) -> float:
+        """Arithmetic intensity, ops per HBM byte."""
+        return self.ops / self.hbm_bytes if self.hbm_bytes else float("inf")
+
+
+def _active_elements(m: int, n: int, e: int) -> float:
+    """Sum over the schedule of the elements both rows rotate.
+
+    The column-major and Sameh–Kuck schedules perform the identical
+    rotation set — (pivot, target, col) with 2·(e − col) live elements —
+    so this is schedule-independent.
+    """
+    total = 0
+    for col in range(min(m - 1, n)):
+        total += (m - 1 - col) * 2 * (e - col)
+    return float(total)
+
+
+def qrd_cost(m: int, n: int, *, compute_q: bool = True, iters: int = 24,
+             backend: str = "blockfp_pallas", schedule: str = "col",
+             hbm_passes: float | None = None,
+             word: str | None = None) -> QRDCost:
+    """Analytic cost of one m x n QRD on the named datapath.
+
+    Parameters
+    ----------
+    iters : int
+        CORDIC micro-rotation depth (``GivensConfig.resolved_iters()``
+        for the packed path, the ``iters`` knob for block-FP).
+    backend : str
+        ``'blockfp_pallas'`` (int32, no converter dataflow),
+        ``'cordic_pallas'`` / ``'cordic'`` (packed word + converters),
+        ``'fixed'`` (int64 word, no converters).
+    hbm_passes : float, optional
+        Override the kernel's HBM-pass contract; defaults from the
+        backend (`repro.kernels.qrd_blocked.HBM_PASSES_PER_QRD` for the
+        kernel-resident paths, ``2 * len(steps)`` for the host loop).
+    word : str, optional
+        Word representation override (`WORD_FACTOR` key); defaults from
+        the backend (+ device: the packed path costs int64 emulation on
+        CPU hosts and the lane split on 32-bit accelerators — callers
+        who know pass it explicitly, the default stays 'int64').
+    """
+    e = n + (m if compute_q else 0)
+    elems = _active_elements(m, n, e)
+    rotations = sum(m - 1 - c for c in range(min(m - 1, n)))
+
+    packed = backend in ("cordic", "cordic_pallas")
+    per_elem = iters * OPS_PER_MICROROTATION + OPS_GAIN
+    if packed:
+        per_elem += OPS_CONVERT
+    if word is None:
+        word = "int64" if packed else ("int64" if backend == "fixed"
+                                       else "int32")
+    ops = elems * per_elem * WORD_FACTOR[word]
+
+    itemsize = 8 if (packed or backend == "fixed") else 4
+    if hbm_passes is None:
+        if backend == "cordic":          # host loop: round-trip per step
+            hbm_passes = 2.0 * rotations
+        else:                            # kernel-resident: in + out
+            from repro.kernels.qrd_blocked import HBM_PASSES_PER_QRD
+            hbm_passes = float(HBM_PASSES_PER_QRD)
+    bytes_ = hbm_passes * m * e * itemsize
+    bytes_ += 2.0 * m * e * 8            # float64 encode read + decode write
+    return QRDCost(ops=ops, hbm_bytes=bytes_)
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflinePoint:
+    """The bound for one (cost, device) pair."""
+
+    t_compute: float     # s per QRD at peak_ops
+    t_memory: float      # s per QRD at hbm_bw
 
     @property
-    def t_memory(self):
-        return self.hbm_pd / HBM_BW
+    def bound_s(self) -> float:
+        return max(self.t_compute, self.t_memory)
 
     @property
-    def t_collective(self):
-        return self.coll_pd / ICI_BW
+    def bound_qrd_per_s(self) -> float:
+        return 1.0 / self.bound_s
 
     @property
-    def dominant(self):
-        terms = {"compute": self.t_compute, "memory": self.t_memory,
-                 "collective": self.t_collective}
-        return max(terms, key=terms.get)
-
-    @property
-    def bound(self):
-        return max(self.t_compute, self.t_memory, self.t_collective)
+    def dominant(self) -> str:
+        return "compute" if self.t_compute >= self.t_memory else "memory"
 
 
-def _attn_layers(cfg):
-    if cfg.family == "ssm":
-        return 0
-    if cfg.family == "hybrid":
-        per = cfg.pattern
-        return sum(1 for i in range(cfg.n_layers)
-                   if per[i % len(per)] == "attn")
-    if cfg.family == "encdec":
-        return cfg.enc_layers + 2 * cfg.n_layers  # self + cross
-    return cfg.n_layers
+def roofline(cost: QRDCost, spec: DeviceSpec) -> RooflinePoint:
+    """The achievable-rate bound: whichever of compute and memory is
+    slower caps throughput (batched QRDs pipeline, so no latency term)."""
+    return RooflinePoint(t_compute=cost.ops / spec.peak_ops,
+                         t_memory=cost.hbm_bytes / spec.hbm_bw)
 
 
-def build(arch: str, shape: str, *, dp=16, tp=16, pods=1,
-          seq_parallel=False, remat_passes=1.0, fsdp_passes=3.0,
-          grad_bytes=2.0, moe_capacity_factor=None) -> CellModel:
-    cfg = get_config(arch)
-    cell = shape_of(shape)
-    n_dev = dp * tp * pods
-    dp_t = dp * pods                      # total data shards (pod x data)
-    B, S = cell.batch, cell.seq
-    D = cfg.d_model
-    L = cfg.n_layers + (cfg.enc_layers or 0)
-    N_act = cfg.active_param_count()
-    N_tot = cfg.param_count()
-    H = max(cfg.n_heads, 1)
-    dh = cfg.head_dim_()
-    is_train = cell.kind == "train"
-    is_decode = cell.kind == "decode"
-    tokens = B * (1 if is_decode else S)
-    B_loc = B / min(dp_t, B)
+def roofline_fraction(measured_qrd_per_s: float, cost: QRDCost,
+                      spec: DeviceSpec) -> float:
+    """Measured rate as a fraction of the analytic bound.
 
-    # ---- FLOPs ----
-    fwd = 2.0 * N_act * tokens
-    n_attn = _attn_layers(cfg)
-    if is_decode:
-        kv_span = min(S, cfg.window) if cfg.window else S
-        fwd += 4.0 * B * kv_span * H * dh * n_attn
-    elif n_attn:
-        span = min(S, cfg.window) if cfg.window else S
-        fwd += 4.0 * B * S * span / 2 * H * dh * n_attn / max(
-            1, (1 if cfg.family != "encdec" else 2))
-    if cfg.ssm:
-        hd = cfg.ssm.head_dim
-        Hs = cfg.ssm.n_heads(D)
-        fwd += 4.0 * tokens * Hs * hd * (cfg.ssm.chunk / 2 + cfg.ssm.d_state)
-    if cfg.moe and moe_capacity_factor is None:
-        moe_capacity_factor = cfg.moe.capacity_factor
-    if cfg.moe:
-        # capacity padding: expert slots are computed dense
-        moe_l = cfg.n_layers - cfg.first_dense
-        expert_fwd = 2.0 * (cfg.moe.top_k * 3 * D * cfg.moe.d_expert) \
-            * tokens * moe_l / cfg.n_layers
-        fwd += expert_fwd * (moe_capacity_factor - 1.0)
-
-    passes = (3.0 + remat_passes) if is_train else 1.0
-    flops_global = fwd * passes
-    flops_pd = flops_global / n_dev
-
-    # ---- HBM traffic ----
-    w_read = 2.0 * N_tot / tp                      # per pass, per device
-    hbm = passes * w_read
-    if is_train:
-        hbm += 20.0 * N_tot / n_dev                # optimizer + grads f32
-        sp = tp if seq_parallel else 1
-        hbm += 2.0 * L * B_loc * S * D * 2.0 / sp  # saved residual stack w+r
-        hbm += 3.0 * B_loc * S * (cfg.vocab / tp) * 4.0   # logits fwd+bwd
-    else:
-        hbm += tokens / max(B, 1) * B_loc * S * D * 2.0 / max(n_dev // tp, 1)
-    if is_decode:
-        # read the whole KV/state cache once per token
-        if cfg.family == "ssm":
-            Hs = cfg.ssm.n_heads(D)
-            cache = B * cfg.n_layers * Hs * cfg.ssm.d_state \
-                * cfg.ssm.head_dim * 4.0
-        elif cfg.mla:
-            cache = B * S * cfg.n_layers * (cfg.mla.kv_lora
-                                            + cfg.mla.qk_rope) * 2.0
-        else:
-            kv_span = min(S, cfg.window) if cfg.window else S
-            cache = B * kv_span * 2 * cfg.n_kv_heads * dh * 2.0 * n_attn
-        hbm += cache / n_dev * tp                  # batch-sharded only
-
-    # ---- Collectives ----
-    coll = 0.0
-    frac_dp = (dp_t - 1) / dp_t if dp_t > 1 else 0.0
-    frac_tp = (tp - 1) / tp if tp > 1 else 0.0
-    if is_train:
-        coll += fsdp_passes * (2.0 * N_tot / tp) * frac_dp      # FSDP AG
-        coll += 2.0 * grad_bytes * N_tot / tp * frac_dp         # grad RS+AG
-        n_ar = 2.0 if seq_parallel else 4.0   # SP: AR -> RS+AG pairs (half)
-        coll += 2.0 * n_ar * L * (B_loc * S * D * 2.0) * frac_tp * 1.5
-        if cfg.moe:
-            coll += 2.0 * passes * cfg.moe.top_k * B_loc * S * D * 2.0 \
-                * frac_tp
-    else:
-        # weights are TP-resident (no FSDP gather at serve time if cached),
-        # but TP all-reduces remain
-        n_ar = 2.0
-        coll += n_ar * L * (B_loc * (1 if is_decode else S) * D * 2.0) \
-            * frac_tp * 2.0
-        if cfg.moe:
-            coll += 2.0 * cfg.moe.top_k * B_loc * (1 if is_decode else S) \
-                * D * 2.0 * frac_tp
-
-    model_flops = (6.0 if is_train else 2.0) * N_act * tokens
-    return CellModel(flops_pd=flops_pd, hbm_pd=hbm, coll_pd=coll,
-                     model_flops=model_flops, hlo_flops_global=flops_global)
+    ~1.0 means the kernel saturates the modeled resource; interpret-mode
+    rates land orders of magnitude below 1 (they measure the emulator,
+    not the device) — which is exactly the honesty the column exists
+    to enforce.
+    """
+    return measured_qrd_per_s / roofline(cost, spec).bound_qrd_per_s

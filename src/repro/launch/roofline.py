@@ -1,112 +1,125 @@
-"""Roofline analysis (EXPERIMENTS.md §Roofline).
+"""QRD roofline analysis over BENCH_qrd.json (DESIGN.md §11).
 
-Combines the analytic per-cell performance model (launch/perfmodel.py, which
-encodes the partitioning the dry-run proved coherent) with the dry-run
-artifacts (per-device live bytes from memory_analysis, collective shapes from
-the post-SPMD HLO as a structural cross-check).
+Scores every measured backend×schedule row against the analytic bound
+from `repro.launch.perfmodel`: the exact rotation-schedule work (ops)
+and the kernels' HBM-pass contract (bytes) divided by a `DeviceSpec`'s
+peak rates.  The fraction column is the repo's "performance truth" —
+interpret-mode rows land orders of magnitude below 1.0 (they measure
+the Python emulator, not the device), compiled rows are expected within
+an order of magnitude of the bound.
 
-Terms per (arch x shape), single-pod mesh:
-    t_compute    = FLOPs_pd / 197 TF/s      t_memory = HBM_pd / 819 GB/s
-    t_collective = wire_pd / 50 GB/s
-    roofline fraction = (MODEL_FLOPS / n_dev / peak) / max(term)
-    useful ratio      = MODEL_FLOPS / (HLO-equivalent FLOPs, global)
+    PYTHONPATH=src python -m repro.launch.roofline [BENCH_qrd.json]
+        [--device-kind cpu] [--markdown]
 
-    PYTHONPATH=src python -m repro.launch.roofline [--markdown] [--tag base]
+`roofline_for_row` is the library entry point
+`benchmarks.table6_7_throughput` calls to stamp each row's
+``roofline_fraction`` as it is measured.
 """
 from __future__ import annotations
 
 import argparse
 import json
-import os
+import sys
 
-from repro.configs import applicable_cells
 from . import perfmodel
 
-RESULTS_PATH = os.path.join(os.path.dirname(__file__),
-                            "..", "..", "..", "dryrun_results.json")
+__all__ = ["roofline_for_row", "analyze", "main"]
+
+#: Rows the analytic model covers: real-datapath decomposition rows with
+#: a measured rate.  Solve and complex rows carry different work (the
+#: augmented column / three-rotation factor) — modeled as not-covered
+#: rather than pretending.
+_MODELED_BACKENDS = ("cordic", "cordic_pallas", "blockfp_pallas")
 
 
-def load_record(results, arch, shape, mesh="16x16", tag="base"):
-    return results.get(f"{arch}|{shape}|{mesh}|{tag}")
+def roofline_for_row(row: dict, spec=None) -> dict | None:
+    """Roofline terms for one BENCH_qrd.json result row, or None.
 
-
-def analyze_cell(arch, shape, rec=None, **model_kw):
-    m = perfmodel.build(arch, shape, **model_kw)
-    out = {
-        "arch": arch, "shape": shape,
-        "t_compute_ms": m.t_compute * 1e3,
-        "t_memory_ms": m.t_memory * 1e3,
-        "t_collective_ms": m.t_collective * 1e3,
-        "dominant": m.dominant,
-        "model_flops": m.model_flops,
-        "useful_ratio": m.model_flops / m.hlo_flops_global,
-        "roofline_fraction": (m.model_flops / 256 / perfmodel.PEAK_FLOPS)
-        / m.bound,
+    Returns ``{"roofline_fraction", "bound_qrd_per_s", "dominant",
+    "intensity_ops_per_byte", "device"}`` for modeled rows (real-QRD
+    decomposition rows with ``qrd_per_s``); None for rows the analytic
+    model does not cover (solve paths, complex datapath).
+    """
+    backend = row.get("backend")
+    if backend not in _MODELED_BACKENDS:
+        return None
+    if row.get("dtype", "").startswith("complex"):
+        return None
+    rate = row.get("qrd_per_s")
+    m = row.get("m")
+    if rate is None or m is None:
+        return None
+    n = row.get("n", m)
+    if spec is None:
+        spec = perfmodel.device_spec()
+    # Interpret-mode packed rows run int64 emulation; a compiled packed
+    # row (interpret_mode explicitly False) runs the dual-int32 lane
+    # split.  Block-FP is int32 either way; None (host loop) is int64.
+    word = None
+    if backend in ("cordic", "cordic_pallas"):
+        word = "lanes" if row.get("interpret_mode") is False else "int64"
+    cost = perfmodel.qrd_cost(
+        m, n, compute_q=True, iters=int(row.get("iters", 24)),
+        backend=backend, schedule=row.get("schedule", "col"),
+        hbm_passes=row.get("hbm_passes_per_qrd"), word=word)
+    pt = perfmodel.roofline(cost, spec)
+    return {
+        "roofline_fraction": perfmodel.roofline_fraction(rate, cost, spec),
+        "bound_qrd_per_s": pt.bound_qrd_per_s,
+        "dominant": pt.dominant,
+        "intensity_ops_per_byte": cost.intensity,
+        "device": spec.name,
     }
-    if rec:
-        out["bytes_per_device_gib"] = (rec.get("bytes_per_device") or 0) / 2**30
-        out["fits_hbm16"] = (rec.get("bytes_per_device") or 0) < 16 * 2**30
-        out["hlo_collective_ops"] = rec.get("collectives", {}).get("ops", {})
-        out["compile_ok"] = rec.get("ok", False)
+
+
+def analyze(doc: dict, spec=None) -> list[dict]:
+    """Score every modeled row of a BENCH_qrd.json document."""
+    if spec is None:
+        spec = perfmodel.device_spec()
+    out = []
+    for key in sorted(doc.get("results", {})):
+        row = doc["results"][key]
+        terms = roofline_for_row(row, spec)
+        if terms is None:
+            continue
+        out.append({"key": key, "qrd_per_s": row.get("qrd_per_s"),
+                    "interpret_mode": row.get("interpret_mode"), **terms})
     return out
 
 
-_HINTS = {
-    "compute": "compute-bound: raise per-device tile sizes / drop remat",
-    "memory": ("HBM-bound: weight reads dominate — raise arithmetic "
-               "intensity (bigger batch, fewer passes) or quantize weights"),
-    "collective": ("collective-bound: cut FSDP gather volume (fewer gather "
-                   "passes, SP halves TP traffic, int8 grad compression)"),
-}
-
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--tag", default="base")
-    ap.add_argument("--mesh", default="16x16")
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("bench", nargs="?", default="BENCH_qrd.json",
+                    help="BENCH_qrd.json to score")
+    ap.add_argument("--device-kind", default=None,
+                    help="override the DeviceSpec (default: this host)")
     ap.add_argument("--markdown", action="store_true")
-    ap.add_argument("--sp", action="store_true",
-                    help="model sequence-parallel activations")
-    args = ap.parse_args()
-
-    results = {}
-    if os.path.exists(RESULTS_PATH):
-        with open(RESULTS_PATH) as f:
-            results = json.load(f)
-
-    rows = []
-    for arch, shape in applicable_cells():
-        rec = load_record(results, arch, shape, args.mesh, args.tag)
-        rows.append(analyze_cell(arch, shape, rec,
-                                 seq_parallel=args.sp))
-
+    args = ap.parse_args(argv)
+    with open(args.bench) as fh:
+        doc = json.load(fh)
+    spec = perfmodel.device_spec(args.device_kind)
+    rows = analyze(doc, spec)
     if args.markdown:
-        print("| arch | shape | t_comp ms | t_mem ms | t_coll ms | dominant |"
-              " useful | roofline | GiB/dev | fits 16G |")
-        print("|---|---|---:|---:|---:|---|---:|---:|---:|---|")
+        print("| row | measured qrd/s | bound qrd/s | fraction | dominant |"
+              " interpret |")
+        print("|---|---:|---:|---:|---|---|")
         for r in rows:
-            print(f"| {r['arch']} | {r['shape']} | {r['t_compute_ms']:.2f} | "
-                  f"{r['t_memory_ms']:.2f} | {r['t_collective_ms']:.2f} | "
-                  f"{r['dominant']} | {r['useful_ratio']*100:.0f}% | "
-                  f"{r['roofline_fraction']*100:.1f}% | "
-                  f"{r.get('bytes_per_device_gib', 0):.2f} | "
-                  f"{'y' if r.get('fits_hbm16') else 'N'} |")
+            print(f"| {r['key']} | {r['qrd_per_s']:.1f} | "
+                  f"{r['bound_qrd_per_s']:.3g} | "
+                  f"{r['roofline_fraction']:.2e} | {r['dominant']} | "
+                  f"{r['interpret_mode']} |")
     else:
+        print(f"# roofline vs {spec.name} "
+              f"(peak {spec.peak_ops:.3g} ops/s, {spec.hbm_bw:.3g} B/s)")
         for r in rows:
-            print(f"{r['arch']:22s} {r['shape']:12s} "
-                  f"comp={r['t_compute_ms']:9.2f} mem={r['t_memory_ms']:9.2f} "
-                  f"coll={r['t_collective_ms']:9.2f} dom={r['dominant']:10s} "
-                  f"useful={r['useful_ratio']*100:4.0f}% "
-                  f"roofline={r['roofline_fraction']*100:5.1f}% "
-                  f"mem/dev={r.get('bytes_per_device_gib', 0):6.2f}GiB")
-        doms = {}
-        for r in rows:
-            doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
-        print(f"\ndominant-term counts: {doms}")
-        for d, hint in _HINTS.items():
-            if doms.get(d):
-                print(f"  {d}: {hint}")
+            print(f"{r['key']:42s} measured={r['qrd_per_s']:12.1f}/s "
+                  f"bound={r['bound_qrd_per_s']:12.3g}/s "
+                  f"frac={r['roofline_fraction']:.2e} "
+                  f"{r['dominant']:7s} interpret={r['interpret_mode']}")
+        if not rows:
+            print("no modeled rows found")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -49,33 +49,39 @@ def _build_cordic(config, m, n, compute_q):
 
 def _build_cordic_pallas(config, m, n, compute_q):
     unit = GivensUnit(config.givens)
+    tile_b, layout = config.tile_b, config.table_layout
     if config.schedule == "sameh_kuck":   # wavefront datapath (DESIGN.md §8)
         stages = _q.sameh_kuck_schedule(m, n)
         if config.is_complex():
             return lambda A: _q.qr_cordic_complex_wavefront(
                 A, unit, compute_q=compute_q, stages=stages,
-                interpret=config.interpret)
+                interpret=config.interpret, tile_b=tile_b,
+                table_layout=layout)
         return lambda A: _q.qr_cordic_wavefront(
             A, unit, compute_q=compute_q, stages=stages,
-            interpret=config.interpret)
+            interpret=config.interpret, tile_b=tile_b, table_layout=layout)
     if config.is_complex():
         return lambda A: _q.qr_cordic_complex_pallas(
-            A, unit, compute_q=compute_q, interpret=config.interpret)
+            A, unit, compute_q=compute_q, interpret=config.interpret,
+            tile_b=tile_b)
     return lambda A: _q.qr_cordic_pallas(A, unit, compute_q=compute_q,
-                                         interpret=config.interpret)
+                                         interpret=config.interpret,
+                                         tile_b=tile_b)
 
 
 def _build_blockfp_pallas(config, m, n, compute_q):
     iters, hub, frac = (config.blockfp_iters(), config.blockfp_hub(),
                         config.frac)
+    tile_b, layout = config.tile_b, config.table_layout
     if config.schedule == "sameh_kuck":
         stages = _q.sameh_kuck_schedule(m, n)
         return lambda A: _q.qr_blockfp_wavefront(
             A, compute_q=compute_q, iters=iters, hub=hub, frac=frac,
-            stages=stages, interpret=config.interpret)
+            stages=stages, interpret=config.interpret, tile_b=tile_b,
+            table_layout=layout)
     return lambda A: _q.qr_blockfp_pallas(
         A, compute_q=compute_q, iters=iters, hub=hub, frac=frac,
-        interpret=config.interpret)
+        interpret=config.interpret, tile_b=tile_b)
 
 
 def _build_fixed(config, m, n, compute_q):

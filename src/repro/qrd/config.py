@@ -59,6 +59,17 @@ class QRDConfig:
     interpret : bool, optional
         Forwarded to the Pallas kernels; ``None`` auto-selects
         (interpret on CPU, Mosaic on TPU).
+    tile_b : int, optional
+        Batch tile of the blocked Pallas kernels.  ``None`` consults the
+        persisted autotune cache (`repro.kernels.autotune.lookup`) at
+        dispatch time and falls back to the fixed ``TILE_B`` default on a
+        cache miss; an explicit value always wins.
+    table_layout : str, optional
+        Stage-table memory layout of the wavefront kernels: ``'split'``
+        (three separate (S, Pmax) operands) or ``'stacked'`` (one
+        concatenated (3S, Pmax) operand — fewer kernel parameters, one
+        contiguous DMA).  ``None`` resolves from the autotune cache like
+        ``tile_b``.
     mesh : jax.sharding.Mesh, optional
         When set, the engine places the operand's leading batch axis
         across the mesh's data axes before dispatch
@@ -80,9 +91,12 @@ class QRDConfig:
     fixed_scale_exp: int = 0
     dtype: str = "float32"
     interpret: bool | None = None
+    tile_b: int | None = None
+    table_layout: str | None = None
     mesh: Any = dataclasses.field(default=None, compare=False, repr=False)
 
     SCHEDULES = ("col", "sameh_kuck")
+    TABLE_LAYOUTS = (None, "split", "stacked")
 
     def __post_init__(self):
         # Normalize dtype-likes (jnp.complex64, np.dtype('float32'), ...) to
@@ -127,6 +141,12 @@ class QRDConfig:
         if self.schedule not in self.SCHEDULES:
             raise ValueError(f"unknown schedule {self.schedule!r}; "
                              f"expected one of {self.SCHEDULES}")
+        if self.table_layout not in self.TABLE_LAYOUTS:
+            raise ValueError(
+                f"unknown table_layout {self.table_layout!r}; "
+                f"expected one of {self.TABLE_LAYOUTS}")
+        if self.tile_b is not None and self.tile_b < 1:
+            raise ValueError(f"tile_b must be >= 1, got {self.tile_b}")
         if self.schedule not in caps.schedules:
             raise ValueError(
                 f"backend {self.backend!r} does not support "

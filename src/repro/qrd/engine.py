@@ -21,6 +21,8 @@ from collections import OrderedDict
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune
+
 from .config import QRDConfig
 from .solve import lstsq_from_triangular
 
@@ -121,6 +123,28 @@ class QRDEngine:
                             "complex, or integer numeric dtype")
         return A, config
 
+    @staticmethod
+    def _resolve_tuned(config: QRDConfig, m: int, n: int) -> QRDConfig:
+        """Fill ``tile_b``/``table_layout`` from the autotune cache.
+
+        Only fires for the tunable Pallas backends when the config left
+        ``tile_b=None`` (an explicit value always wins).  Runs *before*
+        jitted-callable cache-key formation so a cache entry appearing
+        between calls misses the LRU instead of silently running the
+        stale tile.  Cost on a tuned run is one ``os.stat``
+        (`repro.kernels.autotune.lookup` memoizes the file by mtime).
+        """
+        if (config.tile_b is not None
+                or config.backend not in autotune.TUNABLE_BACKENDS):
+            return config
+        hit = autotune.lookup(config.backend, config.schedule, m, n,
+                              config.dtype)
+        if hit is None:
+            return config
+        layout = (config.table_layout if config.table_layout is not None
+                  else hit.table_layout)
+        return config.replace(tile_b=hit.tile_b, table_layout=layout)
+
     def _dispatch(self, A, compute_q, config: QRDConfig | None = None):
         """Registry dispatch with the bounded jitted-callable LRU.
 
@@ -130,6 +154,8 @@ class QRDEngine:
         The operand dtype is validated against the backend capabilities
         first (`_validate_operand`) — complex operands route onto the
         complex datapath where capable and raise ``TypeError`` otherwise.
+        `_resolve_tuned` then fills autotuned tile parameters before the
+        cache key is formed.
         """
         if config is None:
             config = self.config
@@ -137,6 +163,7 @@ class QRDEngine:
         if A.ndim < 2:
             raise ValueError(f"expected (..., m, n) operand, got {A.shape}")
         m, n = A.shape[-2], A.shape[-1]
+        config = self._resolve_tuned(config, m, n)
         key = (m, n, bool(compute_q), config.cache_key())
         fn = self._fn_cache.pop(key, None)
         if fn is None:

@@ -1,0 +1,194 @@
+"""Dual-int32 lane arithmetic vs the int64 packed word — bit-exactness.
+
+The compilable datapath (DESIGN.md §11) re-expresses every int64
+operation of the packed-word converters and CORDIC core as (hi, lo)
+uint32 lane pairs so Mosaic/Triton can lower it.  The contract is
+bit-identity, checked deterministically here (hypothesis properties
+over the full 64-bit range live in test_packed_lanes_properties.py):
+
+* primitive ops (add/sub/mul/shifts/compares/ilog2/RNE shift) against
+  their int64 counterparts on structured + random 64-bit samples;
+* the `packed_to_lanes` / `lanes_to_packed` round-trip;
+* `LaneUnit` vs `GivensUnit` — vector, rotate and rotate_rows agree
+  word-for-word across IEEE/HUB, rounding and iteration variants;
+* `ops.qr_packed(..., lanes=True)` vs ``lanes=False`` end to end
+  (serial and wavefront, both table layouts).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.givens import GivensConfig, GivensUnit
+from repro.kernels import packed_lanes as pl
+from repro.kernels.cordic_givens import lanes_to_packed, packed_to_lanes
+
+
+def _samples(count=400, seed=11):
+    """Structured corners + uniform random int64 values."""
+    rng = np.random.default_rng(seed)
+    corners = np.array(
+        [0, 1, -1, 2, -2, 2 ** 31 - 1, 2 ** 31, -(2 ** 31), 2 ** 32 - 1,
+         2 ** 32, 2 ** 62, -(2 ** 62), 2 ** 63 - 1, -(2 ** 63),
+         0x00000000FFFFFFFF, -0x100000000, 0x7FFFFFFF00000000],
+        dtype=object)
+    rand = rng.integers(-(2 ** 63), 2 ** 63, size=count - len(corners),
+                        dtype=np.int64)
+    return np.concatenate([corners.astype(np.int64), rand])
+
+
+def _lanes(arr):
+    return packed_to_lanes(jnp.asarray(np.asarray(arr, np.int64)))
+
+
+def _np64(x):
+    return np.asarray(lanes_to_packed(x))
+
+
+def test_round_trip():
+    v = _samples()
+    assert np.array_equal(_np64(_lanes(v)), v)
+
+
+def test_add_sub_mul():
+    a, b = _samples(seed=1), _samples(seed=2)
+    la, lb = pl.lanes_unstack(_lanes(a)), pl.lanes_unstack(_lanes(b))
+    with np.errstate(over="ignore"):
+        assert np.array_equal(_np64(pl.lanes_stack(pl.add64(la, lb))), a + b)
+        assert np.array_equal(_np64(pl.lanes_stack(pl.sub64(la, lb))), a - b)
+        assert np.array_equal(_np64(pl.lanes_stack(pl.mul64(la, lb))), a * b)
+
+
+@pytest.mark.parametrize("s", [0, 1, 7, 23, 31, 32, 33, 47, 62, 63])
+def test_shifts(s):
+    v = _samples(seed=3)
+    lv = pl.lanes_unstack(_lanes(v))
+    sj = jnp.int32(s)
+    u = v.view(np.uint64)
+    assert np.array_equal(_np64(pl.lanes_stack(pl.shl64(lv, sj))),
+                          (u << np.uint64(s)).view(np.int64))
+    assert np.array_equal(_np64(pl.lanes_stack(pl.shr64(lv, sj))),
+                          (u >> np.uint64(s)).view(np.int64))
+    # numpy's int64 >> is arithmetic but shift-by-63 is defined; use
+    # python ints as the arithmetic-shift reference
+    want = np.array([int(x) >> s for x in v], dtype=np.int64)
+    assert np.array_equal(_np64(pl.lanes_stack(pl.sar64(lv, sj))), want)
+
+
+def test_compares():
+    a, b = _samples(seed=4), _samples(seed=5)
+    b[:50] = a[:50]                      # force equal pairs
+    la, lb = pl.lanes_unstack(_lanes(a)), pl.lanes_unstack(_lanes(b))
+    assert np.array_equal(np.asarray(pl.eq64(la, lb)), a == b)
+    assert np.array_equal(np.asarray(pl.is_neg64(la)), a < 0)
+    assert np.array_equal(np.asarray(pl.ltu64(la, lb)),
+                          a.view(np.uint64) < b.view(np.uint64))
+
+
+def test_ilog2():
+    v = (_samples(seed=6) & 0x3FFFFFFFFFFFFFFF) | 1   # positive, nonzero
+    lv = pl.lanes_unstack(_lanes(v))
+    want = np.array([int(x).bit_length() - 1 for x in v], dtype=np.int32)
+    assert np.array_equal(np.asarray(pl.ilog2_64(lv)), want)
+
+
+@pytest.mark.parametrize("s", [0, 1, 5, 24, 31, 32, 40, 62])
+def test_rshift_rne(s):
+    v = _samples(seed=7)
+    lv = pl.lanes_unstack(_lanes(v))
+    got = _np64(pl.lanes_stack(pl.rshift_rne64(lv, jnp.int32(s))))
+
+    def ref(x):
+        x = int(x)
+        if s == 0:
+            return x
+        q, rem = x >> s, x & ((1 << s) - 1)
+        half = 1 << (s - 1)
+        if rem > half or (rem == half and (q & 1)):
+            q += 1
+        return np.int64(np.uint64(q & 0xFFFFFFFFFFFFFFFF))
+
+    want = np.array([ref(x) for x in v], dtype=np.int64)
+    assert np.array_equal(got, want)
+
+
+# --------------------------------------------------------------------------
+# LaneUnit vs GivensUnit: the datapath-level bit-identity contract.
+# --------------------------------------------------------------------------
+CONFIGS = [
+    GivensConfig(hub=False, input_rounding="trunc"),
+    GivensConfig(hub=False, input_rounding="rne"),
+    GivensConfig(hub=True, unbiased=True, detect_identity=True),
+    GivensConfig(hub=True, unbiased=False, detect_identity=False),
+    GivensConfig(hub=True, n=30, iters=20),
+]
+
+
+def _sample_words(cfg, count=256, seed=7):
+    rng = np.random.default_rng(seed)
+    vals = np.concatenate([
+        rng.standard_normal(count - 8),
+        np.array([0.0, 1.0, -1.0, 2.0, 0.5, 1e-30, -1e30, np.pi])])
+    unit = GivensUnit(cfg)
+    return unit.encode(jnp.asarray(vals, jnp.float64))
+
+
+@pytest.mark.parametrize("cfg", CONFIGS,
+                         ids=lambda c: f"hub{int(c.hub)}_n{c.n}")
+def test_lane_unit_matches_givens_unit(cfg):
+    P = _sample_words(cfg)
+    x, y = P[: P.shape[0] // 2], P[P.shape[0] // 2:]
+    unit, lane = GivensUnit(cfg), pl.LaneUnit(cfg)
+    xl, yl = packed_to_lanes(x), packed_to_lanes(y)
+
+    rx, ry, (flip, sig) = unit.vector(x, y)
+    lrx, lry, (lflip, lsig) = lane.vector(xl, yl)
+    assert bool(jnp.all(lanes_to_packed(lrx) == rx))
+    assert bool(jnp.all(lanes_to_packed(lry) == ry))
+    assert bool(jnp.all(lflip.astype(jnp.int64) == flip))
+    assert bool(jnp.all(lanes_to_packed(lsig) == sig))
+
+    gx, gy = unit.rotate(x, y, (flip, sig))
+    lgx, lgy = lane.rotate(xl, yl, (lflip, lsig))
+    assert bool(jnp.all(lanes_to_packed(lgx) == gx))
+    assert bool(jnp.all(lanes_to_packed(lgy) == gy))
+
+
+@pytest.mark.parametrize("cfg", CONFIGS[:3],
+                         ids=lambda c: f"hub{int(c.hub)}_n{c.n}")
+def test_lane_unit_rotate_rows(cfg):
+    rng = np.random.default_rng(3)
+    unit, lane = GivensUnit(cfg), pl.LaneUnit(cfg)
+    W = unit.encode(jnp.asarray(rng.standard_normal((5, 2, 6))))
+    rx, ry = unit.rotate_rows(W[:, 0], W[:, 1])
+    L = packed_to_lanes(W)
+    lrx, lry = lane.rotate_rows(L[:, 0], L[:, 1])
+    assert bool(jnp.all(lanes_to_packed(lrx) == rx))
+    assert bool(jnp.all(lanes_to_packed(lry) == ry))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("hub", [False, True])
+def test_qr_packed_lanes_end_to_end(hub):
+    from repro.core.qrd import givens_schedule, sameh_kuck_schedule
+    from repro.kernels import ops
+
+    cfg = GivensConfig(n=25, hub=hub)
+    unit = GivensUnit(cfg)
+    rng = np.random.default_rng(0)
+    P = unit.encode(jnp.asarray(rng.standard_normal((6, 4, 4))))
+    steps = givens_schedule(4, 4)
+    ref = ops.qr_packed(P, cfg=cfg, steps=steps, lanes=False,
+                        interpret=True, tile_b=4)
+    lan = ops.qr_packed(P, cfg=cfg, steps=steps, lanes=True,
+                        interpret=True, tile_b=4)
+    assert bool(jnp.all(ref == lan))
+
+    stages = sameh_kuck_schedule(4, 4)
+    refw = ops.qr_packed_wavefront(P, cfg=cfg, stages=stages, lanes=False,
+                                   interpret=True, tile_b=4)
+    for layout in ("split", "stacked"):
+        lanw = ops.qr_packed_wavefront(P, cfg=cfg, stages=stages,
+                                       lanes=True, interpret=True,
+                                       tile_b=4, table_layout=layout)
+        assert bool(jnp.all(refw == lanw))

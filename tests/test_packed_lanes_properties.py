@@ -1,0 +1,99 @@
+"""Hypothesis properties: dual-int32 lane primitives vs int64.
+
+Every lane-pair primitive of `repro.kernels.packed_lanes`
+(add/sub/mul/shifts/compares/ilog2/RNE shift) checked bit-for-bit
+against its int64 counterpart over the full 64-bit range and every
+shift amount 0..63.  Deterministic coverage of the same contract (plus
+the LaneUnit datapath) lives in test_packed_lanes.py — this module
+adds the adversarial search and is skipped without the dev extra.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import packed_lanes as pl
+from repro.kernels.cordic_givens import lanes_to_packed, packed_to_lanes
+
+pytest.importorskip("hypothesis",
+                    reason="dev extra: see requirements-dev.txt")
+from hypothesis import given, settings, strategies as st
+
+i64 = st.integers(min_value=-(2 ** 63), max_value=2 ** 63 - 1)
+shifts = st.integers(min_value=0, max_value=63)
+
+
+def _lanes(v: int):
+    """python int -> stacked (2,) int32 lane array."""
+    return packed_to_lanes(jnp.asarray(np.int64(v)))
+
+
+def _back(L) -> int:
+    return int(lanes_to_packed(L))
+
+
+def _wrap(v: int) -> int:
+    """Wrap a python int to signed 64-bit (numpy overflow semantics)."""
+    return int(np.int64(np.uint64(v & 0xFFFFFFFFFFFFFFFF)))
+
+
+@settings(max_examples=200, deadline=None)
+@given(i64)
+def test_round_trip(v):
+    assert _back(_lanes(v)) == v
+
+
+@settings(max_examples=200, deadline=None)
+@given(i64, i64)
+def test_add_sub_mul(a, b):
+    la, lb = pl.lanes_unstack(_lanes(a)), pl.lanes_unstack(_lanes(b))
+    assert _back(pl.lanes_stack(pl.add64(la, lb))) == _wrap(a + b)
+    assert _back(pl.lanes_stack(pl.sub64(la, lb))) == _wrap(a - b)
+    assert _back(pl.lanes_stack(pl.mul64(la, lb))) == _wrap(a * b)
+
+
+@settings(max_examples=200, deadline=None)
+@given(i64, shifts)
+def test_shifts(v, s):
+    lv = pl.lanes_unstack(_lanes(v))
+    sj = jnp.int32(s)
+    u = v & 0xFFFFFFFFFFFFFFFF
+    assert _back(pl.lanes_stack(pl.shl64(lv, sj))) == _wrap(u << s)
+    assert _back(pl.lanes_stack(pl.shr64(lv, sj))) == _wrap(u >> s)
+    assert _back(pl.lanes_stack(pl.sar64(lv, sj))) == v >> s
+
+
+@settings(max_examples=200, deadline=None)
+@given(i64, i64)
+def test_compares(a, b):
+    la, lb = pl.lanes_unstack(_lanes(a)), pl.lanes_unstack(_lanes(b))
+    assert bool(pl.eq64(la, lb)) == (a == b)
+    assert bool(pl.is_neg64(la)) == (a < 0)
+    ua, ub = a & 0xFFFFFFFFFFFFFFFF, b & 0xFFFFFFFFFFFFFFFF
+    assert bool(pl.ltu64(la, lb)) == (ua < ub)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(min_value=1, max_value=2 ** 63 - 1))
+def test_ilog2(v):
+    lv = pl.lanes_unstack(_lanes(v))
+    assert int(pl.ilog2_64(lv)) == v.bit_length() - 1
+
+
+@settings(max_examples=200, deadline=None)
+@given(i64, st.integers(min_value=0, max_value=62))
+def test_rshift_rne(v, s):
+    # reference: round-to-nearest-even on the 2^s grid
+    lv = pl.lanes_unstack(_lanes(v))
+    got = _back(pl.lanes_stack(pl.rshift_rne64(lv, jnp.int32(s))))
+    if s == 0:
+        assert got == v
+        return
+    q, rem = v >> s, v & ((1 << s) - 1)
+    half = 1 << (s - 1)
+    if rem > half or (rem == half and (q & 1)):
+        q += 1
+    assert got == _wrap(q)
+
+
