@@ -273,6 +273,51 @@ def measured_complex_solve_rates(batch=64, m=6, n=3,
     return out
 
 
+def measured_rls_fleet_rates(sizes=(4096, 131072), n=4, batch=256):
+    """Fleet serving throughput: updates/s vs fleet size (DESIGN.md §12).
+
+    Times the donated single-step `RLSFleet.update` in float mode (the
+    serving fleet's CPU-fast lane) at each fleet size with a fixed
+    snapshot batch.  The donated step consumes its input state, so the
+    usual ``_cold_warm(thunk)`` re-run pattern would touch deleted
+    buffers — instead the fleet's own state is threaded forward through
+    every timed call (which is also the honest serving workload: each
+    step really does start from the previous step's output).  The slot
+    count should be a *capacity* axis, not a cost axis: the gather/
+    scatter step is O(batch), so ``updates_per_s`` staying flat across
+    ``sizes`` is the claim these rows track.
+    Returns ``{f"fleet:{slots}x{n} (b{batch})": record}``.
+    """
+    import jax
+    from repro.serve import RLSFleet
+
+    rng = np.random.default_rng(0)
+    out = {}
+    for slots in sizes:
+        fleet = RLSFleet(slots, n, mode="float", lam=0.995)
+        ids = fleet.admit(batch)
+        X = rng.normal(size=(batch, n))
+        d = rng.normal(size=batch)
+        t0 = time.perf_counter()
+        fleet.update(ids, X, d)
+        jax.block_until_ready(fleet.state.work)
+        cold = time.perf_counter() - t0
+        times = []
+        for _ in range(WARM_REPS):
+            t0 = time.perf_counter()
+            fleet.update(ids, X, d)
+            jax.block_until_ready(fleet.state.work)
+            times.append(time.perf_counter() - t0)
+        warm = float(np.median(times))
+        out[f"fleet:{slots}x{n} (b{batch})"] = {
+            "mode": "float", "slots": slots, "n": n, "batch": batch,
+            "updates_per_s": batch / warm,
+            "warm_s": warm, "cold_s": cold, "end_to_end_s": cold,
+            "interpret_mode": None,
+        }
+    return out
+
+
 #: (m, batch) shapes the autotune demonstration covers: a tall batch of
 #: tiny matrices (tile candidates run up to the batch) vs a small batch
 #: of big matrices (the batch itself caps the tile) — the shapes whose
@@ -389,9 +434,19 @@ def main(full=False):
     for key, r in csolve.items():
         print(f"{key},{r['solve_per_s']:.1f},{r['end_to_end_s']:.3f}")
 
+    # Serving-fleet rows (DESIGN.md §12): donated-step updates/s at two
+    # fleet sizes — flat across sizes means slots are capacity, not cost.
+    print("# RLS fleet serving (float mode): slots,batch,updates_per_s,"
+          "warm_s,cold_s")
+    fleet_rows = measured_rls_fleet_rates()
+    for key, r in fleet_rows.items():
+        print(f"{key},{r['slots']},{r['batch']},{r['updates_per_s']:.1f},"
+              f"{r['warm_s']:.4f},{r['cold_s']:.3f}")
+
     rate = measured_kernel_rate()
     write_bench_json(qrd, qrd8, solve, speedup_8x8, rate,
-                     complex_rows={**cqrd, **csolve}, autotune=tuned)
+                     complex_rows={**cqrd, **csolve}, autotune=tuned,
+                     fleet_rows=fleet_rows)
     csv_row("table6_7_throughput", 1e6 / rate,
             f"model_speedup_vs_[32]={ours/gen:.1f}x;"
             f"pallas_interp_rot_per_s={rate:.0f};"
@@ -401,11 +456,14 @@ def main(full=False):
             f"{qrd['blockfp_pallas/col']['qrd_per_s']:.1f};"
             f"solve_jnp_per_s={solve['solve:jnp/col']['solve_per_s']:.1f};"
             f"complex_qrd_per_s={cqrd['complex:cordic/col']['qrd_per_s']:.1f};"
-            f"wavefront_8x8_speedup={speedup_8x8:.1f}x")
+            f"wavefront_8x8_speedup={speedup_8x8:.1f}x;"
+            f"fleet_updates_per_s="
+            f"{fleet_rows['fleet:131072x4 (b256)']['updates_per_s']:.0f}")
 
 
 def write_bench_json(qrd4, qrd8, solve, speedup_8x8, rot_per_s,
-                     complex_rows=None, autotune=None, path=BENCH_JSON):
+                     complex_rows=None, autotune=None, fleet_rows=None,
+                     path=BENCH_JSON):
     """Emit the machine-readable perf trajectory (BENCH_qrd.json).
 
     Schema version 2: one record per (backend, schedule, m) row with
@@ -427,7 +485,8 @@ def write_bench_json(qrd4, qrd8, solve, speedup_8x8, rot_per_s,
                     **{f"{k} (8x8)": v for k, v in qrd8.items()},
                     **{f"{k} (6x3)": v for k, v in solve.items()},
                     **{f"{k} ({v['m']}x{v.get('n', v['m'])})": v
-                       for k, v in (complex_rows or {}).items()}},
+                       for k, v in (complex_rows or {}).items()},
+                    **(fleet_rows or {})},
         "wavefront_8x8_end_to_end_speedup": speedup_8x8,
     }
     if autotune is not None:

@@ -33,6 +33,15 @@ _CUSTOM = {"bfloat16": (ml_dtypes.bfloat16, np.uint16),
 
 
 def _to_savable(a: np.ndarray):
+    """Array -> (npz-serializable view, dtype tag).
+
+    The tag is the *authoritative* dtype of the leaf: custom ml_dtypes
+    leaves are stored as raw integer views (npz can't hold them) and the
+    tag is the only record of what they were; native leaves — including
+    complex64/128 `[R | z]` state and the packed-int64 words of the
+    bit-accurate unit — round-trip through npz unchanged and the tag is
+    verified against the restore template (`_check_dtype`).
+    """
     name = a.dtype.name
     if name in _CUSTOM:
         return a.view(_CUSTOM[name][1]), name
@@ -43,6 +52,24 @@ def _from_saved(a: np.ndarray, name: str):
     if name in _CUSTOM:
         return a.view(_CUSTOM[name][0])
     return a
+
+
+def _check_dtype(i: int, saved: str, template_dtype):
+    """Refuse a silent dtype change at restore time.
+
+    Restoring a complex128 fleet state into a float64 template would
+    previously drop the imaginary parts via ``asarray(..., dtype=...)``
+    (numpy ComplexWarning at best); packed-int64 Givens words cast to a
+    float template would destroy their bit patterns entirely.  A dtype
+    mismatch between checkpoint and template is a config error — fail
+    loudly and make the caller convert deliberately.
+    """
+    want = np.dtype(template_dtype).name
+    if saved != want:
+        raise TypeError(
+            f"checkpoint leaf {i} was saved as {saved} but the restore "
+            f"template expects {want}; refusing to silently convert — "
+            f"cast the restored tree (or fix the template) explicitly")
 
 
 def _flatten(pytree):
@@ -108,6 +135,10 @@ def restore_pytree(directory: str, step: int, template):
     for i, l in enumerate(leaves):
         a = _from_saved(data[f"leaf_{i}"], dtypes[i])
         assert a.shape == tuple(l.shape), f"leaf {i}: {a.shape} vs {l.shape}"
+        # Pre-dtype-manifest checkpoints (tag None) keep the legacy
+        # cast-to-template behavior; tagged ones restore their exact dtype.
+        if dtypes[i] is not None:
+            _check_dtype(i, dtypes[i], l.dtype)
         out.append(jax.numpy.asarray(a, dtype=l.dtype))
     return treedef.unflatten(out), manifest["extra"]
 

@@ -67,3 +67,55 @@ class SyntheticLM:
             out["image_embeds"] = jnp.zeros(
                 (batch_size, cfg.n_image_tokens, cfg.d_model), jnp.float32)
         return out
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticTraffic:
+    """Stateless per-user equalizer traffic for the QRD-RLS serving fleet.
+
+    Each user `u` owns a fixed hidden channel ``w_u`` (a pure function of
+    ``(seed, u)``); `batch(step)` draws `per_step` users uniformly and
+    emits one snapshot each: regressor ``x ~ N(0, I_n)`` and desired
+    response ``d = x·w_u + noise`` (complex circularly-symmetric when
+    `complex_dtype`).  Addressing is stateless exactly like `SyntheticLM`
+    — ``batch(step)`` is a pure function of ``(seed, step)``, so a fleet
+    restored from a checkpoint replays the identical post-restore
+    traffic with no iterator state beyond the step integer.
+    """
+
+    users: int
+    n: int
+    per_step: int
+    seed: int = 0
+    snr_db: float = 30.0
+    complex_dtype: bool = False
+
+    def _split(self, key, shape):
+        if not self.complex_dtype:
+            return jax.random.normal(key, shape, dtype=jnp.float64)
+        kre, kim = jax.random.split(key)
+        scale = jnp.float64(jnp.sqrt(0.5))
+        return (jax.random.normal(kre, shape, dtype=jnp.float64) * scale
+                + 1j * jax.random.normal(kim, shape, dtype=jnp.float64)
+                * scale)
+
+    def channel(self, user):
+        """The hidden ``w_user`` — ground truth for convergence checks."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), 1 + user)
+        return self._split(key, (self.n,))
+
+    def batch(self, step: int):
+        """One traffic tick: ``{'user': (B,), 'x': (B, n), 'd': (B,)}``.
+
+        Users within a tick are distinct only by chance — the server's
+        batcher serializes duplicate slots, so collisions are legal.
+        """
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        ku, kx, kn = jax.random.split(jax.random.fold_in(key, 0), 3)
+        users = jax.random.randint(ku, (self.per_step,), 0, self.users)
+        x = self._split(kx, (self.per_step, self.n))
+        w = jax.vmap(self.channel)(users)
+        noise = self._split(kn, (self.per_step,))
+        sigma = 10.0 ** (-self.snr_db / 20.0)
+        d = jnp.einsum("bn,bn->b", x, w) + sigma * noise
+        return {"user": users, "x": x, "d": d}

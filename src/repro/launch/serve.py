@@ -1,10 +1,25 @@
-"""Production serving launcher: batched prefill + greedy decode loop.
+"""QRD-RLS fleet serving launcher — the deployment entrypoint.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m \
-        [--reduced] [--devices K] [--batch 4] [--prompt-len 32] [--gen 16]
+    PYTHONPATH=src python -m repro.launch.serve --preset equalizer-ieee \
+        [--slots 131072] [--cohorts 4] [--steps 1000] [--devices K] \
+        [--ckpt-dir DIR] [--config cfg.json] [--seed 0]
 
-Same mesh/bring-up conventions as launch.train; uses the sharded
-prefill/serve_step builders (KV caches, ring windows, SSM states included).
+Brings up an `repro.serve.RLSFleet` + `FleetServer` from a named preset
+(`repro.serve.presets`) or a ``QRDConfig.to_json`` file, admits
+`--cohorts` equal cohorts filling the fleet, then drives `--steps`
+synthetic-traffic ticks (`repro.data.pipeline.SyntheticTraffic`) through
+the async snapshot queue — submit, pump, heartbeat — with a checkpoint
+every `--ckpt-every` steps when `--ckpt-dir` is set, and prints the
+health report and sustained update throughput at the end.
+
+``--devices K`` fakes a K-device host (the launch.train convention:
+``--xla_force_host_platform_device_count``) and shards the slot axis
+across a (K, 1) data mesh via `launch.sharding.shard_fleet`.
+
+Exit code 0 requires every submitted snapshot to be applied (no backlog,
+nothing dropped) and, when checkpointing, a final evict → restore that
+reproduces the served weights bit-exactly — this is what CI's
+serve-smoke lane asserts at the 2^17-slot scale.
 """
 import argparse
 import os
@@ -13,80 +28,109 @@ import time
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--preset", default="equalizer-float64",
+                    help="named deployment (repro.serve.list_fleet_presets)")
+    ap.add_argument("--config", default=None,
+                    help="QRDConfig JSON file (overrides the preset's config)")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="fleet capacity (0 = preset default)")
+    ap.add_argument("--n", type=int, default=0,
+                    help="filter length (0 = preset default)")
+    ap.add_argument("--cohorts", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=200,
+                    help="traffic ticks to serve")
+    ap.add_argument("--per-step", type=int, default=0,
+                    help="snapshots per tick (0 = server batch size)")
     ap.add_argument("--devices", type=int, default=0)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     if args.devices:
         os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
                                    f" --xla_force_host_platform_device_count="
                                    f"{args.devices}")
-    import jax
-    import jax.numpy as jnp
     import numpy as np
 
-    from repro.configs import get_config, reduce_config
-    from repro.configs.registry import ShapeCell
-    from repro.data import SyntheticLM
-    from repro.launch import steps as steps_mod
-    from repro.models import init_params
+    from repro.data.pipeline import SyntheticTraffic
+    from repro.qrd import QRDConfig, QRDEngine
+    from repro.serve import FleetServer, fleet_preset
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = reduce_config(cfg)
-    max_len = args.prompt_len + args.gen
-    n_dev = len(jax.devices())
-    model = 1
-    for m in (16, 8, 4, 2, 1):
-        if n_dev % m == 0:
-            model = m
-            break
-    mesh = jax.make_mesh((n_dev // model, model), ("data", "model"))
-    print(f"mesh: {dict(mesh.shape)}  arch: {cfg.name}")
+    spec = fleet_preset(args.preset)
+    cfg = spec["config"]
+    if args.config:
+        with open(args.config) as f:
+            cfg = QRDConfig.from_json(f.read())
+    fleet_kw = spec["fleet"]
+    if args.slots:
+        fleet_kw["slots"] = args.slots
+    if args.n:
+        fleet_kw["n"] = args.n
 
-    with mesh:
-        pre_cell = ShapeCell("serve_prefill", "prefill", args.prompt_len,
-                             args.batch)
-        dec_cell = ShapeCell("serve_decode", "decode", max_len, args.batch)
-        prefill_fn, _ = steps_mod.build_prefill(cfg, pre_cell, mesh)
-        # decode builder creates its own zero cache struct; we reuse the
-        # prefill cache, so rebuild the jit without donation mismatch
-        serve_fn, _ = steps_mod.build_decode(cfg, dec_cell, mesh)
+    mesh = None
+    if args.devices:
+        import jax
+        mesh = jax.make_mesh((args.devices, 1), ("data", "model"))
 
-        params = init_params(cfg, jax.random.PRNGKey(0))
-        ds = SyntheticLM(vocab=cfg.vocab, seq=args.prompt_len,
-                         global_batch=args.batch, seed=7)
-        batch = ds.batch(0)
-        batch.update(ds.extras(cfg, args.batch))
+    print(f"preset {args.preset}: {spec['description']}")
+    print(f"config: {cfg.to_json()}")
+    t0 = time.perf_counter()
+    fleet = QRDEngine(cfg).fleet(mesh=mesh, **fleet_kw)
+    server = FleetServer(fleet, ckpt_dir=args.ckpt_dir, **spec["server"])
+    size = fleet.slots // args.cohorts
+    for c in range(args.cohorts):
+        server.admit_cohort(
+            f"cohort-{c}",
+            size if c else fleet.slots - size * (args.cohorts - 1))
+    print(f"bring-up: {fleet!r} in {time.perf_counter() - t0:.2f}s, "
+          f"{args.cohorts} cohorts of ~{size}")
 
-        # prefill builds a max_len cache? prefill() uses cell.seq as max_len,
-        # so decode continues in a fresh zero cache fed by replay for demo
-        t0 = time.time()
-        from repro.models import decode_step, init_decode_state, prefill
-        logits, _short_cache = jax.jit(
-            lambda p, b: prefill(cfg, p, b, max_len))(params, batch)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        print(f"prefill: {time.time()-t0:.1f}s (incl. compile)")
+    per_step = args.per_step or server.batch
+    names = [c.name for c in server.cohorts()]
+    traffic = SyntheticTraffic(users=min(c.size for c in server.cohorts()),
+                               n=fleet.n, per_step=per_step, seed=args.seed,
+                               complex_dtype=fleet.is_complex)
+    applied = 0
+    t0 = time.perf_counter()
+    for step in range(args.steps):
+        tick = traffic.batch(step)
+        name = names[step % len(names)]
+        server.submit_batch(name, np.asarray(tick["user"]),
+                            np.asarray(tick["x"]), np.asarray(tick["d"]))
+        applied += server.pump()
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            server.checkpoint()
+    elapsed = time.perf_counter() - t0
+    health = server.health()
+    print(f"served {applied} snapshot updates over {server.step} batches "
+          f"in {elapsed:.2f}s ({applied / elapsed:,.0f} updates/s)")
+    for name, stats in health["cohorts"].items():
+        print(f"  {name}: {stats}")
 
-        cache = init_decode_state(cfg, args.batch, max_len)
-        # re-ingest the prompt token-by-token (keeps the demo cache simple)
-        step = jax.jit(lambda p, t, c, pos: decode_step(cfg, p, t, c, pos))
-        for t in range(args.prompt_len):
-            _, cache = step(params, batch["tokens"][:, t:t + 1], cache, t)
-        out = [tok]
-        t0 = time.time()
-        for i in range(args.gen - 1):
-            logits, cache = step(params, tok, cache, args.prompt_len + i)
-            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-            out.append(tok)
-        jax.block_until_ready(tok)
-        rate = (args.gen - 1) * args.batch / (time.time() - t0)
-        gen = np.asarray(jnp.concatenate(out, axis=1))
-        print(f"decode: {rate:.1f} tok/s; sample: {gen[0, :8].tolist()}")
+    failures = []
+    if health["queue_depth"] or any(
+            s["backlog"] or s["dropped_stale"] or s["dropped_overflow"]
+            for s in health["cohorts"].values()):
+        failures.append(f"unserved traffic: {health}")
+
+    if args.ckpt_dir:
+        server.checkpoint(wait=True)
+        probe = names[0]
+        members = np.arange(min(8, size))
+        w_before = server.query(probe, members)
+        server.evict_cohort(probe)           # exercise slot recycling ...
+        restored = server.restore_latest()   # ... then roll everything back
+        w_after = server.query(probe, members)
+        if restored is None or not np.array_equal(w_before, w_after):
+            failures.append("restore did not reproduce served weights")
+        else:
+            print(f"checkpoint/restore at step {restored}: weights "
+                  "bit-identical")
+
+    if failures:
+        raise SystemExit("; ".join(failures))
+    print("serve smoke OK")
 
 
 if __name__ == "__main__":

@@ -28,7 +28,7 @@ from .mesh import data_axes, dp_size
 
 __all__ = ["param_specs", "opt_specs", "batch_specs", "cache_specs",
            "to_shardings", "qrd_batch_spec", "qrd_stage_table_spec",
-           "shard_qrd_batch"]
+           "shard_qrd_batch", "fleet_slot_spec", "shard_fleet"]
 
 _FSDP = "__fsdp__"  # placeholder resolved to the mesh's data axes
 
@@ -255,6 +255,37 @@ def shard_qrd_batch(A, mesh):
         return jax.device_put(A, NamedSharding(mesh, P()))
     spec = qrd_batch_spec(A.ndim, A.shape[0], mesh)
     return jax.device_put(A, NamedSharding(mesh, spec))
+
+
+def fleet_slot_spec(ndim, slots, mesh) -> P:
+    """PartitionSpec for one `repro.serve.FleetState` leaf: slot axis over
+    the data axes.
+
+    Every fleet buffer is slot-major — ``(N, ...)`` with one row per
+    filter — so the fleet shards exactly like a batched QRD operand:
+    embarrassingly parallel over the leading axis, per-slot trailing
+    axes replicated within their shard.  This *is* `qrd_batch_spec`
+    applied to the slot axis (one rule for both: a fleet update is a
+    batched annihilation); the alias exists so serving code reads as
+    serving code and so 1-D leaves (λ, occupancy, generations) get the
+    same leading-axis placement the 3-D work array does.
+    """
+    return qrd_batch_spec(max(ndim, 1), slots, mesh)
+
+
+def shard_fleet(state, mesh):
+    """Place every `FleetState` leaf with its slot axis sharded on `mesh`.
+
+    Applied at fleet construction and re-applied after host-side slot
+    mutations (admit/evict/restore) so the donated update step always
+    sees consistently placed inputs — donation reuses the input buffers,
+    hence placement must be decided before the first step, not by GSPMD
+    inference mid-stream.
+    """
+    return jax.tree.map(
+        lambda l: jax.device_put(
+            l, NamedSharding(mesh, fleet_slot_spec(l.ndim, l.shape[0], mesh))),
+        state)
 
 
 def to_shardings(spec_tree, mesh):

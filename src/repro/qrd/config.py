@@ -14,10 +14,12 @@ runtime placement, not arithmetic).
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Any
 
 import jax.numpy as jnp
 
+from repro.core.formats import FloatFormat
 from repro.core.givens import GivensConfig
 
 __all__ = ["QRDConfig"]
@@ -122,6 +124,49 @@ class QRDConfig:
 
     def blockfp_hub(self) -> bool:
         return self.givens.hub if self.hub is None else self.hub
+
+    # -- declarative deployments: JSON round-trip ----------------------------
+    def as_dict(self) -> dict:
+        """JSON-ready dict of every *arithmetic* field.
+
+        ``mesh`` is runtime placement, not arithmetic — it is excluded
+        (exactly as it is excluded from hash/equality); reattach one on
+        load with ``cfg.replace(mesh=mesh)``.  Nested `GivensConfig` /
+        `FloatFormat` dataclasses recurse to plain dicts.
+        """
+        d = dataclasses.asdict(self)
+        d.pop("mesh", None)
+        return d
+
+    def to_json(self, **json_kwargs) -> str:
+        """Serialize to JSON (deterministic key order) — the declarative
+        deployment format consumed by `repro.serve.presets` and
+        ``launch/serve.py --config``."""
+        json_kwargs.setdefault("sort_keys", True)
+        return json.dumps(self.as_dict(), **json_kwargs)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "QRDConfig":
+        """Inverse of `as_dict` (strict: unknown keys raise)."""
+        d = dict(d)
+        g = d.get("givens")
+        if isinstance(g, dict):
+            g = dict(g)
+            fmt = g.get("fmt")
+            if isinstance(fmt, dict):
+                g["fmt"] = FloatFormat(**fmt)
+            d["givens"] = GivensConfig(**g)
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown QRDConfig field(s) {sorted(unknown)}; "
+                             f"known: {sorted(known)}")
+        return cls(**d)
+
+    @classmethod
+    def from_json(cls, s: str) -> "QRDConfig":
+        """Inverse of `to_json`: ``QRDConfig.from_json(cfg.to_json()) == cfg``."""
+        return cls.from_dict(json.loads(s))
 
     def cache_key(self):
         """Hashable key covering *everything* dispatch depends on.

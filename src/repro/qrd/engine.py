@@ -281,8 +281,9 @@ class QRDEngine:
         ``state.weights()``.
         """
         from repro.core.givens import GivensUnit
-        from .rls import RLSState
+        from .rls import RLSState, validate_lam
 
+        validate_lam(lam)  # eagerly — before any mode routing can raise
         cfg = self.config
         dtype = "complex128" if cfg.is_complex() else "float64"
         if block is not None or cfg.backend == "blockfp_pallas":
@@ -299,3 +300,58 @@ class QRDEngine:
             return RLSState(n, lam=lam, delta=delta, mode="unit",
                             unit=GivensUnit(cfg.givens), dtype=dtype)
         return RLSState(n, lam=lam, delta=delta, mode="float", dtype=dtype)
+
+    def fleet(self, slots, n, lam=0.99, delta=1e-3, block=None, mesh=None):
+        """Create an `repro.serve.RLSFleet` bound to this engine's backend.
+
+        The fleet analogue of `rls`: N independent streaming QRD-RLS
+        states as one struct-of-arrays pytree updated by a single
+        donated jitted step (`repro.serve.fleet`, DESIGN.md §12).  Mode
+        routing mirrors `rls` exactly — the cordic family vectorizes the
+        bit-accurate `GivensUnit` annihilation over slots (so fleet
+        slots stay bit-identical to single `RLSState` objects), explicit
+        ``block`` or ``'blockfp_pallas'`` selects the kernel-resident
+        blocked path (real only), anything else the f64 rotation loop.
+
+        Parameters
+        ----------
+        slots : int — fleet capacity N.
+        n : int — filter length.
+        lam, delta : defaults for `RLSFleet.admit` (λ is per-slot state
+            and may be overridden per admit).
+        block : int, optional — force the blocked-kernel path with this
+            many stacked snapshots per slot per update call.
+        mesh : jax.sharding.Mesh, optional — shard the slot axis across
+            the mesh's data axes; defaults to ``config.mesh``.
+
+        Returns
+        -------
+        `repro.serve.RLSFleet` — ``fleet.admit(k)`` /
+        ``fleet.update(slot_ids, X, d)`` / ``fleet.weights(slot_ids)``.
+        """
+        from repro.core.givens import GivensUnit
+        from repro.serve.fleet import RLSFleet
+
+        from .rls import validate_lam
+
+        validate_lam(lam)
+        cfg = self.config
+        mesh = cfg.mesh if mesh is None else mesh
+        dtype = "complex128" if cfg.is_complex() else "float64"
+        if block is not None or cfg.backend == "blockfp_pallas":
+            if cfg.is_complex():
+                raise TypeError(
+                    "the blocked-kernel RLS path has no complex datapath; "
+                    "use the cordic family (mode='unit') or a float "
+                    "backend for complex QRD-RLS fleets")
+            return RLSFleet(slots, n, lam=lam, delta=delta, mode="block",
+                            block=4 if block is None else int(block),
+                            hub=cfg.blockfp_hub(), iters=cfg.blockfp_iters(),
+                            frac=cfg.frac, interpret=cfg.interpret,
+                            mesh=mesh)
+        if cfg.backend in ("cordic", "cordic_pallas"):
+            return RLSFleet(slots, n, lam=lam, delta=delta, mode="unit",
+                            unit=GivensUnit(cfg.givens), dtype=dtype,
+                            mesh=mesh)
+        return RLSFleet(slots, n, lam=lam, delta=delta, mode="float",
+                        dtype=dtype, mesh=mesh)

@@ -31,9 +31,27 @@ import jax.numpy as jnp
 
 from .solve import back_substitute
 
-__all__ = ["RLSState"]
+__all__ = ["RLSState", "validate_lam"]
 
 _MODES = ("float", "unit", "block")
+
+
+def validate_lam(lam, what="forgetting factor"):
+    """Validate ``0 < lam <= 1`` (scalar or per-slot array) loudly.
+
+    QRD-RLS with λ <= 0 silently destroys the carried factor (the √λ
+    weighting zeroes — or, for negative λ, imaginarizes — R); λ > 1
+    amplifies history without bound; NaN poisons the state on the first
+    update.  Every entry point (`RLSState`, `QRDEngine.rls`,
+    `repro.serve.RLSFleet`) funnels through here so no path accepts a
+    non-positive λ.
+    """
+    arr = np.asarray(lam, dtype=np.float64)
+    if arr.size == 0:
+        raise ValueError(f"{what} must be non-empty")
+    if not np.all((arr > 0.0) & (arr <= 1.0)):
+        raise ValueError(f"{what} must be in (0, 1], got {lam!r}")
+    return arr
 
 
 class RLSState:
@@ -84,8 +102,7 @@ class RLSState:
                  dtype="float64"):
         if mode not in _MODES:
             raise ValueError(f"unknown mode {mode!r}; expected one of {_MODES}")
-        if not 0.0 < lam <= 1.0:
-            raise ValueError(f"forgetting factor must be in (0, 1], got {lam}")
+        validate_lam(lam)
         if mode == "unit" and unit is None:
             raise ValueError("mode='unit' needs a GivensUnit")
         if dtype not in ("float64", "complex128"):
@@ -232,6 +249,72 @@ class RLSState:
                                                 **self._blockfp))[0]
         self.R, self.z = Wp[:self.n, :self.n], Wp[:self.n, self.n]
         self._pending = []
+        return self
+
+    # -- pure pytree export / import ------------------------------------------
+    def to_arrays(self):
+        """Export the full state as a pure array pytree.
+
+        Block mode's partial-flush buffer used to live only as Python
+        list state — invisible to checkpointing and to the fleet; here
+        it is materialized as a fixed-shape ``(block, n+1)`` array (rows
+        beyond ``pending_count`` are zero padding), so the export has a
+        static structure suitable as a `repro.checkpoint` template and
+        as the interop schema of `repro.serve.RLSFleet.import_state` /
+        ``export_state``.
+
+        Returns
+        -------
+        dict with keys ``R`` (n, n), ``z`` (n,), ``lam`` float64,
+        ``updates`` int64, ``pending`` (block, n+1) — (0, n+1) for the
+        unblocked modes — and ``pending_count`` int64.
+        """
+        cap = self.block if self.mode == "block" else 0
+        pending = np.zeros((cap, self.n + 1), dtype=self.dtype)
+        for i, row in enumerate(self._pending):
+            pending[i] = row
+        return {"R": self.R.copy(), "z": self.z.copy(),
+                "lam": np.float64(self.lam),
+                "updates": np.int64(self.updates),
+                "pending": pending,
+                "pending_count": np.int64(len(self._pending))}
+
+    def from_arrays(self, arrays):
+        """Load a `to_arrays` pytree into this (compatibly configured)
+        state — the restore half of the pure export.
+
+        The receiving state supplies the *configuration* (mode, unit,
+        kernel knobs — none of which are arrays); `arrays` supplies the
+        carried numbers.  Shapes, dtype kind and λ are validated;
+        pending snapshots beyond the unblocked modes' empty buffer
+        require ``mode='block'``.
+        """
+        R = np.asarray(arrays["R"])
+        z = np.asarray(arrays["z"])
+        if R.shape != (self.n, self.n) or z.shape != (self.n,):
+            raise ValueError(f"state shape mismatch: R {R.shape}, z {z.shape}"
+                             f" vs n={self.n}")
+        if (R.dtype.kind == "c") != self.is_complex:
+            raise TypeError(f"dtype kind mismatch: imported {R.dtype} into a "
+                            f"{self.dtype} state (no silent cast)")
+        count = int(arrays.get("pending_count", 0))
+        pending = np.asarray(arrays.get("pending",
+                                        np.zeros((0, self.n + 1),
+                                                 dtype=self.dtype)))
+        if count:
+            if self.mode != "block":
+                raise ValueError(f"{count} pending snapshot(s) in the import "
+                                 f"but mode={self.mode!r} has no pending "
+                                 "buffer (flush() the source first)")
+            if count > pending.shape[0] or pending.shape[1:] != (self.n + 1,):
+                raise ValueError(f"pending buffer {pending.shape} cannot hold "
+                                 f"{count} rows of length {self.n + 1}")
+        self.lam = float(validate_lam(np.asarray(arrays["lam"]).item()))
+        self.R = R.astype(self.dtype).copy()
+        self.z = z.astype(self.dtype).copy()
+        self.updates = int(arrays["updates"])
+        self._pending = [pending[i].astype(self.dtype).copy()
+                         for i in range(count)]
         return self
 
     # -- readout --------------------------------------------------------------

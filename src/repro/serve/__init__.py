@@ -1,0 +1,24 @@
+"""QRD-RLS serving: fleets of adaptive filters behind a batched server.
+
+The serving subsystem turns the single-state streaming QRD-RLS of
+`repro.qrd.rls` into a deployment shape: `RLSFleet` holds N independent
+filter states as one sharded struct-of-arrays pytree updated by a
+single donated jitted step, and `FleetServer` wraps it with cohort
+lifecycle (admit/evict/query/checkpoint of contiguous slot ranges),
+asynchronous snapshot batching behind a bounded queue, and
+health/occupancy reporting.  `presets` names ready-made deployment
+configurations.  See DESIGN.md §12.
+"""
+from repro.serve.fleet import FleetState, RLSFleet, validate_lam
+from repro.serve.server import Cohort, FleetServer
+from repro.serve.presets import fleet_preset, list_fleet_presets
+
+__all__ = [
+    "FleetState",
+    "RLSFleet",
+    "validate_lam",
+    "Cohort",
+    "FleetServer",
+    "fleet_preset",
+    "list_fleet_presets",
+]

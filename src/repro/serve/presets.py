@@ -1,0 +1,116 @@
+"""Named deployment presets for QRD-RLS fleets.
+
+The seed's `configs/registry.py` resolves ``--arch`` ids to model
+configs through a plain module-level table; this registry does the same
+for serving deployments: a preset name resolves to a `QRDConfig` (the
+arithmetic — backend, format, datapath) plus fleet/server shape kwargs
+(capacity, filter length, batch size, queue bound).  Presets are
+declarative end to end: the embedded `QRDConfig` round-trips through
+``to_json``/``from_json``, so a deployment is one name or one JSON blob.
+
+    >>> from repro.serve import fleet_preset
+    >>> from repro.qrd import QRDEngine
+    >>> spec = fleet_preset("equalizer-ieee", slots=1 << 17)
+    >>> fleet = QRDEngine(spec["config"]).fleet(**spec["fleet"])
+
+``launch/serve.py`` exposes the same table on the command line
+(``python -m repro.launch.serve --preset equalizer-ieee``).
+"""
+from __future__ import annotations
+
+from repro.core.formats import SINGLE
+from repro.core.givens import GivensConfig
+from repro.qrd.config import QRDConfig
+
+__all__ = ["fleet_preset", "list_fleet_presets", "register_fleet_preset"]
+
+# name -> (description, QRDConfig kwargs-free instance, fleet kwargs,
+#          server kwargs).  Fleet kwargs feed QRDEngine.fleet(); server
+#          kwargs feed FleetServer(...).
+_PRESETS = {}
+
+
+def register_fleet_preset(name, *, description, config, fleet, server=None):
+    """Register a deployment preset (see module docstring).
+
+    `fleet` must carry ``slots`` and ``n``; `server` kwargs are
+    forwarded to `FleetServer` (batch, queue_limit, overflow, ...).
+    """
+    if name in _PRESETS:
+        raise ValueError(f"preset {name!r} already registered")
+    if not isinstance(config, QRDConfig):
+        raise TypeError(f"config must be a QRDConfig, got {type(config)}")
+    for key in ("slots", "n"):
+        if key not in fleet:
+            raise ValueError(f"fleet kwargs must include {key!r}")
+    _PRESETS[name] = {"description": description, "config": config,
+                      "fleet": dict(fleet), "server": dict(server or {})}
+    return _PRESETS[name]
+
+
+def list_fleet_presets():
+    """{name: one-line description} of every registered preset."""
+    return {name: spec["description"] for name, spec in _PRESETS.items()}
+
+
+def fleet_preset(name, **fleet_overrides):
+    """Resolve `name` to a fresh deployment spec.
+
+    Returns ``{"description", "config": QRDConfig, "fleet": {...},
+    "server": {...}}`` — copies, safe to mutate.  `fleet_overrides`
+    patch the fleet kwargs (e.g. ``slots=1 << 20`` to scale capacity).
+    """
+    try:
+        spec = _PRESETS[name]
+    except KeyError:
+        raise KeyError(f"unknown fleet preset {name!r}; available: "
+                       f"{', '.join(sorted(_PRESETS))}") from None
+    fleet = dict(spec["fleet"])
+    fleet.update(fleet_overrides)
+    return {"description": spec["description"], "config": spec["config"],
+            "fleet": fleet, "server": dict(spec["server"])}
+
+
+# -- the built-in deployments -------------------------------------------------
+# Per-user channel equalizers: short real filters, bit-accurate single-
+# precision unit (the paper's conventional IEEE-like datapath).
+register_fleet_preset(
+    "equalizer-ieee",
+    description="per-user equalizers, bit-accurate IEEE single CORDIC unit",
+    config=QRDConfig(backend="cordic", dtype="float64",
+                     givens=GivensConfig(fmt=SINGLE, hub=False)),
+    fleet=dict(slots=1 << 17, n=4, lam=0.995),
+    server=dict(batch=256, queue_limit=1 << 14),
+)
+
+# Same deployment on the HUB datapath (paper Sec. 4: cheaper rounding,
+# one extra micro-rotation of accuracy headroom).
+register_fleet_preset(
+    "equalizer-hub",
+    description="per-user equalizers on the HUB datapath",
+    config=QRDConfig(backend="cordic", dtype="float64",
+                     givens=GivensConfig(fmt=SINGLE, hub=True)),
+    fleet=dict(slots=1 << 17, n=4, lam=0.995),
+    server=dict(batch=256, queue_limit=1 << 14),
+)
+
+# Adaptive beamformers on complex baseband snapshots: the three-rotation
+# complex datapath (DESIGN.md §10) per antenna channel.
+register_fleet_preset(
+    "beamformer-complex",
+    description="complex baseband beamformers, three-rotation unit datapath",
+    config=QRDConfig(backend="cordic", dtype="complex128",
+                     givens=GivensConfig(fmt=SINGLE, hub=False)),
+    fleet=dict(slots=1 << 14, n=4, lam=0.99),
+    server=dict(batch=128, queue_limit=1 << 13),
+)
+
+# Float64 reference fleet: no unit emulation — the fastest CPU path and
+# the numerical reference the bit-accurate fleets are compared against.
+register_fleet_preset(
+    "equalizer-float64",
+    description="float64 conjugate-Givens reference fleet (fast CPU path)",
+    config=QRDConfig(backend="jnp", dtype="float64"),
+    fleet=dict(slots=1 << 17, n=4, lam=0.995),
+    server=dict(batch=512, queue_limit=1 << 14),
+)

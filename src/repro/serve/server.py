@@ -1,0 +1,385 @@
+"""`FleetServer` — the service layer over an `RLSFleet`.
+
+The fleet is a device-resident state machine; the server is everything a
+deployment needs around it:
+
+* **Cohorts** — filters are admitted in named cohorts occupying a
+  *contiguous* slot range (a tenant, a cell, a beam group).  Contiguity
+  makes a cohort a slice of every fleet buffer: checkpoints, queries and
+  eviction address ``[start, stop)`` without index lists, and the
+  sharded slot axis keeps a cohort on few shards.
+* **Async snapshot batching** — `submit` enqueues single ``(slot, x, d)``
+  snapshots into a bounded FIFO; `pump` drains it into fixed-shape
+  batches for the fleet's donated step.  Two invariants are enforced at
+  batch-assembly time: (a) slots are *distinct within a batch* (the
+  in-place scatter is unordered for duplicate indices — the second
+  snapshot for a slot waits for the next batch, preserving FIFO order
+  per slot), and (b) requests carrying a stale generation (their slot
+  was evicted/readmitted since submit) are dropped, never applied to the
+  recycled slot.  Batches are padded to a fixed size with the fleet's
+  sentinel slot id so one compilation serves the whole request stream.
+* **Backlog accounting** — per-cohort submitted/processed/dropped
+  counters; `health()` reports queue depth, occupancy and per-cohort
+  backlog, and flags stale cohorts via `runtime.cluster.ClusterMonitor`
+  (each cohort is a "host" in monitor terms: its heartbeat advances
+  whenever one of its snapshots is processed, so a cohort whose traffic
+  stalls or lags the fleet's step watermark shows up as dead/straggler).
+* **Checkpoint / restore** — `checkpoint()` snapshots the whole fleet
+  state plus the cohort table through `checkpoint.CheckpointManager`
+  (async, atomic, keep-last-k); `restore_latest()` reloads state *and*
+  re-populates the cohort table so serving resumes mid-stream with
+  bit-identical weights.
+
+Thread-safety: all public methods take one re-entrant lock; `submit`
+from request threads while another thread calls `pump` is supported.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import deque
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.runtime.cluster import ClusterMonitor
+from repro.serve.fleet import RLSFleet
+
+__all__ = ["Cohort", "FleetServer"]
+
+
+@dataclasses.dataclass
+class Cohort:
+    """A named contiguous slot range plus its traffic accounting."""
+
+    name: str
+    cid: int          # monitor host id
+    start: int        # first slot (inclusive)
+    stop: int         # last slot (exclusive)
+    submitted: int = 0
+    processed: int = 0
+    dropped_stale: int = 0
+    dropped_overflow: int = 0
+
+    @property
+    def size(self) -> int:
+        return self.stop - self.start
+
+    @property
+    def backlog(self) -> int:
+        """Snapshots accepted but not yet applied to the fleet."""
+        return (self.submitted - self.processed
+                - self.dropped_stale - self.dropped_overflow)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Request:
+    slot: int
+    x: np.ndarray
+    d: object
+    generation: int
+    cohort: str
+
+
+class FleetServer:
+    """Admit/evict/query/checkpoint cohorts of RLS filters over a fleet.
+
+    Parameters
+    ----------
+    fleet : RLSFleet
+        The state machine (``mode='block'`` fleets are not servable —
+        the queue batches single snapshots; use unit or float modes).
+    batch : int
+        Fixed snapshot-batch size for the donated step (short batches
+        are padded, never recompiled).
+    queue_limit : int
+        Bound on queued snapshots across all cohorts.
+    overflow : str
+        ``'raise'`` — `submit` raises when full; ``'drop'`` — the new
+        snapshot is dropped and counted against its cohort.
+    ckpt_dir : str, optional
+        Enables `checkpoint` / `restore_latest` via `CheckpointManager`.
+    keep : int
+        Checkpoints retained (keep-last-k).
+    max_cohorts : int
+        Monitor capacity (cohort ids are monitor host ids).
+    beat_timeout, lag_steps :
+        `ClusterMonitor` thresholds — a cohort with no processed
+        snapshot for `beat_timeout` seconds is "dead" (traffic stopped);
+        one whose last-processed server step trails the median by more
+        than `lag_steps` twice in a row is a straggler.
+    """
+
+    def __init__(self, fleet: RLSFleet, *, batch: int = 256,
+                 queue_limit: int = 4096, overflow: str = "raise",
+                 ckpt_dir: Optional[str] = None, keep: int = 3,
+                 max_cohorts: int = 64, beat_timeout: float = 60.0,
+                 lag_steps: int = 1000):
+        if fleet.mode == "block":
+            raise ValueError(
+                "FleetServer batches single snapshots; block-mode fleets "
+                "take stacked snapshot groups — drive them directly via "
+                "RLSFleet.update")
+        if overflow not in ("raise", "drop"):
+            raise ValueError(f"overflow must be 'raise' or 'drop', "
+                             f"got {overflow!r}")
+        if batch < 1 or queue_limit < batch:
+            raise ValueError("need batch >= 1 and queue_limit >= batch")
+        self.fleet = fleet
+        self.batch = int(batch)
+        self.queue_limit = int(queue_limit)
+        self.overflow = overflow
+        self.monitor = ClusterMonitor(max_cohorts, beat_timeout=beat_timeout,
+                                      lag_steps=lag_steps)
+        self.step = 0          # snapshot-batches pumped
+        self._queue: deque = deque()
+        self._cohorts: Dict[str, Cohort] = {}
+        self._lock = threading.RLock()
+        self._ckpt = None
+        if ckpt_dir is not None:
+            from repro.checkpoint.ckpt import CheckpointManager
+            self._ckpt = CheckpointManager(ckpt_dir, keep=keep)
+
+    # -- cohort lifecycle -----------------------------------------------------
+    def _free_range(self, size: int) -> int:
+        """First contiguous run of `size` free slots (first-fit)."""
+        occ = np.asarray(self.fleet.state.occupied)
+        start = 0
+        while start + size <= occ.size:
+            span = occ[start:start + size]
+            hits = np.flatnonzero(span)
+            if hits.size == 0:
+                return start
+            start += int(hits[-1]) + 1  # skip past the last conflict
+        raise RuntimeError(
+            f"no contiguous range of {size} free slots in a "
+            f"{occ.size}-slot fleet (occupancy {int(occ.sum())})")
+
+    def admit_cohort(self, name: str, size: int, *, lam=None,
+                     delta=None) -> Cohort:
+        """Admit `size` fresh filters as cohort `name` (contiguous slots)."""
+        with self._lock:
+            if name in self._cohorts:
+                raise ValueError(f"cohort {name!r} already admitted")
+            used = {c.cid for c in self._cohorts.values()}
+            free_cids = [i for i in range(self.monitor.n_hosts)
+                         if i not in used]
+            if not free_cids:
+                raise RuntimeError(f"max_cohorts={self.monitor.n_hosts} "
+                                   "cohorts already admitted")
+            start = self._free_range(size)
+            self.fleet.admit(slot_ids=np.arange(start, start + size),
+                             lam=lam, delta=delta)
+            cohort = Cohort(name=name, cid=free_cids[0], start=start,
+                            stop=start + size)
+            self._cohorts[name] = cohort
+            self.monitor.record_heartbeat(cohort.cid, self.step)
+            return cohort
+
+    def evict_cohort(self, name: str) -> Cohort:
+        """Evict a cohort: queued snapshots are dropped, slots freed."""
+        with self._lock:
+            cohort = self._cohort(name)
+            kept = deque()
+            for req in self._queue:
+                if req.cohort == name:
+                    cohort.dropped_stale += 1
+                else:
+                    kept.append(req)
+            self._queue = kept
+            self.fleet.evict(np.arange(cohort.start, cohort.stop))
+            del self._cohorts[name]
+            return cohort
+
+    def _cohort(self, name: str) -> Cohort:
+        try:
+            return self._cohorts[name]
+        except KeyError:
+            raise KeyError(f"unknown cohort {name!r}; admitted: "
+                           f"{sorted(self._cohorts)}") from None
+
+    def cohorts(self) -> List[Cohort]:
+        with self._lock:
+            return list(self._cohorts.values())
+
+    # -- request path ---------------------------------------------------------
+    def submit(self, name: str, member: int, x, d) -> bool:
+        """Enqueue one snapshot for cohort member `member` (0-based offset).
+
+        Returns True if accepted; False if dropped by the ``'drop'``
+        overflow policy.  Raises under ``'raise'`` when the queue is full.
+        """
+        with self._lock:
+            cohort = self._cohort(name)
+            if not 0 <= member < cohort.size:
+                raise IndexError(f"member {member} out of range for cohort "
+                                 f"{name!r} of size {cohort.size}")
+            cohort.submitted += 1
+            if len(self._queue) >= self.queue_limit:
+                if self.overflow == "raise":
+                    cohort.submitted -= 1
+                    raise RuntimeError(
+                        f"request queue full ({self.queue_limit}); "
+                        f"pump() or use overflow='drop'")
+                cohort.dropped_overflow += 1
+                return False
+            slot = cohort.start + member
+            gen = int(np.asarray(self.fleet.state.generation)[slot])
+            x = np.asarray(x)
+            if x.shape != (self.fleet.n,):
+                raise ValueError(f"snapshot x must have shape "
+                                 f"({self.fleet.n},), got {x.shape}")
+            self._queue.append(_Request(slot, x, d, gen, name))
+            return True
+
+    def submit_batch(self, name: str, members, X, d) -> int:
+        """Enqueue many snapshots for one cohort; returns accepted count."""
+        members = np.asarray(members).ravel()
+        X = np.asarray(X)
+        d = np.asarray(d).ravel()
+        ok = 0
+        for m, xi, di in zip(members, X, d):
+            ok += bool(self.submit(name, int(m), xi, di))
+        return ok
+
+    def _next_batch(self):
+        """Pop <= `batch` queued requests with distinct slots (FIFO per
+        slot), dropping stale-generation requests along the way."""
+        gen = np.asarray(self.fleet.state.generation)
+        taken, deferred, seen = [], [], set()
+        while self._queue and len(taken) < self.batch:
+            req = self._queue.popleft()
+            cohort = self._cohorts.get(req.cohort)
+            if cohort is None or gen[req.slot] != req.generation:
+                if cohort is not None:
+                    cohort.dropped_stale += 1
+                continue
+            if req.slot in seen:
+                deferred.append(req)  # second snapshot for a slot: next batch
+                continue
+            seen.add(req.slot)
+            taken.append(req)
+        self._queue.extendleft(reversed(deferred))
+        return taken
+
+    def pump(self, max_batches: Optional[int] = None) -> int:
+        """Drain the queue through the fleet's donated step.
+
+        Returns the number of snapshots applied.  Each batch advances
+        `step` and heartbeats every cohort it contained.
+        """
+        applied = 0
+        with self._lock:
+            while self._queue and (max_batches is None or max_batches > 0):
+                taken = self._next_batch()
+                if not taken:
+                    break
+                n, B = self.fleet.n, self.batch
+                pad = B - len(taken)
+                dt = self.fleet.dtype
+                slot_ids = np.fromiter(
+                    (r.slot for r in taken), dtype=np.int32, count=len(taken))
+                slot_ids = np.concatenate(
+                    [slot_ids, np.full(pad, self.fleet.slots, np.int32)])
+                X = np.zeros((B, n), dtype=dt)
+                d = np.zeros((B,), dtype=dt)
+                for i, r in enumerate(taken):
+                    X[i] = r.x
+                    d[i] = r.d
+                valid = np.arange(B) < len(taken)
+                self.fleet.update(slot_ids, X, d, valid=valid)
+                self.step += 1
+                for r in taken:
+                    self._cohorts[r.cohort].processed += 1
+                for cid in {self._cohorts[r.cohort].cid for r in taken}:
+                    self.monitor.record_heartbeat(cid, self.step)
+                applied += len(taken)
+                if max_batches is not None:
+                    max_batches -= 1
+        return applied
+
+    # -- query ----------------------------------------------------------------
+    def query(self, name: str, members=None, ridge: float = 1e-12):
+        """Weights for cohort members — ``(len(members), n)`` ndarray."""
+        with self._lock:
+            cohort = self._cohort(name)
+            if members is None:
+                members = np.arange(cohort.size)
+            members = np.asarray(members).ravel()
+            if members.size and (members.min() < 0
+                                 or members.max() >= cohort.size):
+                raise IndexError(f"members out of range for cohort "
+                                 f"{name!r} of size {cohort.size}")
+            return self.fleet.weights(cohort.start + members, ridge=ridge)
+
+    # -- health ---------------------------------------------------------------
+    def health(self, now: Optional[float] = None) -> dict:
+        """Occupancy, queue depth, per-cohort backlog, dead/stragglers."""
+        with self._lock:
+            by_cid = {c.cid: c.name for c in self._cohorts.values()}
+            dead = [by_cid[h] for h in self.monitor.dead_hosts(now)
+                    if h in by_cid]
+            lagging = [by_cid[h] for h in self.monitor.stragglers()
+                       if h in by_cid]
+            return {
+                "step": self.step,
+                "slots": self.fleet.slots,
+                "occupancy": self.fleet.occupancy,
+                "queue_depth": len(self._queue),
+                "cohorts": {c.name: {"size": c.size, "backlog": c.backlog,
+                                     "submitted": c.submitted,
+                                     "processed": c.processed,
+                                     "dropped_stale": c.dropped_stale,
+                                     "dropped_overflow": c.dropped_overflow}
+                            for c in self._cohorts.values()},
+                "dead_cohorts": dead,
+                "straggler_cohorts": lagging,
+            }
+
+    # -- checkpoint / restore -------------------------------------------------
+    def _require_ckpt(self):
+        if self._ckpt is None:
+            raise RuntimeError("server was built without ckpt_dir=")
+        return self._ckpt
+
+    def _extra(self) -> dict:
+        return {"server_step": self.step,
+                "cohorts": [c.as_dict() for c in self._cohorts.values()]}
+
+    def checkpoint(self, wait: bool = False):
+        """Async whole-fleet checkpoint (state + cohort table)."""
+        mgr = self._require_ckpt()
+        with self._lock:
+            mgr.save_async(self.step, self.fleet.state, extra=self._extra())
+        if wait:
+            mgr.wait()
+
+    def restore_latest(self) -> Optional[int]:
+        """Restore the newest checkpoint: fleet state AND cohort table.
+
+        Returns the restored server step, or None if no checkpoint exists.
+        Queued (pre-restore) requests are cleared — their generations no
+        longer describe the restored fleet.
+        """
+        mgr = self._require_ckpt()
+        with self._lock:
+            step, tree, extra = mgr.restore_latest(self.fleet.template())
+            if step is None:
+                return None
+            self.fleet.load_state(tree)
+            self._queue.clear()
+            self._cohorts = {}
+            for c in extra.get("cohorts", []):
+                cohort = Cohort(**c)
+                self._cohorts[cohort.name] = cohort
+                self.monitor.record_heartbeat(cohort.cid, self.step)
+            self.step = int(extra.get("server_step", step))
+            return self.step
+
+    def wait(self):
+        """Block until any in-flight checkpoint lands (surfaces errors)."""
+        if self._ckpt is not None:
+            self._ckpt.wait()

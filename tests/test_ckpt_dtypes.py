@@ -1,0 +1,86 @@
+"""Checkpoint dtype integrity: exact round-trips, no silent casts.
+
+Fleet serving state mixes complex128 `[R | z]` work arrays, packed-int64
+Givens words, occupancy bools and int32 counters in one pytree; the
+checkpoint layer must restore every leaf with its exact dtype and bit
+pattern, and refuse a template whose dtype disagrees with what was saved
+(the pre-ISSUE-8 behavior was a silent ``asarray(..., dtype=template)``
+cast — imaginary parts dropped, packed words destroyed).
+
+Separate from test_substrate.py so these run without the `hypothesis`
+dev extra, plus `SyntheticTraffic` determinism (same reason).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import repro  # noqa: F401  (x64 guard)
+from repro.checkpoint import restore_pytree, save_pytree
+from repro.data.pipeline import SyntheticTraffic
+
+
+def test_checkpoint_dtype_tags_roundtrip_exactly(tmp_path):
+    """complex64/128 and packed-int64 leaves restore with their exact
+    dtype and bit patterns (the fleet-state checkpointing contract)."""
+    d = str(tmp_path / "ckpt")
+    tree = {
+        "work_c128": jnp.asarray(np.arange(6).reshape(2, 3)
+                                 + 1j * np.arange(6).reshape(2, 3),
+                                 jnp.complex128),
+        "snap_c64": jnp.asarray([1 + 2j, 3 - 4j], jnp.complex64),
+        # packed Givens words: sign bit set, full 64-bit patterns
+        "packed": jnp.asarray(np.array([-(2 ** 62), 2 ** 62 + 1, -1]),
+                              jnp.int64),
+        "f32": jnp.ones((2,), jnp.float32),
+    }
+    save_pytree(d, 1, tree)
+    out, _ = restore_pytree(d, 1, tree)
+    for key, leaf in tree.items():
+        assert out[key].dtype == leaf.dtype, key
+        np.testing.assert_array_equal(np.asarray(out[key]), np.asarray(leaf))
+
+
+def test_checkpoint_packed_words_survive_via_unit_encode(tmp_path):
+    """Bit-accuracy end to end: words packed by the real GivensUnit come
+    back identical, so a packed-domain checkpoint is exactly resumable."""
+    from repro.core import GivensConfig, GivensUnit
+
+    unit = GivensUnit(GivensConfig(hub=True))
+    words = unit.encode(jnp.asarray(np.random.default_rng(5)
+                                    .normal(size=(3, 4))))
+    assert words.dtype == jnp.int64
+    d = str(tmp_path / "ckpt")
+    save_pytree(d, 7, {"P": words})
+    out, _ = restore_pytree(d, 7, {"P": words})
+    np.testing.assert_array_equal(np.asarray(out["P"]), np.asarray(words))
+
+
+def test_checkpoint_refuses_silent_dtype_change(tmp_path):
+    """A dtype mismatch between checkpoint and template raises instead of
+    silently casting (complex -> real would drop the imaginary parts;
+    packed int64 -> float would destroy the bit patterns)."""
+    d = str(tmp_path / "ckpt")
+    save_pytree(d, 1, {"w": jnp.asarray([1 + 1j], jnp.complex128)})
+    with pytest.raises(TypeError, match="refusing to silently convert"):
+        restore_pytree(d, 1, {"w": jnp.zeros(1, jnp.float64)})
+    save_pytree(d, 2, {"w": jnp.asarray([7], jnp.int64)})
+    with pytest.raises(TypeError, match="saved as int64"):
+        restore_pytree(d, 2, {"w": jnp.zeros(1, jnp.float32)})
+    # matching template still restores (exact dtype, not a cast)
+    tree, _ = restore_pytree(d, 2, {"w": jnp.zeros(1, jnp.int64)})
+    assert tree["w"].dtype == jnp.int64 and int(tree["w"][0]) == 7
+
+
+def test_traffic_deterministic_and_observes_hidden_channels():
+    tr = SyntheticTraffic(users=32, n=4, per_step=16, seed=9, snr_db=200.0)
+    a, b = tr.batch(3), tr.batch(3)
+    np.testing.assert_array_equal(np.asarray(a["user"]), np.asarray(b["user"]))
+    np.testing.assert_array_equal(np.asarray(a["x"]), np.asarray(b["x"]))
+    # at 200 dB SNR the desired response is the clean channel output
+    w = np.stack([np.asarray(tr.channel(int(u))) for u in a["user"]])
+    np.testing.assert_allclose(np.asarray(a["d"]),
+                               np.einsum("bn,bn->b", np.asarray(a["x"]), w),
+                               rtol=1e-8)
+    # complex traffic is complex end to end
+    trc = SyntheticTraffic(users=8, n=3, per_step=4, complex_dtype=True)
+    assert np.asarray(trc.batch(0)["d"]).dtype.kind == "c"

@@ -82,6 +82,53 @@ def test_rls_validation():
         st.update(np.ones(3), 1.0)
 
 
+@pytest.mark.parametrize("lam", [0.0, -0.5, 1.0001, float("nan")])
+def test_rls_lam_validated_at_every_entry_point(lam):
+    """No entry point may accept a non-positive (or >1, or NaN) λ: the √λ
+    weighting would silently destroy the carried factor."""
+    with pytest.raises(ValueError, match="forgetting"):
+        api.RLSState(4, lam=lam)
+    with pytest.raises(ValueError, match="forgetting"):
+        api.QRDEngine(backend="jnp").rls(4, lam=lam)
+    with pytest.raises(ValueError, match="forgetting"):
+        api.QRDEngine(backend="jnp").fleet(8, 4, lam=lam)
+    # ... and lam=1.0 (no forgetting) remains legal
+    assert api.RLSState(4, lam=1.0).lam == 1.0
+
+
+def test_rls_to_from_arrays_roundtrip_including_pending():
+    """to_arrays/from_arrays: the pure-pytree export carries the block
+    mode's partial-flush buffer, so a mid-block state survives the trip."""
+    n = 3
+    w_true = RNG.normal(size=n)
+    st = _drive(api.RLSState(n, lam=0.9, mode="block", block=4), w_true, 6)
+    assert len(st._pending) == 2
+    arrays = st.to_arrays()
+    assert arrays["pending"].shape == (4, n + 1)       # fixed-shape pytree
+    assert int(arrays["pending_count"]) == 2
+    clone = api.RLSState(n, lam=0.5, mode="block", block=4)
+    clone.from_arrays(arrays)
+    assert clone.lam == 0.9 and clone.updates == st.updates
+    # identical futures: one more snapshot then a flush, bit for bit
+    x, d = RNG.normal(size=n), RNG.normal()
+    st.update(x, d).flush()
+    clone.update(x, d).flush()
+    np.testing.assert_array_equal(st.R, clone.R)
+    np.testing.assert_array_equal(st.z, clone.z)
+    # unblocked modes export an empty (0, n+1) buffer
+    flat = api.RLSState(n, mode="float")
+    flat.update(np.ones(n), 1.0)
+    again = api.RLSState(n, mode="float").from_arrays(flat.to_arrays())
+    np.testing.assert_array_equal(again.R, flat.R)
+    # a pending-carrying export cannot enter a mode with no buffer
+    with pytest.raises(ValueError, match="pending"):
+        api.RLSState(n, mode="float").from_arrays(arrays)
+    bad = dict(arrays)
+    bad["lam"] = np.float64(-1.0)
+    with pytest.raises(ValueError, match="forgetting"):
+        api.RLSState(n, mode="block", block=4).from_arrays(bad)
+
+
 def _load_beamforming():
     path = os.path.join(os.path.dirname(__file__), "..", "examples",
                         "adaptive_beamforming.py")

@@ -1,0 +1,238 @@
+"""RLSFleet semantics: slot lifecycle, donation, bit-parity with RLSState.
+
+The fleet's contract (DESIGN.md §12) is that it is *nothing but* N
+`RLSState` objects in one pytree: an occupied slot driven through
+`fleet.update` must be **bit-identical** to an independently driven
+single state on the bit-accurate paths (IEEE + HUB + complex — the
+acceptance criterion of ISSUE 8), slots not addressed by a batch must
+not change by a single bit, and the donated step must actually donate
+(input buffers deleted — zero per-step reallocation).
+"""
+import numpy as np
+import pytest
+
+import repro  # noqa: F401  (x64 guard)
+from repro.core import GivensConfig, GivensUnit
+from repro.qrd.rls import RLSState
+from repro.serve import RLSFleet
+
+RNG = np.random.default_rng(77)
+
+
+def _traffic(B, n, steps, complex_dtype=False, seed=5):
+    rng = np.random.default_rng(seed)
+    for _ in range(steps):
+        X = rng.normal(size=(B, n))
+        d = rng.normal(size=B)
+        if complex_dtype:
+            X = X + 1j * rng.normal(size=(B, n))
+            d = d + 1j * rng.normal(size=B)
+        yield X, d
+
+
+def _parity_case(mode, *, hub=False, complex_dtype=False, steps=4):
+    """Half-occupied 12-slot fleet vs independent per-slot RLSState refs."""
+    n, B = 4, 6
+    dtype = "complex128" if complex_dtype else "float64"
+    kw = {}
+    if mode == "unit":
+        kw["unit"] = GivensUnit(GivensConfig(hub=hub))
+    fleet = RLSFleet(12, n, mode=mode, lam=0.97, dtype=dtype, **kw)
+    ids = fleet.admit(B)                       # half-occupied: 6 of 12
+    refs = [RLSState(n, lam=0.97, mode=mode, dtype=dtype, **kw)
+            for _ in range(B)]
+    before = np.asarray(fleet.state.work).copy()
+    for X, d in _traffic(B, n, steps, complex_dtype):
+        fleet.update(ids, X, d)
+        for i, ref in enumerate(refs):
+            ref.update(X[i], d[i])
+    # untouched (unadmitted) slots: not one bit moved
+    after = np.asarray(fleet.state.work)
+    untouched = np.setdiff1d(np.arange(12), ids)
+    np.testing.assert_array_equal(after[untouched], before[untouched])
+    return fleet, ids, refs
+
+
+@pytest.mark.parametrize("hub", [False, True], ids=["ieee", "hub"])
+def test_fleet_unit_mode_bit_identical_to_states(hub):
+    fleet, ids, refs = _parity_case("unit", hub=hub)
+    for i, ref in enumerate(refs):
+        exported = fleet.export_state(int(ids[i]))
+        np.testing.assert_array_equal(exported["R"], ref.R)
+        np.testing.assert_array_equal(exported["z"], ref.z)
+        np.testing.assert_array_equal(fleet.weights([ids[i]])[0],
+                                      ref.weights())
+
+
+@pytest.mark.slow   # three-rotation complex annihilation compile (~1 min)
+def test_fleet_complex_unit_mode_bit_identical_to_states():
+    fleet, ids, refs = _parity_case("unit", complex_dtype=True)
+    for i, ref in enumerate(refs):
+        exported = fleet.export_state(int(ids[i]))
+        assert exported["R"].dtype == np.complex128
+        np.testing.assert_array_equal(exported["R"], ref.R)
+        np.testing.assert_array_equal(exported["z"], ref.z)
+
+
+@pytest.mark.parametrize("complex_dtype", [False, True],
+                         ids=["real", "complex"])
+def test_fleet_float_mode_matches_states(complex_dtype):
+    # float mode: jnp vs numpy elementary ops — allclose, not bit-equal
+    fleet, ids, refs = _parity_case("float", complex_dtype=complex_dtype)
+    for i, ref in enumerate(refs):
+        exported = fleet.export_state(int(ids[i]))
+        np.testing.assert_allclose(exported["R"], ref.R,
+                                   rtol=1e-12, atol=1e-13)
+        np.testing.assert_allclose(exported["z"], ref.z,
+                                   rtol=1e-12, atol=1e-13)
+
+
+@pytest.mark.slow   # kernel-resident block annihilation compile
+def test_fleet_block_mode_matches_states():
+    n, B, blk = 4, 3, 4
+    fleet = RLSFleet(8, n, mode="block", block=blk, lam=0.97)
+    ids = fleet.admit(B)
+    refs = [RLSState(n, lam=0.97, mode="block", block=blk) for _ in range(B)]
+    rng = np.random.default_rng(3)
+    for _ in range(3):
+        X = rng.normal(size=(B, blk, n))
+        d = rng.normal(size=(B, blk))
+        fleet.update(ids, X, d)
+        for i, ref in enumerate(refs):
+            for j in range(blk):
+                ref.update(X[i, j], d[i, j])
+    for i, ref in enumerate(refs):
+        exported = fleet.export_state(int(ids[i]))
+        assert int(exported["updates"]) == ref.updates == 3 * blk
+        np.testing.assert_allclose(exported["R"], ref.R,
+                                   rtol=1e-10, atol=1e-12)
+
+
+def test_fleet_update_donates_previous_state():
+    """The jitted step must reuse the input buffers — zero reallocation."""
+    fleet = RLSFleet(32, 4, mode="float")
+    ids = fleet.admit(4)
+    for _ in range(3):
+        prev = fleet.state
+        fleet.update(ids, RNG.normal(size=(4, 4)), RNG.normal(size=4))
+        assert all(leaf.is_deleted() for leaf in prev), \
+            "donated input buffers still alive — the step reallocated"
+
+
+def test_fleet_admit_evict_reuse_and_generations():
+    fleet = RLSFleet(6, 3, mode="float", lam=0.9, delta=0.5)
+    ids = fleet.admit(4)
+    np.testing.assert_array_equal(ids, [0, 1, 2, 3])
+    gen0 = fleet.generation_of(ids)
+    fleet.update(ids, RNG.normal(size=(4, 3)), RNG.normal(size=4))
+    fleet.evict([1, 2])
+    assert fleet.occupancy == 2
+    # freed slots are reused lowest-first and come back *reset*
+    ids2 = fleet.admit(2, lam=0.8)
+    np.testing.assert_array_equal(ids2, [1, 2])
+    exported = fleet.export_state(1)
+    np.testing.assert_array_equal(exported["R"], 0.5 * np.eye(3))
+    assert float(exported["lam"]) == 0.8 and int(exported["updates"]) == 0
+    # evict+admit bumped the generation twice
+    np.testing.assert_array_equal(fleet.generation_of([1, 2]),
+                                  gen0[1:3] + 2)
+    # full-fleet admit overflow and double-admit both refuse
+    with pytest.raises(RuntimeError, match="fleet full"):
+        fleet.admit(3)
+    with pytest.raises(ValueError, match="occupied"):
+        fleet.admit(slot_ids=[0])
+    with pytest.raises(ValueError, match="unoccupied"):
+        fleet.evict([5])
+
+
+def test_fleet_masks_unoccupied_and_invalid_entries():
+    fleet = RLSFleet(8, 3, mode="float")
+    ids = fleet.admit(2)
+    before = np.asarray(fleet.state.work).copy()
+    # slot 5 unoccupied, sentinel 8 out of range, entry 1 invalid
+    slot_ids = np.array([ids[0], ids[1], 5, fleet.slots])
+    valid = np.array([True, False, True, False])
+    fleet.update(slot_ids, RNG.normal(size=(4, 3)), RNG.normal(size=4),
+                 valid=valid)
+    after = np.asarray(fleet.state.work)
+    assert not np.array_equal(after[ids[0]], before[ids[0]])  # applied
+    np.testing.assert_array_equal(after[1:], before[1:])      # all others
+    np.testing.assert_array_equal(np.asarray(fleet.state.updates),
+                                  [1, 0, 0, 0, 0, 0, 0, 0])
+
+
+def test_fleet_state_interop_with_rls_state():
+    """export_state/import_state speak RLSState.to_arrays' schema."""
+    state = RLSState(4, lam=0.93, mode="float")
+    for X, d in _traffic(1, 4, 5):
+        state.update(X[0], d[0])
+    fleet = RLSFleet(4, 4, mode="float")
+    slot = fleet.import_state(2, state.to_arrays())
+    np.testing.assert_array_equal(fleet.weights([slot])[0], state.weights())
+    roundtrip = RLSState(4, mode="float").from_arrays(fleet.export_state(slot))
+    np.testing.assert_array_equal(roundtrip.R, state.R)
+    assert roundtrip.lam == 0.93 and roundtrip.updates == 5
+    # pending snapshots must be flushed before entering the fleet
+    blocked = RLSState(3, mode="block", block=4)
+    blocked.update(np.ones(3), 1.0)
+    small = RLSFleet(2, 3, mode="float")
+    with pytest.raises(ValueError, match="pending"):
+        small.import_state(0, blocked.to_arrays())
+
+
+def test_fleet_validation_errors():
+    unit = GivensUnit(GivensConfig())
+    with pytest.raises(ValueError, match="forgetting"):
+        RLSFleet(4, 3, mode="float", lam=0.0)
+    with pytest.raises(ValueError, match="GivensUnit"):
+        RLSFleet(4, 3, mode="unit")
+    with pytest.raises(TypeError, match="complex"):
+        RLSFleet(4, 3, mode="block", dtype="complex128")
+    fleet = RLSFleet(4, 3, mode="unit", unit=unit)
+    ids = fleet.admit(2)
+    with pytest.raises(TypeError, match="complex"):
+        fleet.update(ids, np.ones((2, 3)) + 1j, np.ones(2))
+    with pytest.raises(ValueError, match="duplicate"):
+        fleet.evict([0, 0])
+    with pytest.raises(ValueError, match=r"shape"):
+        fleet.update(ids, np.ones((2, 5)), np.ones(2))
+    with pytest.raises(ValueError, match="forgetting"):
+        fleet.admit(slot_ids=[3], lam=-1.0)
+
+
+def test_fleet_checkpoint_template_roundtrip(tmp_path):
+    """Fleet state -> CheckpointManager -> load_state, bit-exact (incl.
+    the strict dtype tags of checkpoint/ckpt.py)."""
+    from repro.checkpoint import CheckpointManager
+
+    fleet = RLSFleet(16, 4, mode="float", dtype="complex128")
+    ids = fleet.admit(5)
+    for X, d in _traffic(5, 4, 3, complex_dtype=True):
+        fleet.update(ids, X, d)
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save_async(1, fleet.state, extra={"note": "mid-stream"})
+    mgr.wait()
+    saved = np.asarray(fleet.state.work).copy()
+    for X, d in _traffic(5, 4, 2, complex_dtype=True):   # keep serving
+        fleet.update(ids, X, d)
+    step, tree, extra = mgr.restore_latest(fleet.template())
+    fleet.load_state(tree)
+    assert step == 1 and extra["note"] == "mid-stream"
+    np.testing.assert_array_equal(np.asarray(fleet.state.work), saved)
+    assert np.asarray(fleet.state.work).dtype == np.complex128
+
+
+def test_fleet_slot_spec_shards_slot_axis():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.sharding import fleet_slot_spec
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 4, "model": 2}
+
+    mesh = FakeMesh()
+    assert fleet_slot_spec(3, 128, mesh) == P(("data",), None, None)
+    assert fleet_slot_spec(1, 128, mesh) == P(("data",))
+    # indivisible slot counts replicate instead of failing jit divisibility
+    assert fleet_slot_spec(3, 127, mesh) == P(None, None, None)

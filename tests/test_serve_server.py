@@ -1,0 +1,158 @@
+"""FleetServer semantics: cohorts, the bounded async queue, checkpoint.
+
+The server's contracts: cohorts are contiguous and recycle their ranges;
+the batcher never puts two snapshots for one slot in the same scatter
+(FIFO per slot) and never applies a request to a recycled slot (stale
+generation); the bounded queue enforces its overflow policy with
+per-cohort accounting; checkpoint → evict → restore resumes serving with
+bit-identical weights and an intact cohort table.
+"""
+import numpy as np
+import pytest
+
+import repro  # noqa: F401  (x64 guard)
+from repro.qrd import QRDConfig, QRDEngine
+from repro.qrd.rls import RLSState
+from repro.serve import (FleetServer, RLSFleet, fleet_preset,
+                         list_fleet_presets)
+
+RNG = np.random.default_rng(11)
+
+
+def _server(slots=32, n=3, batch=4, **kw):
+    return FleetServer(RLSFleet(slots, n, mode="float"), batch=batch,
+                       queue_limit=kw.pop("queue_limit", 64), **kw)
+
+
+def test_cohorts_are_contiguous_and_ranges_recycle():
+    srv = _server(slots=16)
+    a = srv.admit_cohort("a", 6)
+    b = srv.admit_cohort("b", 6)
+    assert (a.start, a.stop, b.start, b.stop) == (0, 6, 6, 12)
+    srv.evict_cohort("a")
+    c = srv.admit_cohort("c", 4)        # first-fit into a's freed range
+    assert (c.start, c.stop) == (0, 4)
+    with pytest.raises(RuntimeError, match="contiguous"):
+        srv.admit_cohort("huge", 9)     # 2 + 4 free, but not contiguous
+    with pytest.raises(ValueError, match="already admitted"):
+        srv.admit_cohort("b", 1)
+    with pytest.raises(KeyError, match="unknown cohort"):
+        srv.submit("ghost", 0, np.zeros(3), 0.0)
+
+
+def test_queue_overflow_policies_and_accounting():
+    srv = _server(batch=2, queue_limit=2, overflow="drop")
+    srv.admit_cohort("c", 4)
+    assert srv.submit("c", 0, np.zeros(3), 1.0)
+    assert srv.submit("c", 1, np.zeros(3), 1.0)
+    assert not srv.submit("c", 2, np.zeros(3), 1.0)   # full -> dropped
+    stats = srv.health()["cohorts"]["c"]
+    assert stats["dropped_overflow"] == 1 and stats["backlog"] == 2
+    assert srv.pump() == 2
+    assert srv.health()["cohorts"]["c"]["backlog"] == 0
+
+    strict = _server(batch=2, queue_limit=2, overflow="raise")
+    strict.admit_cohort("c", 4)
+    strict.submit("c", 0, np.zeros(3), 1.0)
+    strict.submit("c", 1, np.zeros(3), 1.0)
+    with pytest.raises(RuntimeError, match="queue full"):
+        strict.submit("c", 2, np.zeros(3), 1.0)
+    # a refused submit is not counted as submitted traffic
+    assert strict.health()["cohorts"]["c"]["submitted"] == 2
+
+
+def test_duplicate_slot_snapshots_apply_in_fifo_order():
+    """5 snapshots for ONE slot arrive in one pump: the batcher must
+    serialize them across batches, reproducing the single-state stream."""
+    srv = _server(slots=8, n=4, batch=4)
+    srv.admit_cohort("c", 2)
+    ref = RLSState(4, lam=0.99, mode="float")
+    for _ in range(5):
+        x, d = RNG.normal(size=4), RNG.normal()
+        srv.submit("c", 0, x, d)
+        ref.update(x, d)
+    assert srv.pump() == 5
+    assert srv.step == 5        # one live snapshot per batch here
+    np.testing.assert_allclose(srv.query("c", [0])[0], ref.weights(),
+                               rtol=1e-12, atol=1e-13)
+
+
+def test_stale_generation_requests_are_dropped():
+    srv = _server(slots=8)
+    srv.admit_cohort("a", 4)
+    srv.submit("a", 0, np.ones(3), 1.0)
+    srv.evict_cohort("a")                   # queued request now stale
+    b = srv.admit_cohort("b", 4)            # recycles the same slots
+    assert (b.start, b.stop) == (0, 4)
+    before = np.asarray(srv.fleet.state.work).copy()
+    assert srv.pump() == 0                  # nothing may touch slot 0
+    np.testing.assert_array_equal(np.asarray(srv.fleet.state.work), before)
+
+
+def test_checkpoint_evict_restore_resumes_bit_identically(tmp_path):
+    srv = _server(slots=16, n=4, batch=4, ckpt_dir=str(tmp_path))
+    srv.admit_cohort("a", 8)
+    srv.admit_cohort("b", 4)
+    for step in range(6):
+        srv.submit_batch("a", np.arange(4), RNG.normal(size=(4, 4)),
+                         RNG.normal(size=4))
+        srv.pump()
+    srv.checkpoint(wait=True)
+    w_served = srv.query("a")
+    step_at = srv.step
+    # keep serving past the checkpoint, then lose the cohort entirely
+    srv.submit_batch("a", np.arange(4), RNG.normal(size=(4, 4)),
+                     RNG.normal(size=4))
+    srv.pump()
+    srv.evict_cohort("a")
+    assert srv.restore_latest() == step_at
+    # cohort table AND weights come back exactly as checkpointed
+    assert sorted(c.name for c in srv.cohorts()) == ["a", "b"]
+    np.testing.assert_array_equal(srv.query("a"), w_served)
+    stats = srv.health()["cohorts"]["a"]
+    assert stats["backlog"] == 0 and stats["processed"] == stats["submitted"]
+
+
+def test_health_reports_dead_cohorts_via_monitor():
+    srv = _server(beat_timeout=10.0)
+    srv.admit_cohort("live", 4)
+    srv.admit_cohort("quiet", 4)
+    srv.monitor.record_heartbeat(srv._cohorts["live"].cid, 0, now=100.0)
+    srv.monitor.record_heartbeat(srv._cohorts["quiet"].cid, 0, now=50.0)
+    health = srv.health(now=100.0)
+    assert health["dead_cohorts"] == ["quiet"]
+    assert health["occupancy"] == 8 and health["queue_depth"] == 0
+
+
+def test_server_rejects_block_mode_fleets():
+    with pytest.raises(ValueError, match="block"):
+        FleetServer(RLSFleet(4, 3, mode="block"))
+
+
+def test_presets_resolve_and_config_json_roundtrips():
+    presets = list_fleet_presets()
+    assert {"equalizer-ieee", "equalizer-hub", "beamformer-complex",
+            "equalizer-float64"} <= set(presets)
+    for name in presets:
+        spec = fleet_preset(name, slots=8)
+        cfg = spec["config"]
+        assert QRDConfig.from_json(cfg.to_json()) == cfg
+        assert spec["fleet"]["slots"] == 8          # override applied
+        assert "batch" in spec["server"]
+    with pytest.raises(KeyError, match="unknown fleet preset"):
+        fleet_preset("nope")
+    # from_dict is strict about unknown fields
+    with pytest.raises(ValueError, match="unknown QRDConfig field"):
+        QRDConfig.from_dict({"backend": "jnp", "warp_speed": 9})
+
+
+def test_engine_fleet_factory_routes_like_rls():
+    eng = QRDEngine(backend="cordic", dtype="complex128")
+    fleet = eng.fleet(8, 3)
+    assert fleet.mode == "unit" and fleet.is_complex
+    assert QRDEngine(backend="jnp").fleet(8, 3).mode == "float"
+    assert QRDEngine(backend="jnp").fleet(8, 3, block=2).mode == "block"
+    with pytest.raises(TypeError, match="complex"):
+        eng.fleet(8, 3, block=2)
+    with pytest.raises(ValueError, match="forgetting"):
+        QRDEngine(backend="jnp").fleet(8, 3, lam=1.5)
