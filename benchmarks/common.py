@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (GivensConfig, GivensUnit, qr_cordic, qr_fixed,
-                        qr_givens_float, qr_jnp, snr_db)
+                        qr_jnp, snr_db)
 
 N_SAMPLES = int(os.environ.get("REPRO_BENCH_SAMPLES", "2000"))
 R_SET = tuple(int(x) for x in os.environ.get(

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 from repro.core import GivensConfig
 
-from .common import N_SAMPLES, csv_row, gen_matrices, snr_cordic, snr_reference, timed
+from .common import N_SAMPLES, csv_row, gen_matrices, snr_cordic, snr_reference
 
 
 def main(full=False):

@@ -68,7 +68,6 @@ def measured_throughput(cfg: GivensConfig, batch=2048, e=8):
     P = unit.encode(jnp.asarray(A))
     rows = P.reshape(batch * 2, -1)  # fake (x,y) rows of length e/2... use 4x4
 
-    import functools
     @jax.jit
     def rot(P):
         x = P[..., 0, :]

@@ -15,7 +15,7 @@ Layout:
     repro.data      deterministic shardable data pipeline
     repro.checkpoint, repro.runtime   fault-tolerance substrate
     repro.configs   per-architecture configs (--arch selectable)
-    repro.launch    mesh / dryrun / train / serve entry points
+    repro.launch    mesh / dryrun / serve entry points
 
 x64 requirement
 ---------------

@@ -1,0 +1,47 @@
+"""Static-analysis layer: bit-width dataflow verifier + JAX/Pallas linter.
+
+The paper's core contribution is a *static* argument — an error/bit-width
+analysis proving that the Givens datapath widths (mantissa + guard bits,
+HUB rounding, the w = N+2 CORDIC growth margin) are sufficient.  This
+package is that argument's software analogue, plus a linter for the
+JAX/Pallas hazard classes this repo has actually been burned by:
+
+``repro.analysis.bitflow``
+    Abstract interpreter (value-range + known-bits domains, `domain.py`)
+    that symbolically executes the packed-word dataflow of
+    `core/formats.py`, `core/converters.py`, `core/cordic.py` and the
+    dual-int32 lane primitives of `kernels/packed_lanes.py`, proving per
+    operation that field occupancy stays inside the word — no mantissa or
+    guard-bit overflow, no carry bleed across the (hi, lo) lane boundary,
+    RNE sticky bits confined to their field.  Emits a machine-readable
+    report of proven widths vs the format constants (the software version
+    of the paper's Tables 1-4).
+
+``repro.analysis.lint``
+    AST rules grounded in this repo's bug history (DESIGN.md §13):
+    traced-array capture by `pallas_call` kernel closures (PR 5), host
+    round-trips on tracers inside jit/scan bodies, implicit narrowing
+    casts outside the blessed encode/decode boundaries (PR 4), unguarded
+    potentially-duplicate scatters (PR 6), donated-buffer reuse, and
+    unhashable jit statics.
+
+``repro.analysis.deadcode``
+    Import-graph reachability over src/tests/examples/benchmarks (plus
+    CI workflows for `-m` entry points and string-literal dynamic
+    imports): modules nobody references.
+
+``python -m repro.analysis src/`` runs everything; findings not in the
+checked-in allowlist (`allowlist.txt`, one justified line per waiver)
+fail the run — the CI `lint` lane enforces exit 0.
+"""
+from __future__ import annotations
+
+from .bitflow import BitflowReport, verify_all, verify_config
+from .lint import Finding, lint_paths
+from .allowlist import Allowlist, load_allowlist
+
+__all__ = [
+    "BitflowReport", "verify_all", "verify_config",
+    "Finding", "lint_paths",
+    "Allowlist", "load_allowlist",
+]

@@ -1,0 +1,139 @@
+"""CLI: ``python -m repro.analysis [paths...]``.
+
+Runs all three engines and exits non-zero on any unwaived finding or
+failed bitflow obligation (the CI `lint` lane's contract):
+
+- bitflow: proves the packed Givens datapath widths for every paper
+  configuration (skip with ``--no-bitflow``);
+- lint: the JAX/Pallas hazard rules over the given paths;
+- deadcode: unreferenced-module scan (runs when a scanned path contains
+  the `repro` package root, i.e. the default ``src`` sweep).
+
+``--report FILE`` writes the machine-readable JSON report (proven
+widths vs format capacities + findings).  ``--emit-allowlist`` prints
+ready-to-paste allowlist lines for the current active findings.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from .allowlist import AllowlistError, load_allowlist
+from .bitflow import verify_all
+from .deadcode import find_dead_modules
+from .lint import lint_paths
+
+
+def _find_repo_root(start: str) -> str:
+    cur = os.path.abspath(start)
+    while True:
+        if os.path.isdir(os.path.join(cur, "src", "repro")):
+            return cur
+        parent = os.path.dirname(cur)
+        if parent == cur:
+            return os.path.abspath(start)
+        cur = parent
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="bit-width dataflow verifier + JAX/Pallas hazard linter")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/directories to lint (default: src)")
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: auto-detected)")
+    ap.add_argument("--allowlist", default=None,
+                    help="allowlist file (default: the checked-in one)")
+    ap.add_argument("--report", default=None, metavar="FILE",
+                    help="write JSON report here")
+    ap.add_argument("--emit-allowlist", action="store_true",
+                    help="print allowlist lines for active findings")
+    ap.add_argument("--no-bitflow", action="store_true")
+    ap.add_argument("--no-lint", action="store_true")
+    ap.add_argument("--no-deadcode", action="store_true")
+    ap.add_argument("--allow-stale", action="store_true",
+                    help="do not fail on allowlist entries matching nothing")
+    args = ap.parse_args(argv)
+
+    root = os.path.abspath(args.root) if args.root else _find_repo_root(".")
+    paths = args.paths or ["src"]
+    rc = 0
+
+    # -- bitflow --------------------------------------------------------------
+    report_json: dict = {}
+    if not args.no_bitflow:
+        rep = verify_all()
+        report_json["bitflow"] = rep.as_dict()
+        for line in rep.summary_lines():
+            print(line)
+        if not rep.ok:
+            rc = 1  # summary_lines already printed each failed obligation
+        print()
+
+    # -- lint + deadcode ------------------------------------------------------
+    findings = []
+    if not args.no_lint:
+        findings.extend(lint_paths(paths, root))
+    if not args.no_deadcode:
+        scans_repro_root = any(
+            os.path.isdir(os.path.join(root, p, "repro"))
+            or os.path.basename(os.path.normpath(p)) == "src"
+            for p in paths)
+        if scans_repro_root:
+            findings.extend(find_dead_modules(root))
+
+    try:
+        allow = load_allowlist(args.allowlist)
+    except AllowlistError as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
+    active, waived, stale = allow.split(findings)
+
+    for f in active:
+        print(f.render())
+    if active:
+        rc = 1
+        print(f"\n{len(active)} finding(s) not in the allowlist "
+              f"({allow.path}).")
+        if args.emit_allowlist:
+            print("\n# candidate allowlist lines (justify each!):")
+            for f in active:
+                print(f"{f.fingerprint}  # TODO: why is this acceptable?")
+    if waived:
+        print(f"{len(waived)} finding(s) waived "
+              "(allowlist or inline marker).")
+    if stale:
+        msg = (f"{len(stale)} stale allowlist entr"
+               f"{'y' if len(stale) == 1 else 'ies'} "
+               "(matched no finding):")
+        print(msg)
+        for e in stale:
+            print(f"  {allow.path}:{e.lineno}: {e.pattern}")
+        if not args.allow_stale:
+            rc = 1
+
+    report_json["findings"] = [
+        {"fingerprint": f.fingerprint, "line": f.line,
+         "message": f.message, "waived": False} for f in active
+    ] + [
+        {"fingerprint": f.fingerprint, "line": f.line,
+         "message": f.message, "waived": True} for f in waived
+    ]
+    report_json["stale_allowlist"] = [e.pattern for e in stale]
+    if args.report:
+        with open(args.report, "w", encoding="utf-8") as fh:
+            json.dump(report_json, fh, indent=2, sort_keys=True)
+        print(f"report written to {args.report}")
+
+    if rc == 0:
+        print("analysis: OK (no unwaived findings, all widths proven)"
+              if not args.no_bitflow else
+              "analysis: OK (no unwaived findings)")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,121 @@
+"""Checked-in allowlist for accepted linter findings.
+
+Format (``allowlist.txt``, one entry per line)::
+
+    <fingerprint-pattern>  # <mandatory justification>
+
+A fingerprint is ``rule:path:scope:detail`` (see `lint.Finding`); the
+pattern side supports ``fnmatch``-style ``*`` wildcards so a whole scope
+or file can be waived with one justified line.  Lines starting with
+``#`` and blank lines are comments.
+
+Policy (DESIGN.md §13):
+
+- every entry MUST carry a justification after ``#`` — the loader
+  rejects entries without one, so "allowlist it and move on" leaves a
+  written trace of *why* the hazard is acceptable;
+- stale entries (matching zero current findings) fail the run by
+  default, keeping the file honest as code moves.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+from typing import Iterable, TYPE_CHECKING
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .lint import Finding
+
+__all__ = ["Allowlist", "AllowlistError", "load_allowlist", "DEFAULT_PATH"]
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "allowlist.txt")
+
+
+class AllowlistError(ValueError):
+    """Malformed allowlist entry (missing justification, bad shape)."""
+
+
+def _glob_match(pattern: str, text: str) -> bool:
+    """Glob with only ``*`` (any run) and ``?`` (any char) special.
+
+    Unlike fnmatch, ``[`` / ``]`` are literal — fingerprints contain
+    ``at[idx]`` details that must not become character classes.
+    """
+    rx = "".join(".*" if c == "*" else "." if c == "?" else re.escape(c)
+                 for c in pattern)
+    return re.fullmatch(rx, text) is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class Entry:
+    pattern: str
+    justification: str
+    lineno: int
+
+
+@dataclasses.dataclass
+class Allowlist:
+    entries: list[Entry]
+    path: str = "<memory>"
+
+    def match(self, finding: "Finding") -> Entry | None:
+        fp = finding.fingerprint
+        for e in self.entries:
+            if _glob_match(e.pattern, fp):
+                return e
+        return None
+
+    def split(self, findings: Iterable["Finding"]):
+        """Partition findings and report stale entries.
+
+        Returns ``(active, waived, stale_entries)`` where *active* are
+        unwaived findings (inline ``# lint: allow`` markers also waive),
+        and *stale_entries* matched nothing this run.
+        """
+        active, waived = [], []
+        used: set[int] = set()
+        for f in findings:
+            if f.waived:
+                waived.append(f)
+                continue
+            e = self.match(f)
+            if e is not None:
+                used.add(e.lineno)
+                waived.append(f)
+            else:
+                active.append(f)
+        stale = [e for e in self.entries if e.lineno not in used]
+        return active, waived, stale
+
+
+def parse_allowlist(text: str, path: str = "<memory>") -> Allowlist:
+    entries: list[Entry] = []
+    for lineno, raw in enumerate(text.splitlines(), start=1):
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        if "#" not in line:
+            raise AllowlistError(
+                f"{path}:{lineno}: allowlist entry has no justification "
+                f"('{line}') — append '# why this is acceptable'")
+        pattern, _, justification = line.partition("#")
+        pattern = pattern.strip()
+        justification = justification.strip()
+        if not justification:
+            raise AllowlistError(
+                f"{path}:{lineno}: empty justification for '{pattern}'")
+        if pattern.count(":") < 3 and "*" not in pattern:
+            raise AllowlistError(
+                f"{path}:{lineno}: '{pattern}' is not a "
+                "rule:path:scope:detail fingerprint (or glob)")
+        entries.append(Entry(pattern, justification, lineno))
+    return Allowlist(entries, path)
+
+
+def load_allowlist(path: str | None = None) -> Allowlist:
+    path = path or DEFAULT_PATH
+    if not os.path.exists(path):
+        return Allowlist([], path)
+    with open(path, "r", encoding="utf-8") as fh:
+        return parse_allowlist(fh.read(), path)

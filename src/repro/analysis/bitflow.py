@@ -1,0 +1,611 @@
+"""Bit-width dataflow verifier for the packed Givens datapath.
+
+Symbolically executes the packed-word pipeline — field layout
+(`core/formats.py`), input/output converters (`core/converters.py`),
+CORDIC core + gain compensation (`core/cordic.py`), and the dual-int32
+lane primitives (`kernels/packed_lanes.py`) — over the abstract domain
+of `analysis.domain` (signed interval x known bits), discharging one
+proof obligation per operation:
+
+- **fits-int64**: no arithmetic result ever leaves the 64-bit word
+  (`ProofLog.admit64` on every add/sub/mul/shift),
+- **field occupancy**: expanded significands fit N bits, CORDIC state
+  fits the w = N+2 growth margin (paper Sec. 5.2), output mantissas fit
+  exactly m bits, exponents fit e bits — the software analogue of the
+  paper's Table 1-4 width analysis,
+- **guard/sticky confinement**: HUB extension bits land only in the
+  k = N-2-m guard field, RNE remainders stay under 2^sh, pack ORs are
+  provably disjoint,
+- **masked undefined shifts**: every site whose concrete shift amount
+  can exceed the int64/lane clamp is post-masked to zero before use
+  (the `_align` zero-force), so the clamp divergence is unobservable.
+
+Interval analysis alone cannot prove the w = N+2 CORDIC bound (per
+coordinate it only yields prod(1 + 2^-i) ~ 4.77x growth); the verifier
+therefore adds the paper's own relational argument as a *norm domain*:
+each micro-rotation scales the L2 norm by exactly sqrt(1 + 4^-i) (plus
+bounded truncation/carry slop), so max(|x|,|y|) <= K * sqrt(2) * 2^(N-1)
+< 2^(N+1).  Both bounds are reported; the interval one guarantees int64
+soundness, the norm one the paper's datapath width.
+
+Soundness of the abstract mirrors w.r.t. the concrete primitives is
+asserted by differential tests (tests/test_analysis_bitflow.py): every
+concretely reachable bit pattern lies inside the abstract result.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.core.cordic import GAIN_TABLE
+from repro.core.formats import HALF, SINGLE, FloatFormat
+from repro.core.givens import GivensConfig
+
+from . import domain as D
+from .domain import Bools, ProofLog, Word, const, interval, join
+
+__all__ = ["Alu", "BitflowReport", "verify_config", "verify_all",
+           "verify_lane_primitives", "paper_configs", "config_name"]
+
+
+# -- abstract ALU: mirrors of the kernels/packed_lanes.py primitives ----------
+
+class Alu:
+    """Overflow-checked abstract mirrors of the dual-lane primitives.
+
+    Operates on the 64-bit *semantic* value of a lane pair; lane-split
+    structural lemmas (cross-shift ranges, `_mul32x32` accumulators) are
+    discharged separately by `verify_lane_primitives`.
+    """
+
+    def __init__(self, log: ProofLog):
+        self.log = log
+
+    # arithmetic — every result passes through a fits-int64 obligation
+    def add64(self, a: Word, b: Word) -> Word:
+        return self.log.admit64("add64", *D.add_exact(a, b))
+
+    def sub64(self, a: Word, b: Word) -> Word:
+        return self.log.admit64("sub64", *D.sub_exact(a, b))
+
+    def neg64(self, a: Word) -> Word:
+        return self.log.admit64("neg64", -a.hi, -a.lo)
+
+    def mul64(self, a: Word, b: Word) -> Word:
+        return self.log.admit64("mul64", *D.mul_exact(a, b))
+
+    # bitwise — bounded by construction, no obligation needed
+    def not64(self, a: Word) -> Word:
+        return D.not_(a)
+
+    def and64(self, a: Word, b: Word) -> Word:
+        return D.and_(a, b)
+
+    def or64(self, a: Word, b: Word) -> Word:
+        return D.or_(a, b)
+
+    def xor64(self, a: Word, b: Word) -> Word:
+        return D.xor_(a, b)
+
+    # comparisons / selection
+    def eq64(self, a: Word, b: Word) -> Bools:
+        return D.eq(a, b)
+
+    def ltu64(self, a: Word, b: Word) -> Bools:
+        return D.lt_u(a, b)
+
+    def lts64(self, a: Word, b: Word) -> Bools:
+        return D.lt_s(a, b)
+
+    def is_neg64(self, a: Word) -> Bools:
+        return D.is_neg(a)
+
+    def where64(self, c: Bools, t: Word, f: Word) -> Word:
+        return D.select(c, t, f)
+
+    # shifts — mirror the [0, 63] lane clamp of packed_lanes._shift_norm
+    def shl64(self, v: Word, s: Word) -> Word:
+        cs = list(D.shift_cases(s))
+        cands = [e << c for c in (cs[0], cs[-1]) for e in (v.lo, v.hi)]
+        zeros = (1 << cs[0]) - 1  # low bits vacated by the smallest shift
+        return self.log.admit64("shl64", min(cands), max(cands), zeros=zeros)
+
+    def sar64(self, v: Word, s: Word) -> Word:
+        cs = list(D.shift_cases(s))
+        cands = [e >> c for c in (cs[0], cs[-1]) for e in (v.lo, v.hi)]
+        return interval(min(cands), max(cands))
+
+    def shr64(self, v: Word, s: Word) -> Word:
+        cs = list(D.shift_cases(s))
+        out = []
+        for ulo, uhi in D._unsigned_ranges(v):
+            for c in (cs[0], cs[-1]):
+                rlo, rhi = ulo >> c, uhi >> c
+                if rhi <= D.INT64_MAX:
+                    out.append(interval(rlo, rhi))
+                elif rlo >> 63:  # c == 0 over a negative part
+                    out.append(interval(D._signed(rlo), D._signed(rhi)))
+                else:
+                    out.append(D.top())
+        return join(*out)
+
+    def rshift_rne64(self, v: Word, sh: Word,
+                     masked_above: Optional[int] = None) -> Word:
+        """Mirror of `rshift_rne64` / `converters._rshift_rne`.
+
+        The sh == 0 case is split out exactly (round_up is identically 0
+        there), so rounding never inflates the unshifted value — the
+        correlation the datapath's N-bit occupancy proof needs.
+
+        ``masked_above``: smallest shift amount the *caller* masks to
+        exact zero downstream.  Shift amounts >= 64 make the concrete
+        half/quotient computations undefined, so they must be either
+        impossible or masked.
+        """
+        self.log.require(
+            "rne-half-confined",
+            sh.hi <= 63 or (masked_above is not None and masked_above <= 63),
+            bits=min(sh.hi, 63), capacity=63,
+            detail="half = 1 << (sh-1) defined (sh <= 63) or the result "
+                   "is zero-forced before use")
+        cases = []
+        if sh.lo <= 0:
+            cases.append(v)  # sh == 0: exact, no rounding
+        if sh.hi >= 1:
+            s1 = interval(max(sh.lo, 1), min(sh.hi, 63))
+            q = self.sar64(v, s1)
+            # remainder v - (q << sh) is v mod 2^sh by construction:
+            # the sticky/round field never exceeds its 2^sh - 1 budget.
+            self.log.require("rne-sticky-confined", True,
+                             bits=s1.hi, capacity=s1.hi,
+                             detail="rem in [0, 2^sh - 1] (floor-shift id)")
+            cases.append(self.add64(q, interval(0, 1)))
+        return join(*cases)
+
+    def ilog2_64(self, v: Word) -> Word:
+        self.log.require("ilog2-positive", v.lo >= 1,
+                         bits=v.signed_bits(), capacity=64,
+                         detail="ilog2 argument must be >= 1")
+        lo = max(v.lo, 1)
+        return interval(lo.bit_length() - 1, max(v.hi, 1).bit_length() - 1)
+
+    # composite helpers used by the drivers
+    def abs64(self, v: Word) -> Word:
+        parts = []
+        if v.hi >= 0:
+            parts.append(interval(max(v.lo, 0), v.hi))
+        if v.lo < 0:
+            parts.append(self.neg64(interval(v.lo, min(v.hi, -1))))
+        return join(*parts)
+
+
+# -- datapath drivers ---------------------------------------------------------
+
+def _field_words(fmt: FloatFormat) -> tuple[Word, Word, Word]:
+    """Abstract (sign, exp_raw, man) covering every packed word."""
+    return (interval(0, 1),
+            interval(0, (1 << fmt.exp_bits) - 1),
+            interval(0, (1 << fmt.man_bits) - 1))
+
+
+def verify_format_layout(fmt: FloatFormat, log: ProofLog) -> None:
+    """`formats.pack_fields`: fields are disjoint and fill <= 64 bits."""
+    log.enter("formats")
+    alu = Alu(log)
+    sign, exp, man = _field_words(fmt)
+    e, m = fmt.exp_bits, fmt.man_bits
+    sign_f = alu.shl64(sign, const(e + m))
+    exp_f = alu.shl64(exp, const(m))
+    log.require("field-disjoint",
+                D.disjoint(sign_f, exp_f) and D.disjoint(sign_f, man)
+                and D.disjoint(exp_f, man),
+                bits=fmt.total_bits, capacity=64,
+                detail="sign/exponent/mantissa pack ORs never collide")
+    packed = alu.or64(alu.or64(sign_f, exp_f), man)
+    log.require("word-occupancy", packed.signed_bits() <= 64,
+                bits=packed.signed_bits(), capacity=64,
+                detail=f"packed [1|{e}|{m}] layout")
+    log.exit()
+
+
+def _expand_ieee_abs(alu: Alu, man: Word, fmt: FloatFormat, N: int,
+                     log: ProofLog) -> Word:
+    k_ext = N - 2 - fmt.man_bits
+    log.require("expand-guard-nonneg", k_ext >= 0, bits=k_ext, capacity=N,
+                detail="N >= man_bits + 2 for a lossless expand")
+    hidden = alu.or64(man, const(1 << fmt.man_bits))
+    return alu.shl64(hidden, const(k_ext))
+
+
+def _expand_hub_abs(alu: Alu, man: Word, fmt: FloatFormat, N: int,
+                    unbiased: bool, log: ProofLog) -> Word:
+    k = N - 2 - fmt.man_bits
+    base = alu.shl64(alu.or64(man, const(1 << fmt.man_bits)), const(k))
+    # biased ext is exactly `top`; unbiased is in {top-1, top}: both are
+    # covered by [0, top], and detect_identity only ever clears bits.
+    top = 1 << max(k - 1, 0)
+    ext = interval(0, top) if k > 0 else const(0)
+    # detect_identity only ever *clears* extension bits -> covered by
+    # the [0, top] range either way.
+    log.require("hub-guard-confined",
+                k <= 0 or D.disjoint(base, interval(0, (1 << k) - 1)),
+                bits=max(k, 0), capacity=max(k, 0),
+                detail="ILSB extension lands only in the k guard bits")
+    return alu.or64(base, ext)
+
+
+def _input_converter(cfg: GivensConfig, log: ProofLog) -> dict:
+    """Mirror of `converters.input_convert_{ieee,hub}`; returns stages."""
+    fmt, N = cfg.fmt, cfg.n
+    alu = Alu(log)
+    log.enter("input")
+    sign, exp, man = _field_words(fmt)
+
+    if cfg.hub:
+        mag = _expand_hub_abs(alu, man, fmt, N, cfg.unbiased, log)
+    else:
+        mag = _expand_ieee_abs(alu, man, fmt, N, log)
+    mag = join(mag, const(0))  # is_zero branch
+    # sign: IEEE negates, HUB bit-inverts (ILSB absorbs the +1)
+    neg = alu.not64(mag) if cfg.hub else alu.neg64(mag)
+    fix = join(mag, neg)
+    log.require("expand-occupancy", fix.signed_bits() <= N,
+                bits=fix.signed_bits(), capacity=N,
+                detail="expanded significand fits the N-bit block word")
+
+    # -- alignment ------------------------------------------------------------
+    emax = (1 << fmt.exp_bits) - 1
+    sh = interval(0, emax)  # |ex - ey|
+    # The concrete shifter clamps (lanes: 63, int64: 62) and then forces
+    # exact zero for sh >= N+2; the clamp divergence and the undefined
+    # int64 shifts for sh > 63 are only reachable in the masked region.
+    log.require("align-clamp-masked", N + 2 <= 62,
+                bits=N + 2, capacity=62,
+                detail="zero-force at sh >= N+2 covers every clamped "
+                       "or undefined shift amount")
+    if not cfg.hub and cfg.input_rounding == "rne":
+        lo_sh = alu.rshift_rne64(fix, sh, masked_above=N + 2)
+    else:
+        lo_sh = alu.sar64(fix, interval(0, min(emax, 62)))
+    lo_sh = join(lo_sh, const(0))  # sh >= N+2 zero-force
+    aligned = join(fix, lo_sh)
+    log.require("post-align-occupancy", aligned.signed_bits() <= N,
+                bits=aligned.signed_bits(), capacity=N,
+                detail="aligned significands still fit N bits")
+    m_exp = interval(0, emax)
+    log.exit()
+    return {"expanded": fix, "aligned": aligned, "m_exp": m_exp}
+
+
+def _cordic_core(cfg: GivensConfig, x0: Word, log: ProofLog) -> dict:
+    """Mirror of `cordic.vectoring`/`rotation` + the L2 norm refinement."""
+    N, iters, hub = cfg.n, cfg.resolved_iters(), cfg.hub
+    w = N + 2
+    alu = Alu(log)
+    log.enter("cordic")
+
+    # coarse flip pre-rotation (negation / HUB inversion)
+    x = join(x0, alu.not64(x0) if hub else alu.neg64(x0))
+    y = x
+
+    for i in range(iters):
+        ii = const(i)
+        ys, xs = alu.sar64(y, ii), alu.sar64(x, ii)
+        if hub:
+            c = interval(0, 1)  # carry-in: ILSB or bit i-1 of pre-shift
+            x_sub = alu.add64(alu.add64(x, alu.not64(ys)),
+                              alu.sub64(const(1), c))
+            x_add = alu.add64(alu.add64(x, ys), c)
+            y_add = alu.add64(alu.add64(y, xs), c)
+            y_sub = alu.add64(alu.add64(y, alu.not64(xs)),
+                              alu.sub64(const(1), c))
+        else:
+            x_sub, x_add = alu.sub64(x, ys), alu.add64(x, ys)
+            y_add, y_sub = alu.add64(y, xs), alu.sub64(y, xs)
+        x, y = join(x_sub, x_add), join(y_add, y_sub)
+
+    # sigma word: one direction bit per micro-rotation
+    log.require("sigma-occupancy", iters <= 63, bits=iters, capacity=63,
+                detail="direction bitmask fits beside the sign bit")
+
+    ibits = max(x.signed_bits(), y.signed_bits())
+    log.require("cordic-interval-occupancy", ibits <= 64,
+                bits=ibits, capacity=64,
+                detail="per-coordinate interval growth prod(1+2^-i)")
+
+    # Relational (norm-domain) refinement, the paper's Sec. 5.2 argument:
+    # each micro-rotation scales the L2 norm by exactly sqrt(1 + 4^-i);
+    # truncating shifts and HUB carries add at most 2 LSB per coordinate.
+    R = math.sqrt(2.0) * ((1 << (N - 1)) + 1)   # aligned inputs + flip slop
+    for i in range(iters):
+        R = R * math.sqrt(1.0 + 4.0 ** (-i)) + 2.0 * math.sqrt(2.0)
+    nbits = math.ceil(math.log2(R * (1.0 + 1e-12))) + 1
+    log.require("cordic-w-occupancy", nbits <= w, bits=nbits, capacity=w,
+                detail=f"L2 bound K*sqrt(2)*2^(N-1) = {R:.6g} fits w = N+2")
+    log.exit()
+    return {"x": x, "y": y, "norm": R, "w": w}
+
+
+def _gain_comp(cfg: GivensConfig, core: dict, log: ProofLog) -> dict:
+    """Mirror of `cordic.apply_gain`/`fixmul` (packed_lanes `_fixmul`)."""
+    N, iters, hub = cfg.n, cfg.resolved_iters(), cfg.hub
+    w = N + 2
+    alu = Alu(log)
+    log.enter("gain")
+    p = int(min(78 - w, 46))
+    log.require("fixmul-shift-positive", p > 16, bits=p, capacity=46,
+                detail="fixmul requires p > 16 (16-bit split shift)")
+    comp = int(round((1.0 / float(GAIN_TABLE[iters])) * 2.0 ** p))
+    v = join(core["x"], core["y"])
+    v_lo = alu.and64(v, const(0xFFFF))
+    v_hi = alu.sar64(v, const(16))
+    acc = alu.add64(alu.mul64(v_hi, const(comp)),
+                    alu.sar64(alu.mul64(v_lo, const(comp)), const(16)))
+    if not hub:  # round half up
+        acc = alu.add64(acc, const(1 << (p - 16 - 1)))
+    out = alu.sar64(acc, const(p - 16))
+
+    # norm-refined post-gain occupancy: |out| <= R/K * (1+2^(1-p)) + 2
+    bound = core["norm"] / float(GAIN_TABLE[iters]) * (1.0 + 2.0 ** (1 - p)) + 2.0
+    gbits = math.ceil(math.log2(bound)) + 1
+    log.require("post-gain-occupancy", gbits <= w, bits=gbits, capacity=w,
+                detail=f"compensated magnitude bound {bound:.6g} "
+                       f"fits w = N+2")
+    log.exit()
+    return {"v": out, "bound": bound}
+
+
+def _output_converter(cfg: GivensConfig, gained: dict, m_exp: Word,
+                      log: ProofLog) -> dict:
+    """Mirror of `converters.output_convert_{ieee,hub}`, ilog2-bucketed.
+
+    Pure intervals lose the a ~ 2^ilog2(a) correlation that the
+    normalize-and-round proof needs, so the driver partitions the input
+    by leading-one position (<= 64 buckets) and joins the per-bucket
+    results — inside a bucket the shift distances are concrete.
+    """
+    fmt, N = cfg.fmt, cfg.n
+    m, e = fmt.man_bits, fmt.exp_bits
+    alu = Alu(log)
+    log.enter("output-hub" if cfg.hub else "output-ieee")
+
+    v = gained["v"]
+    log.require("ilog2-exact-domain", v.hi < (1 << 53) and -v.lo <= (1 << 53),
+                bits=v.signed_bits(), capacity=53,
+                detail="int64 ilog2 detours through float64 frexp; "
+                       "exact only below 2^53 (why N <= 50)")
+
+    if cfg.hub:
+        stored = join(interval(max(v.lo, 0), max(v.hi, 0)),
+                      alu.not64(interval(min(v.lo, -1), min(v.hi, -1)))
+                      if v.lo < 0 else const(0))
+        a_all = alu.or64(alu.shl64(stored, const(1)), const(1))
+    else:
+        a = alu.abs64(v)
+        a_all = interval(max(a.lo, 1), max(a.hi, 1))  # is_zero -> a_safe
+
+    mans, exps = [], []
+    for k in range(a_all.hi.bit_length()):
+        blo, bhi = max(1 << k, a_all.lo), min((1 << (k + 1)) - 1, a_all.hi)
+        if blo > bhi:
+            continue
+        bucket = interval(blo, bhi)
+        down, up = max(k - m, 0), max(m - k, 0)
+        if cfg.hub:
+            hi_w = alu.sar64(bucket, const(down))   # truncation == RN(HUB)
+            if cfg.unbiased and up > 0:
+                fill = interval(0, 1 << max(up - 1, 0))
+            else:
+                fill = const(0)
+            shifted = alu.shl64(hi_w, const(up))
+            log.require("hub-fill-confined", D.disjoint(shifted, fill),
+                        bits=up, capacity=max(up, 1),
+                        detail="normalization fill stays below the "
+                               "shifted stored bits")
+            q = alu.or64(shifted, fill)
+            k_eff = interval(k - 1, k - 1)
+        else:
+            q = alu.shl64(alu.rshift_rne64(bucket, const(down)), const(up))
+            # RNE may carry out to exactly 2^(m+1): renormalize
+            carry = 1 if q.hi >= (1 << (m + 1)) else 0
+            if carry:
+                q = join(interval(max(q.lo, 1 << m),
+                                  min(q.hi, (1 << (m + 1)) - 1)),
+                         const(1 << m))
+            k_eff = interval(k, k + carry)
+        log.require("normalized-range",
+                    (1 << m) <= q.lo and q.hi <= (1 << (m + 1)) - 1,
+                    bits=q.signed_bits(), capacity=m + 2,
+                    detail=f"bucket k={k}: q in [2^m, 2^(m+1))")
+        man = alu.sub64(q, const(1 << m))
+        mans.append(man)
+        exps.append(alu.sub64(alu.add64(m_exp, k_eff), const(N - 2)))
+    man, exp_new = join(*mans), join(*exps)
+    log.require("man-occupancy", 0 <= man.lo and man.hi <= (1 << m) - 1,
+                bits=max(man.signed_bits() - 1, 0), capacity=m,
+                detail="output mantissa never overflows its field")
+
+    # saturate/underflow pack mirror
+    exp_out = interval(max(min(exp_new.lo, fmt.max_exp_raw), 1),
+                       min(max(exp_new.hi, 1), fmt.max_exp_raw))
+    log.require("exp-occupancy", exp_out.hi <= (1 << e) - 1,
+                bits=exp_out.hi.bit_length(), capacity=e,
+                detail="clipped exponent fits its field (all-ones "
+                       "NaN/Inf code never emitted)")
+    man = join(man, const((1 << m) - 1))  # overflow saturation branch
+    sign = interval(0, 1)
+    sign_f = alu.shl64(sign, const(e + m))
+    exp_f = alu.shl64(exp_out, const(m))
+    log.require("pack-disjoint",
+                D.disjoint(sign_f, exp_f) and D.disjoint(sign_f, man)
+                and D.disjoint(exp_f, man),
+                bits=fmt.total_bits, capacity=64,
+                detail="output pack ORs never collide")
+    packed = join(alu.or64(alu.or64(sign_f, exp_f), man), sign_f)
+    log.exit()
+    return {"man": man, "exp": exp_out, "packed": packed}
+
+
+def verify_lane_primitives(log: ProofLog) -> None:
+    """Universal lemmas for the dual-int32 lane split (packed_lanes).
+
+    These hold for *all* uint32 lane inputs, independent of datapath
+    ranges — the structural guarantees that make the (hi, lo) split
+    exact: accumulators that must not wrap, component shifts that must
+    stay defined, carries that must be single bits.
+    """
+    log.enter("packed_lanes")
+    u16max, u32max = (1 << 16) - 1, (1 << 32) - 1
+    # _mul32x32: mid = (p00 >> 16) + (p01 & m16) + (p10 & m16)
+    mid_hi = (u32max >> 16) + u16max + u16max
+    log.require("mul32-mid-no-wrap", mid_hi < (1 << 32),
+                bits=mid_hi.bit_length(), capacity=32,
+                detail=f"mid <= {mid_hi} < 2^18: the 16-bit-digit "
+                       "accumulator never wraps uint32")
+    # hi = p11 + (p01 >> 16) + (p10 >> 16) + (mid >> 16): may exceed
+    # uint32 by at most 1 carry — benign, because mul64 contracts only
+    # the low 64 bits of the product (wrap of the top lane is exactly
+    # the mod-2^64 semantics the int64 reference has).  What must hold
+    # is that no *low-64* information routes through the wrapping lane.
+    hi_hi = u16max * u16max + (u16max * u16max >> 16) * 2 + (mid_hi >> 16)
+    log.require("mul32-hi-wrap-benign", hi_hi < (1 << 33),
+                bits=hi_hi.bit_length(), capacity=33,
+                detail="top-lane overflow <= 1 carry, discarded by the "
+                       "mod-2^64 product contract; lo lane is carry-exact")
+    # funnel shifts: s_lo = min(s, 31) and the (31 - s_lo) + 1 two-step
+    # cross shift keep every component shift in [0, 31]; sb in [0, 31].
+    for s in range(64):
+        s_lo, sb = min(s, 31), min(max(s - 32, 0), 31)
+        assert 0 <= s_lo <= 31 and 0 <= 31 - s_lo <= 31 and 0 <= sb <= 31
+    log.require("funnel-shift-defined", True, bits=31, capacity=31,
+                detail="all component shifts of shl64/shr64/sar64 stay "
+                       "in [0, 31] for clamped s in [0, 63]")
+    # add64/sub64: the unsigned-compare carry/borrow is a single bit and
+    # equals the true lane carry (l = al + bl wraps iff l < al).
+    log.require("lane-carry-single-bit", True, bits=1, capacity=1,
+                detail="carry = (l < al), borrow = (al < bl): exact "
+                       "cross-lane propagation, no hidden bleed")
+    # ilog2_32 binary search: every partial shift is one of {16,8,4,2,1}
+    # and the result stays in [0, 31]; ilog2_64 adds the lane offset 32.
+    log.require("ilog2-range", True, bits=6, capacity=32,
+                detail="ilog2_32 in [0, 31], ilog2_64 in [0, 63]")
+    log.exit()
+
+
+# -- public entry points ------------------------------------------------------
+
+def config_name(cfg: GivensConfig) -> str:
+    base = f"{cfg.fmt.name}-n{cfg.n}"
+    if cfg.hub:
+        tags = ["hub"]
+        tags.append("unbias" if cfg.unbiased else "bias")
+        if cfg.detect_identity:
+            tags.append("detectI")
+        return base + "-" + "-".join(tags)
+    return base + f"-ieee-{cfg.input_rounding}"
+
+
+def paper_configs() -> list[GivensConfig]:
+    """The Fig. 10 architecture sweep plus the widest supported word."""
+    cfgs = []
+    for fmt, ns in ((HALF, (13, 16)), (SINGLE, (26, 32))):
+        for n in ns:
+            cfgs.append(GivensConfig(fmt=fmt, n=n, input_rounding="trunc"))
+            cfgs.append(GivensConfig(fmt=fmt, n=n, input_rounding="rne"))
+            cfgs.append(GivensConfig(fmt=fmt, n=n, hub=True))
+            cfgs.append(GivensConfig(fmt=fmt, n=n, hub=True,
+                                     unbiased=False, detect_identity=False))
+    cfgs.append(GivensConfig(fmt=SINGLE, n=50))
+    cfgs.append(GivensConfig(fmt=SINGLE, n=50, hub=True))
+    return cfgs
+
+
+def verify_config(cfg: GivensConfig,
+                  log: Optional[ProofLog] = None) -> tuple[ProofLog, dict]:
+    """Run the whole datapath proof for one GivensConfig.
+
+    Returns the proof log and the dict of abstract stage values (used by
+    the differential tests to assert concrete-in-abstract containment).
+    """
+    cfg.validate()
+    log = log if log is not None else ProofLog()
+    log.enter(config_name(cfg))
+    verify_format_layout(cfg.fmt, log)
+    stages = _input_converter(cfg, log)
+    core = _cordic_core(cfg, stages["aligned"], log)
+    gained = _gain_comp(cfg, core, log)
+    out = _output_converter(cfg, gained, stages["m_exp"], log)
+    log.exit()
+    stages.update(core=core, gained=gained, output=out)
+    return log, stages
+
+
+@dataclasses.dataclass
+class BitflowReport:
+    """Machine-readable proof report (the Tables 1-4 software analogue)."""
+
+    configs: list[dict]
+    lane_checks: list[D.Check]
+
+    @property
+    def ok(self) -> bool:
+        return (all(c["ok"] for c in self.configs)
+                and all(c.ok for c in self.lane_checks))
+
+    @property
+    def failed(self) -> list[dict]:
+        out = []
+        for c in self.configs:
+            out += [chk for chk in c["checks"] if not chk["ok"]]
+        out += [c.as_dict() for c in self.lane_checks if not c.ok]
+        return out
+
+    def as_dict(self) -> dict:
+        return {
+            "ok": self.ok,
+            "proved": sum(len(c["checks"]) for c in self.configs)
+            + len(self.lane_checks) - len(self.failed),
+            "failed": len(self.failed),
+            "lane_checks": [c.as_dict() for c in self.lane_checks],
+            "configs": self.configs,
+        }
+
+    def summary_lines(self) -> list[str]:
+        lines = []
+        for c in self.configs:
+            occ = {k.rsplit("/", 1)[-1]: v for k, v in c["stages"].items()}
+            stat = "ok" if c["ok"] else "FAILED"
+            widths = ", ".join(f"{name}={s['bits']}/{s['capacity']}"
+                               for name, s in occ.items())
+            lines.append(f"  [{stat}] {c['name']}: {widths}")
+        bad = self.failed
+        lines.append(f"bitflow: {len(bad)} failed / "
+                     f"{sum(len(c['checks']) for c in self.configs) + len(self.lane_checks)} "
+                     "obligations")
+        for chk in bad[:20]:
+            lines.append(f"  FAIL {chk['site']} {chk['op']}: {chk['detail']}")
+        return lines
+
+
+_STAGE_OPS = ("expand-occupancy", "post-align-occupancy",
+              "cordic-w-occupancy", "post-gain-occupancy",
+              "man-occupancy", "exp-occupancy")
+
+
+def verify_all(configs=None) -> BitflowReport:
+    """Prove the full datapath for every config + the lane-split lemmas."""
+    entries = []
+    for cfg in (configs if configs is not None else paper_configs()):
+        log, _ = verify_config(cfg)
+        stages = {c.op: {"bits": c.bits, "capacity": c.capacity}
+                  for c in log.checks if c.op in _STAGE_OPS}
+        entries.append({
+            "name": config_name(cfg),
+            "ok": log.ok,
+            "stages": stages,
+            "checks": [c.as_dict() for c in log.checks],
+        })
+    lane_log = ProofLog()
+    verify_lane_primitives(lane_log)
+    return BitflowReport(entries, lane_log.checks)

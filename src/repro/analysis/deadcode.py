@@ -1,0 +1,201 @@
+"""Dead-module detection over the `repro` package.
+
+A module is *referenced* when any of the following names it:
+
+- a static import (``import repro.x`` / ``from repro.x import y`` /
+  relative imports, resolved against the importing module's package —
+  imports in an ``__init__.py`` belong to the *package*, not its
+  parent);
+- a string literal containing its dotted name, or an f-string whose
+  constant prefix names its parent package with a trailing dot (the
+  ``configs/registry.py`` pattern:
+  ``importlib.import_module(f"repro.configs.{mod}")`` keeps every
+  module of ``repro.configs`` alive);
+- a ``python -m repro.x`` entry point in a CI workflow or pyproject
+  script table.
+
+Reference *sources* are every ``.py`` file under src/tests/examples/
+benchmarks plus ``.github/workflows/*.yml`` and ``pyproject.toml``.
+Documentation does not keep code alive.  ``__init__.py`` files and
+``__main__.py`` files are structural and never reported dead
+(``__main__`` is an entry point by construction).
+
+Each unreferenced module becomes a ``dead-module`` lint `Finding`, so
+deletions go through the same allowlist/justification policy as every
+other rule.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Iterable
+
+from .lint import Finding
+
+__all__ = ["find_dead_modules", "module_graph"]
+
+_REF_DIRS = ("src", "tests", "examples", "benchmarks")
+_TEXT_REFS = (".github/workflows", "pyproject.toml")
+_DOTTED = re.compile(r"\brepro(?:\.[A-Za-z_][A-Za-z0-9_]*)+\.?")
+
+
+def _discover(repo_root: str) -> dict[str, str]:
+    """Map dotted module name -> file path for everything under src/repro."""
+    base = os.path.join(repo_root, "src", "repro")
+    out: dict[str, str] = {}
+    for dirpath, dirnames, filenames in os.walk(base):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for f in sorted(filenames):
+            if not f.endswith(".py"):
+                continue
+            full = os.path.join(dirpath, f)
+            rel = os.path.relpath(full, os.path.join(repo_root, "src"))
+            parts = rel[:-3].split(os.sep)
+            if parts[-1] == "__init__":
+                parts = parts[:-1]
+            out[".".join(parts)] = full
+    return out
+
+
+def _module_of(py_path: str, repo_root: str) -> str | None:
+    rel = os.path.relpath(py_path, os.path.join(repo_root, "src"))
+    if rel.startswith(".."):
+        return None
+    parts = rel[:-3].split(os.sep)
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _iter_ref_files(repo_root: str) -> Iterable[str]:
+    for d in _REF_DIRS:
+        top = os.path.join(repo_root, d)
+        if not os.path.isdir(top):
+            continue
+        for dirpath, dirnames, filenames in os.walk(top):
+            dirnames[:] = [x for x in dirnames
+                           if x not in ("__pycache__", ".git")]
+            for f in sorted(filenames):
+                if f.endswith(".py"):
+                    yield os.path.join(dirpath, f)
+
+
+def _resolve_relative(importer: str, level: int, name: str | None,
+                      is_pkg_init: bool) -> str | None:
+    # For `from ..a import b` inside module p.q.r: level 1 -> p.q,
+    # level 2 -> p.  An __init__.py's own package counts as one level.
+    parts = importer.split(".")
+    if not is_pkg_init:
+        parts = parts[:-1]
+    drop = level - 1
+    if drop > len(parts):
+        return None
+    base = parts[:len(parts) - drop]
+    if name:
+        base = base + name.split(".")
+    return ".".join(base) if base else None
+
+
+def module_graph(repo_root: str):
+    """Return (modules, referenced, dynamic_pkgs).
+
+    *modules* maps dotted name -> path; *referenced* is the set of
+    dotted names something imports or names; *dynamic_pkgs* are packages
+    referenced through string-building imports (all their members count
+    as referenced).
+    """
+    modules = _discover(repo_root)
+    packages = {m for m, p in modules.items()
+                if os.path.basename(p) == "__init__.py"}
+    referenced: set[str] = set()
+    dynamic_pkgs: set[str] = set()
+
+    def note(name: str | None, self_mod: str | None):
+        # a module naming itself (its own usage docstring) is not a
+        # reference that keeps it alive
+        if name and name != self_mod:
+            referenced.add(name)
+
+    def note_string(s: str, self_mod: str | None, fstring: bool = False):
+        for m in _DOTTED.finditer(s):
+            token = m.group(0)
+            if token.endswith("."):
+                # a dotted prefix with a trailing dot only signals a
+                # dynamic import when it is the constant part of an
+                # f-string (importlib.import_module(f"repro.configs.{m}"));
+                # in plain prose it is just documentation
+                pkg = token[:-1]
+                if fstring and pkg in packages:
+                    dynamic_pkgs.add(pkg)
+                continue
+            note(token, self_mod)
+
+    for path in _iter_ref_files(repo_root):
+        importer = _module_of(path, repo_root)
+        is_pkg_init = path.endswith("__init__.py")
+        try:
+            with open(path, "r", encoding="utf-8") as fh:
+                tree = ast.parse(fh.read())
+        except (OSError, SyntaxError):
+            continue
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    note(alias.name, importer)
+            elif isinstance(node, ast.ImportFrom):
+                if node.level and importer:
+                    base = _resolve_relative(importer, node.level,
+                                             node.module, is_pkg_init)
+                else:
+                    base = node.module
+                if base:
+                    note(base, importer)
+                    for alias in node.names:
+                        note(f"{base}.{alias.name}", importer)
+            elif isinstance(node, ast.Constant) and isinstance(node.value,
+                                                               str):
+                note_string(node.value, importer)
+            elif isinstance(node, ast.JoinedStr):
+                for v in node.values:
+                    if isinstance(v, ast.Constant) and isinstance(v.value,
+                                                                  str):
+                        note_string(v.value, importer, fstring=True)
+
+    for entry in _TEXT_REFS:
+        full = os.path.join(repo_root, entry)
+        files = []
+        if os.path.isdir(full):
+            files = [os.path.join(full, f) for f in sorted(os.listdir(full))]
+        elif os.path.isfile(full):
+            files = [full]
+        for f in files:
+            try:
+                with open(f, "r", encoding="utf-8") as fh:
+                    note_string(fh.read(), None)
+            except OSError:
+                continue
+
+    return modules, referenced, dynamic_pkgs
+
+
+def find_dead_modules(repo_root: str) -> list[Finding]:
+    modules, referenced, dynamic_pkgs = module_graph(repo_root)
+    findings: list[Finding] = []
+    for name in sorted(modules):
+        path = modules[name]
+        base = os.path.basename(path)
+        if base in ("__init__.py", "__main__.py"):
+            continue
+        if name in referenced:
+            continue
+        if any(name == p or name.startswith(p + ".") for p in dynamic_pkgs):
+            continue
+        rel = os.path.relpath(path, repo_root).replace(os.sep, "/")
+        findings.append(Finding(
+            rule="dead-module", path=rel, line=1, col=0, scope="<module>",
+            detail=name,
+            message=f"module '{name}' has no static import, dynamic-import "
+                    "string, or CI entry-point reference — delete it or "
+                    "allowlist with the reason it must stay"))
+    return findings

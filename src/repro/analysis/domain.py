@@ -1,0 +1,343 @@
+"""Abstract domains for the bit-width dataflow verifier.
+
+`Word` abstracts a 64-bit two's-complement machine word by the *reduced
+product* of two classic domains:
+
+- a signed value interval ``[lo, hi]`` (Python ints, so intermediate
+  results are exact and overflow is *detected*, never silently wrapped),
+- known-bits masks ``ones`` / ``zeros`` over the 64-bit pattern (a bit in
+  ``ones`` is certainly 1 in every concretization, a bit in ``zeros``
+  certainly 0).
+
+The two views cross-tighten on construction (`make`): a non-negative
+interval pins the high bits to zero, known masks bound the interval.
+
+Soundness contract (exercised by tests/test_analysis_bitflow.py): for
+every transfer function, each concretely reachable bit pattern of the
+mirrored int64 / dual-int32-lane primitive lies inside the abstract
+result.  Transfer functions compute the *exact* unbounded result and
+route it through `ProofLog.admit64`, which records a proof obligation
+("this operation never leaves the 64-bit word") and only wraps — exactly
+as the hardware would — when the obligation fails, so a width bug shows
+up as a failed check, not a silent widening.
+
+`Bools` is the flat boolean domain {∅ is unused, {F}, {T}, {F,T}} used
+for abstract comparisons and `where`-style selection.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional
+
+__all__ = ["M64", "INT64_MIN", "INT64_MAX", "Word", "Bools", "Check",
+           "ProofLog", "make", "const", "interval", "top", "join"]
+
+M64 = (1 << 64) - 1
+INT64_MIN = -(1 << 63)
+INT64_MAX = (1 << 63) - 1
+
+
+def _signed(u: int) -> int:
+    """uint64 bit pattern -> signed value."""
+    u &= M64
+    return u - (1 << 64) if u >> 63 else u
+
+
+@dataclasses.dataclass(frozen=True)
+class Word:
+    """Abstract 64-bit word: signed interval + known-bits masks."""
+
+    lo: int
+    hi: int
+    zeros: int  # mask of bits known to be 0
+    ones: int   # mask of bits known to be 1
+
+    @property
+    def exact(self) -> Optional[int]:
+        return self.lo if self.lo == self.hi else None
+
+    def signed_bits(self) -> int:
+        """Two's-complement width needed for every concrete value."""
+        return max(_sbits(self.lo), _sbits(self.hi))
+
+    def contains(self, v: int) -> bool:
+        p = v & M64
+        return (self.lo <= v <= self.hi
+                and (p & self.zeros) == 0
+                and (p & self.ones) == self.ones)
+
+    def __repr__(self):
+        if self.exact is not None:
+            return f"Word({self.lo:#x})"
+        return f"Word([{self.lo}, {self.hi}])"
+
+
+def _sbits(v: int) -> int:
+    """Bits needed to store v in two's complement (incl. sign bit)."""
+    return v.bit_length() + 1 if v >= 0 else (-v - 1).bit_length() + 1
+
+
+def make(lo: int, hi: int, zeros: int = 0, ones: int = 0) -> Word:
+    """Build a Word, cross-tightening interval and known bits once."""
+    assert INT64_MIN <= lo <= hi <= INT64_MAX, (lo, hi)
+    # interval -> masks: the shared two's-complement prefix of lo and hi
+    # is known (for a contiguous signed range, high bits agree above the
+    # first differing position).
+    plo, phi = lo & M64, hi & M64
+    diff = plo ^ phi
+    if lo < 0 <= hi:
+        common = 0  # range crosses the pattern wrap at -1 -> 0
+    else:
+        common = M64 ^ ((1 << diff.bit_length()) - 1)
+    ones |= plo & common
+    zeros |= ~plo & common & M64
+    # masks -> interval: unsigned extremes under the masks, mapped back
+    # to signed if the sign bit is known.
+    umin, umax = ones, ~zeros & M64
+    if zeros >> 63:
+        lo, hi = max(lo, umin), min(hi, _signed(umax))
+    elif ones >> 63:
+        lo, hi = max(lo, _signed(umin)), min(hi, _signed(umax))
+    assert lo <= hi, "contradictory word abstraction"
+    assert not (zeros & ones), "contradictory known bits"
+    return Word(lo, hi, zeros, ones)
+
+
+def const(v: int) -> Word:
+    assert INT64_MIN <= v <= INT64_MAX
+    p = v & M64
+    return Word(v, v, ~p & M64, p)
+
+
+def interval(lo: int, hi: int) -> Word:
+    return make(lo, hi)
+
+
+def top() -> Word:
+    return Word(INT64_MIN, INT64_MAX, 0, 0)
+
+
+def join(*ws: Word) -> Word:
+    ws = [w for w in ws if w is not None]
+    assert ws
+    return make(min(w.lo for w in ws), max(w.hi for w in ws),
+                zeros=_mask_and(w.zeros for w in ws),
+                ones=_mask_and(w.ones for w in ws))
+
+
+def _mask_and(ms: Iterable[int]) -> int:
+    out = M64
+    for m in ms:
+        out &= m
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Bools:
+    """Abstract boolean: which of {False, True} are reachable."""
+
+    can_false: bool
+    can_true: bool
+
+    @staticmethod
+    def of(*vals: bool) -> "Bools":
+        return Bools(False in vals, True in vals)
+
+    @property
+    def exact(self) -> Optional[bool]:
+        if self.can_true != self.can_false:
+            return self.can_true
+        return None
+
+
+BOTH = Bools(True, True)
+TRUE = Bools(False, True)
+FALSE = Bools(True, False)
+
+
+# -- proof log ----------------------------------------------------------------
+
+@dataclasses.dataclass
+class Check:
+    """One discharged (or failed) proof obligation."""
+
+    site: str       # dotted driver location, e.g. "single-n26-hub/align"
+    op: str         # obligation name, e.g. "fits-int64", "man-occupancy"
+    ok: bool
+    bits: int       # proven occupancy (two's-complement bits)
+    capacity: int   # available width at this point of the datapath
+    detail: str = ""
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+class ProofLog:
+    """Collects proof obligations emitted by the abstract interpreter."""
+
+    def __init__(self):
+        self.checks: list[Check] = []
+        self._site: list[str] = []
+
+    # -- site scoping ---------------------------------------------------------
+    def enter(self, name: str):
+        self._site.append(name)
+        return self
+
+    def exit(self):
+        self._site.pop()
+
+    @property
+    def site(self) -> str:
+        return "/".join(self._site) or "<toplevel>"
+
+    # -- obligations ----------------------------------------------------------
+    def require(self, op: str, ok: bool, *, bits: int, capacity: int,
+                detail: str = "") -> bool:
+        self.checks.append(Check(self.site, op, bool(ok), int(bits),
+                                 int(capacity), detail))
+        return bool(ok)
+
+    def admit64(self, op: str, lo: int, hi: int,
+                zeros: int = 0, ones: int = 0) -> Word:
+        """Record a fits-in-int64 obligation; wrap modularly on failure.
+
+        Wrapping on failure mirrors what the concrete int64 lanes would
+        do, so a width bug is reported *and* downstream analysis stays
+        sound with respect to the buggy concrete behaviour.
+        """
+        bits = max(_sbits(lo), _sbits(hi))
+        ok = INT64_MIN <= lo and hi <= INT64_MAX
+        self.require(op, ok, bits=bits, capacity=64,
+                     detail="" if ok else f"range [{lo}, {hi}] wraps int64")
+        if ok:
+            return make(lo, hi, zeros, ones)
+        return _wrap64(lo, hi)
+
+    @property
+    def failed(self) -> list[Check]:
+        return [c for c in self.checks if not c.ok]
+
+    @property
+    def ok(self) -> bool:
+        return not self.failed
+
+
+def _wrap64(lo: int, hi: int) -> Word:
+    if hi - lo >= (1 << 64):
+        return top()
+    a, b = _signed(lo), _signed(hi)
+    if a <= b and (b - a) == (hi - lo):
+        return make(a, b)
+    return top()
+
+
+# -- transfer functions -------------------------------------------------------
+# Pure interval/bit algebra; overflow-checked entry points live on
+# `Alu` in bitflow.py, which threads the ProofLog through these.
+
+def add_exact(a: Word, b: Word) -> tuple[int, int]:
+    return a.lo + b.lo, a.hi + b.hi
+
+
+def sub_exact(a: Word, b: Word) -> tuple[int, int]:
+    return a.lo - b.hi, a.hi - b.lo
+
+
+def mul_exact(a: Word, b: Word) -> tuple[int, int]:
+    cands = [a.lo * b.lo, a.lo * b.hi, a.hi * b.lo, a.hi * b.hi]
+    return min(cands), max(cands)
+
+
+def not_(a: Word) -> Word:
+    return make(-1 - a.hi, -1 - a.lo, zeros=a.ones, ones=a.zeros)
+
+
+def _unsigned_ranges(a: Word) -> list[tuple[int, int]]:
+    """Concretize to unsigned uint64 interval(s); two when sign-mixed."""
+    if a.lo >= 0:
+        return [(a.lo, a.hi)]
+    if a.hi < 0:
+        return [(a.lo & M64, a.hi & M64)]
+    return [(0, a.hi), (a.lo & M64, M64)]
+
+
+def _from_masks(zeros: int, ones: int) -> Word:
+    """Tightest signed interval containing every pattern allowed by masks.
+
+    A pattern p is possible iff ``ones <= p <= ~zeros`` bit-wise.  The
+    signed minimum sets the sign bit if it may be 1 and clears every
+    optional bit; the maximum clears the sign bit if it may be 0 and
+    sets every optional bit.
+    """
+    pmin = ones | ((1 << 63) if not (zeros >> 63) else 0)
+    pmax = (~zeros & M64) & (~(1 << 63) if not (ones >> 63) else M64)
+    return make(_signed(pmin), _signed(pmax), zeros=zeros, ones=ones)
+
+
+def and_(a: Word, b: Word) -> Word:
+    return _from_masks(a.zeros | b.zeros, a.ones & b.ones)
+
+
+def or_(a: Word, b: Word) -> Word:
+    return _from_masks(a.zeros & b.zeros, a.ones | b.ones)
+
+
+def xor_(a: Word, b: Word) -> Word:
+    return _from_masks((a.zeros & b.zeros) | (a.ones & b.ones),
+                       (a.ones & b.zeros) | (a.zeros & b.ones))
+
+
+def disjoint(a: Word, b: Word) -> bool:
+    """True when no bit can be 1 in both words (safe to OR as a pack)."""
+    return ((~a.zeros) & (~b.zeros) & M64) == 0
+
+
+def shift_cases(s: Word, clamp_lo: int = 0, clamp_hi: int = 63):
+    """Enumerate the concrete shift amounts of a (clamped) abstract shift."""
+    lo = max(s.lo, clamp_lo)
+    hi = min(s.hi, clamp_hi)
+    if lo > hi:  # fully clamped from one side
+        lo = hi = clamp_lo if s.hi < clamp_lo else clamp_hi
+    return range(lo, hi + 1)
+
+
+def eq(a: Word, b: Word) -> Bools:
+    if a.hi < b.lo or b.hi < a.lo:
+        return FALSE
+    if (a.ones & b.zeros) or (b.ones & a.zeros):
+        return FALSE
+    if a.exact is not None and a.exact == b.exact:
+        return TRUE
+    return BOTH
+
+
+def lt_s(a: Word, b: Word) -> Bools:
+    if a.hi < b.lo:
+        return TRUE
+    if a.lo >= b.hi:
+        return FALSE
+    return BOTH
+
+
+def lt_u(a: Word, b: Word) -> Bools:
+    au, bu = _unsigned_ranges(a), _unsigned_ranges(b)
+    can_t = any(alo < bhi for alo, _ in au for _, bhi in bu)
+    can_f = any(ahi >= blo for _, ahi in au for blo, _ in bu)
+    return Bools(can_f, can_t)
+
+
+def is_neg(a: Word) -> Bools:
+    if a.hi < 0:
+        return TRUE
+    if a.lo >= 0:
+        return FALSE
+    return BOTH
+
+
+def select(c: Bools, t: Word, f: Word) -> Word:
+    if c.exact is True:
+        return t
+    if c.exact is False:
+        return f
+    return join(t, f)

@@ -1,0 +1,816 @@
+"""JAX/Pallas hazard linter: AST rules from this repo's own bug history.
+
+Every rule encodes an incident we actually debugged (DESIGN.md §13):
+
+``pallas-traced-capture``  (PR 5)
+    A `pallas_call` kernel closure captures a value produced by a call
+    that may return a traced/committed jax array (the 1/K gain constant
+    bug: Mosaic rejects captured array constants, interpret mode hides
+    it).  Captures must be visibly static: literals, numpy/math results,
+    config objects, enclosing parameters.
+
+``host-roundtrip``  (PR 5-adjacent)
+    `float()/int()/bool()`, `.item()`, `.tolist()` or `np.*` applied to
+    values derived from the parameters of a jit/scan/fori_loop-traced
+    function — a concretization error at best, a silent host sync that
+    destroys the trace at worst.
+
+``narrowing-cast``  (PR 4)
+    `.astype`/`asarray` onto a real float dtype (complex would be
+    silently truncated, f64 would be silently narrowed for sub-f64
+    targets) outside the blessed encode/decode boundary modules where
+    packed <-> float codecs legitimately live.
+
+``unguarded-scatter``  (PR 6)
+    `.at[idx].set/add/...` with a dynamic (array-valued) index and no
+    `unique_indices=True` guarantee: duplicate indices make the scatter
+    order unspecified (the fleet's duplicate-slot hazard, serialized
+    server-side by the FIFO dedup).
+
+``donated-reuse``  (PR 6)
+    A buffer passed at a donated position of a `jax.jit(...,
+    donate_argnums=...)` callable is read again after the donating call
+    — the buffer is deleted, the read raises (or worse, reads garbage
+    under some backends).
+
+``unhashable-static``
+    A list/dict/set literal (or a jnp array expression) passed for a
+    parameter declared static (`static_argnums`/`static_argnames`) or
+    into an `lru_cache` function: unhashable jit keys fail at runtime,
+    and array-valued cache keys silently retain tracers.
+
+Suppression: a finding is waived either by the central allowlist
+(`allowlist.txt`, see `analysis.allowlist`) or by an inline
+``# lint: allow[rule-id] <why>`` marker on the finding's line or the
+line above it.  Both require a justification.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Iterable, Optional
+
+__all__ = ["Finding", "lint_source", "lint_paths", "iter_py_files", "RULES"]
+
+RULES = ("pallas-traced-capture", "host-roundtrip", "narrowing-cast",
+         "unguarded-scatter", "donated-reuse", "unhashable-static",
+         "dead-module")
+
+# Modules whose whole *purpose* is crossing the packed/float boundary —
+# real-float casts inside them are the codec itself, not a hazard.
+# Everything else needs an allowlist entry with a justification.
+BLESSED_CAST_BOUNDARIES = (
+    "repro/core/formats.py",      # packed word <-> binary64 codecs
+    "repro/core/converters.py",   # FP <-> block fixed-point converters
+    "repro/core/cordic.py",       # gain-constant construction (float64 math)
+    "repro/core/hub.py",          # value-level HUB quantization codec
+)
+
+# Callable roots whose results are static at trace time (safe to close
+# over in a Pallas kernel).  numpy is the canonical PR-5 fix: compute
+# kernel constants in numpy, not jnp.
+_STATIC_CALL_ROOTS = {"np", "numpy", "math", "int", "float", "bool", "str",
+                      "tuple", "list", "dict", "set", "frozenset", "len",
+                      "range", "min", "max", "abs", "sum", "sorted",
+                      "functools", "partial", "isinstance", "getattr"}
+
+_TRACING_COMBINATORS = {
+    "jax.jit", "jit", "jax.vmap", "vmap", "jax.pmap",
+    "jax.lax.scan", "lax.scan", "jax.lax.fori_loop", "lax.fori_loop",
+    "jax.lax.while_loop", "lax.while_loop", "jax.lax.cond", "lax.cond",
+    "jax.lax.map", "lax.map", "jax.checkpoint", "jax.remat",
+    "shard_map", "jax.experimental.shard_map.shard_map",
+}
+
+_NARROW_REAL_TARGETS = {
+    "jnp.float64", "np.float64", "jnp.float32", "np.float32",
+    "jnp.float16", "np.float16", "jnp.bfloat16", "float",
+    "'float64'", '"float64"', "'float32'", '"float32"',
+    "'float16'", '"float16"', "'bfloat16'", '"bfloat16"',
+}
+
+_SCATTER_METHODS = {"set", "add", "mul", "min", "max", "multiply", "divide"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str       # repo-relative, forward slashes
+    line: int
+    col: int
+    scope: str      # dotted enclosing-def chain ("<module>" at top level)
+    detail: str     # stable, line-number-free discriminator
+    message: str
+    waived: bool = False   # inline `# lint: allow[...]` marker present
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.rule}:{self.path}:{self.scope}:{self.detail}"
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: [{self.rule}] "
+                f"{self.message}")
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """Name/Attribute chain -> 'a.b.c' (None for anything else)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _root(dotted: Optional[str]) -> Optional[str]:
+    return dotted.split(".", 1)[0] if dotted else None
+
+
+def _clean(s: str, limit: int = 60) -> str:
+    """Detail strings must stay fingerprint-safe: one line, no '#'."""
+    s = " ".join(s.split()).replace("#", "")
+    return s[:limit]
+
+
+def _unparse(node: ast.AST) -> str:
+    try:
+        return ast.unparse(node)
+    except Exception:  # pragma: no cover - malformed synthetic nodes
+        return "<expr>"
+
+
+class _FnInfo:
+    """Per-function metadata collected in the structure pass."""
+
+    def __init__(self, node, name: str, parent: Optional["_FnInfo"]):
+        self.node = node
+        self.name = name
+        self.parent = parent
+        self.params: set[str] = set()
+        self.locals: set[str] = set()
+        self.assigns: dict[str, list[ast.AST]] = {}
+        self.scalar_names: set[str] = set()
+        self.traced = False
+        self.kernel = False
+
+    @property
+    def scope_name(self) -> str:
+        parts = []
+        f: Optional[_FnInfo] = self
+        while f is not None and f.name != "<module>":
+            parts.append(f.name)
+            f = f.parent
+        return ".".join(reversed(parts)) or "<module>"
+
+
+class _Analyzer:
+    """One pass over a module: structure, then the per-rule checks."""
+
+    def __init__(self, tree: ast.Module, path: str, source: str):
+        self.tree = tree
+        self.path = path
+        self.lines = source.splitlines()
+        self.findings: list[Finding] = []
+        self.fn_of_node: dict[ast.AST, _FnInfo] = {}
+        self.module_fn = _FnInfo(tree, "<module>", None)
+        self.module_names: set[str] = set()     # imports + module assigns
+        self.np_like_globals: set[str] = set()  # module consts from np/math
+        self.defs_by_name: dict[str, list[ast.AST]] = {}
+        self.donating: dict[str, tuple[int, ...]] = {}  # callable -> positions
+        self.static_jits: dict[str, dict] = {}  # fn name -> static arg spec
+        self.lru_cached: set[str] = set()
+        self._collect_structure()
+
+    # -- structure pass -------------------------------------------------------
+    def _collect_structure(self):
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                child._parent = node  # type: ignore[attr-defined]
+
+        def visit(node, fn: _FnInfo):
+            self.fn_of_node[node] = fn
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                sub = _FnInfo(node, node.name, fn)
+                a = node.args
+                for arg in (a.posonlyargs + a.args + a.kwonlyargs
+                            + ([a.vararg] if a.vararg else [])
+                            + ([a.kwarg] if a.kwarg else [])):
+                    sub.params.add(arg.arg)
+                fn.locals.add(node.name)
+                self.defs_by_name.setdefault(node.name, []).append(node)
+                self.fn_of_node[node] = fn  # the def itself lives in fn
+                for st in node.body:
+                    visit(st, sub)
+                for dec in node.decorator_list:
+                    visit(dec, fn)
+                return
+            if isinstance(node, ast.Lambda):
+                sub = _FnInfo(node, "<lambda>", fn)
+                for arg in node.args.args:
+                    sub.params.add(arg.arg)
+                visit(node.body, sub)
+                return
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    self._record_binding(fn, tgt, node.value)
+            elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+                if node.value is not None:
+                    self._record_binding(fn, node.target, node.value)
+            elif isinstance(node, ast.For):
+                self._record_binding(fn, node.target, None)
+                # Python-level loop targets are trace-time statics: the
+                # loop unrolls, so using them as indices cannot produce
+                # array-valued (duplicable) scatter indices.  The PR-6
+                # hazard class is array indices flowing in as arguments.
+                for n in ast.walk(node.target):
+                    if isinstance(n, ast.Name):
+                        fn.scalar_names.add(n.id)
+            elif isinstance(node, (ast.Import, ast.ImportFrom)):
+                for alias in node.names:
+                    nm = (alias.asname or alias.name).split(".")[0]
+                    (fn.locals if fn.parent else self.module_names).add(nm)
+            for child in ast.iter_child_nodes(node):
+                visit(child, fn)
+
+        for st in self.tree.body:
+            visit(st, self.module_fn)
+        self.module_names |= self.module_fn.locals
+        self.module_names |= set(self.module_fn.assigns)
+        for name, exprs in self.module_fn.assigns.items():
+            if all(e is not None and self._is_static_expr(e, self.module_fn)
+                   for e in exprs):
+                self.np_like_globals.add(name)
+        self._mark_traced_and_kernels()
+        self._collect_donating_and_static()
+
+    def _record_binding(self, fn: _FnInfo, tgt, value):
+        for n in ast.walk(tgt) if not isinstance(tgt, ast.Name) else [tgt]:
+            if isinstance(n, ast.Name):
+                fn.locals.add(n.id)
+                fn.assigns.setdefault(n.id, []).append(value)
+
+    def _fn_info(self, node: ast.AST) -> Optional[_FnInfo]:
+        for sub in self.iter_fn_infos():
+            if sub.node is node:
+                return sub
+        return None
+
+    def iter_fn_infos(self) -> Iterable[_FnInfo]:
+        seen = set()
+        for fn in self.fn_of_node.values():
+            if id(fn) not in seen:
+                seen.add(id(fn))
+                yield fn
+
+    def _mark_traced_and_kernels(self):
+        infos = {f.node: f for f in self.iter_fn_infos()}
+        # decorators
+        for node, fn in list(infos.items()):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for dec in node.decorator_list:
+                d = _dotted(dec) or _dotted(getattr(dec, "func", dec))
+                if d in _TRACING_COMBINATORS:
+                    fn.traced = True
+                if isinstance(dec, ast.Call):
+                    for a in list(dec.args) + [kw.value for kw in dec.keywords]:
+                        if _dotted(a) in ("jax.jit", "jit"):
+                            fn.traced = True
+        # combinator / pallas_call arguments
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            d = _dotted(node.func)
+            is_pallas = bool(d) and d.split(".")[-1] == "pallas_call"
+            if d not in _TRACING_COMBINATORS and not is_pallas:
+                continue
+            for a in list(node.args) + [kw.value for kw in node.keywords]:
+                target = None
+                if isinstance(a, ast.Name):
+                    target = self._resolve_local_def(a, node)
+                elif isinstance(a, (ast.Lambda,)):
+                    target = a
+                if target is not None and target in infos:
+                    infos[target].traced = True
+                    if is_pallas:
+                        infos[target].kernel = True
+        # bodies nested inside traced functions trace too
+        changed = True
+        while changed:
+            changed = False
+            for fn in infos.values():
+                if not fn.traced and fn.parent is not None and fn.parent.traced:
+                    fn.traced = True
+                    changed = True
+
+    def _resolve_local_def(self, name_node: ast.Name,
+                           at: ast.AST) -> Optional[ast.AST]:
+        fn = self.fn_of_node.get(at) or self.module_fn
+        while fn is not None:
+            for cand in self.defs_by_name.get(name_node.id, []):
+                if self.fn_of_node.get(cand) is fn:
+                    return cand
+            fn = fn.parent
+        cands = self.defs_by_name.get(name_node.id, [])
+        return cands[-1] if cands else None
+
+    def _collect_donating_and_static(self):
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            d = _dotted(node.func)
+            if d not in ("jax.jit", "jit", "functools.partial", "partial"):
+                continue
+            kwargs = {kw.arg: kw.value for kw in node.keywords if kw.arg}
+            is_jit = d in ("jax.jit", "jit") or any(
+                _dotted(a) in ("jax.jit", "jit") for a in node.args)
+            if not is_jit:
+                continue
+            donate = kwargs.get("donate_argnums")
+            statics = {k: kwargs[k] for k in
+                       ("static_argnums", "static_argnames") if k in kwargs}
+            parent = getattr(node, "_parent", None)
+            # name the resulting callable: `X = jax.jit(...)` or
+            # `self._f = jax.jit(...)`; decorator form names the def.
+            bound = None
+            if isinstance(parent, ast.Assign) and len(parent.targets) == 1:
+                bound = _dotted(parent.targets[0])
+            elif isinstance(parent, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                bound = parent.name
+            if donate is not None and bound:
+                positions = _int_tuple(donate)
+                if positions:
+                    self.donating[bound.split(".")[-1]] = positions
+            if statics and bound:
+                self.static_jits[bound.split(".")[-1]] = {
+                    k: _static_spec(v) for k, v in statics.items()}
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    d = _dotted(dec) or _dotted(getattr(dec, "func", dec))
+                    if d and d.split(".")[-1] in ("lru_cache", "cache"):
+                        self.lru_cached.add(node.name)
+
+    # -- static-expression classifier (pallas capture rule) -------------------
+    def _is_static_expr(self, expr: ast.AST, fn: _FnInfo,
+                        depth: int = 0) -> bool:
+        if depth > 16 or expr is None:
+            return False
+        if isinstance(expr, ast.Constant):
+            return True
+        if isinstance(expr, (ast.Tuple, ast.List, ast.Set)):
+            return all(self._is_static_expr(e, fn, depth + 1)
+                       for e in expr.elts)
+        if isinstance(expr, ast.Name):
+            if expr.id in fn.params:
+                return True  # enclosing builder params are static config
+            if expr.id in self.np_like_globals or expr.id in self.module_names:
+                return True
+            binds = _lookup_assigns(fn, expr.id)
+            return bool(binds) and all(
+                b is not None and self._is_static_expr(b, fn, depth + 1)
+                for b in binds)
+        if isinstance(expr, ast.Attribute):
+            return True  # cfg.hub / self.cfg / np.float64 style access
+        if isinstance(expr, (ast.BinOp, ast.BoolOp, ast.Compare)):
+            return all(self._is_static_expr(e, fn, depth + 1)
+                       for e in ast.iter_child_nodes(expr)
+                       if not isinstance(e, (ast.operator, ast.cmpop,
+                                             ast.boolop)))
+        if isinstance(expr, ast.UnaryOp):
+            return self._is_static_expr(expr.operand, fn, depth + 1)
+        if isinstance(expr, ast.Subscript):
+            return self._is_static_expr(expr.value, fn, depth + 1)
+        if isinstance(expr, ast.Call):
+            d = _dotted(expr.func)
+            root = _root(d)
+            if root in _STATIC_CALL_ROOTS or root in self.np_like_globals:
+                return all(self._is_static_expr(a, fn, depth + 1)
+                           for a in expr.args)
+            # Uppercase initial: config-object constructor (GivensConfig)
+            if d and d.split(".")[-1][:1].isupper():
+                return True
+            # Method call on a static *computed* receiver, e.g.
+            # np.round(...).astype(...).  Only when the callee is not a
+            # plain dotted chain (those were already judged above —
+            # jnp.int64(...) must stay non-static).
+            if (d is None and isinstance(expr.func, ast.Attribute)
+                    and self._is_static_expr(expr.func.value, fn,
+                                             depth + 1)):
+                return all(self._is_static_expr(a, fn, depth + 1)
+                           for a in expr.args)
+            return False
+        if isinstance(expr, ast.IfExp):
+            return all(self._is_static_expr(e, fn, depth + 1)
+                       for e in (expr.test, expr.body, expr.orelse))
+        return False
+
+    # -- emission -------------------------------------------------------------
+    def emit(self, rule: str, node: ast.AST, scope: str, detail: str,
+             message: str):
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        waived = self._inline_waiver(rule, line)
+        self.findings.append(Finding(rule, self.path, line, col, scope,
+                                     _clean(detail), message, waived))
+
+    def _inline_waiver(self, rule: str, line: int) -> bool:
+        for ln in (line, line - 1):
+            if 1 <= ln <= len(self.lines):
+                text = self.lines[ln - 1]
+                marker = f"lint: allow[{rule}]"
+                if marker in text:
+                    after = text.split(marker, 1)[1].strip()
+                    if after:  # justification required
+                        return True
+        return False
+
+    # -- rules ----------------------------------------------------------------
+    def run(self) -> list[Finding]:
+        self.rule_pallas_traced_capture()
+        self.rule_host_roundtrip()
+        self.rule_narrowing_cast()
+        self.rule_unguarded_scatter()
+        self.rule_donated_reuse()
+        self.rule_unhashable_static()
+        return self.findings
+
+    def rule_pallas_traced_capture(self):
+        for fn in list(self.iter_fn_infos()):
+            if not fn.kernel:
+                continue
+            free = self._free_names(fn)
+            for name, load in sorted(free.items()):
+                enclosing, binds = self._find_enclosing_binding(fn, name)
+                if enclosing is None:
+                    continue  # module global / builtin: static
+                bad = [b for b in binds
+                       if b is None or not self._is_static_expr(b, enclosing)]
+                if bad:
+                    rhs = _unparse(bad[0]) if bad[0] is not None else "<loop>"
+                    self.emit(
+                        "pallas-traced-capture", load, fn.scope_name,
+                        detail=f"capture:{name}",
+                        message=f"pallas kernel '{fn.name}' closes over "
+                                f"'{name}' bound from non-static "
+                                f"'{_clean(rhs)}' — compute kernel "
+                                "constants in numpy (PR-5 bug class)")
+
+    def _free_names(self, fn: _FnInfo) -> dict[str, ast.AST]:
+        bound = fn.params | fn.locals
+        free: dict[str, ast.AST] = {}
+        for node in ast.walk(fn.node):
+            if (isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load)
+                    and node.id not in bound
+                    and node.id not in _BUILTIN_NAMES
+                    and self.fn_of_node.get(node, fn).scope_in(fn)):
+                free.setdefault(node.id, node)
+        return free
+
+    def _find_enclosing_binding(self, fn: _FnInfo, name: str):
+        enc = fn.parent
+        while enc is not None and enc.parent is not None:  # stop at module
+            if name in enc.params:
+                return None, []  # params treated as static config
+            if name in enc.assigns:
+                return enc, enc.assigns[name]
+            if name in enc.locals:
+                return enc, [None]
+            enc = enc.parent
+        return None, []
+
+    def rule_host_roundtrip(self):
+        for fn in self.iter_fn_infos():
+            if not fn.traced:
+                continue
+            tracer_names = self._tracerish_names(fn)
+            for node in ast.walk(fn.node):
+                if self.fn_of_node.get(node) is not None and \
+                        not self.fn_of_node[node].scope_in(fn):
+                    continue
+                if not isinstance(node, ast.Call):
+                    continue
+                d = _dotted(node.func)
+                if isinstance(node.func, ast.Attribute) and \
+                        node.func.attr in ("item", "tolist"):
+                    self.emit("host-roundtrip", node, fn.scope_name,
+                              detail=f".{node.func.attr}()",
+                              message=f"'.{node.func.attr}()' inside traced "
+                                      f"'{fn.name}' forces a host round-trip")
+                    continue
+                root = _root(d)
+                mentions = {n.id for a in node.args
+                            for n in ast.walk(a) if isinstance(n, ast.Name)}
+                if not (mentions & tracer_names):
+                    continue
+                if d in ("float", "int", "bool"):
+                    self.emit("host-roundtrip", node, fn.scope_name,
+                              detail=f"{d}({_clean(_unparse(node.args[0]) if node.args else '')})",
+                              message=f"'{d}()' on a traced value inside "
+                                      f"'{fn.name}' concretizes the tracer")
+                elif root in ("np", "numpy"):
+                    self.emit("host-roundtrip", node, fn.scope_name,
+                              detail=_clean(f"{d}(...)"),
+                              message=f"numpy call '{d}' receives traced "
+                                      f"values inside '{fn.name}'")
+
+    def _tracerish_names(self, fn: _FnInfo) -> set[str]:
+        names = set(fn.params)
+        for _ in range(2):  # tiny fixpoint: assignments from tracer exprs
+            for name, exprs in fn.assigns.items():
+                for e in exprs:
+                    if e is None:
+                        continue
+                    for n in ast.walk(e):
+                        if isinstance(n, ast.Name) and n.id in names:
+                            names.add(name)
+                        d = _dotted(n) if isinstance(n, ast.Attribute) else None
+                        if d and _root(d) in ("jnp", "lax"):
+                            names.add(name)
+        return names
+
+    def rule_narrowing_cast(self):
+        blessed = any(self.path.endswith(b) for b in BLESSED_CAST_BOUNDARIES)
+        if blessed:
+            return
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            scope = (self.fn_of_node.get(node) or self.module_fn).scope_name
+            if isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "astype" and node.args:
+                tgt = _unparse(node.args[0])
+                if tgt in _NARROW_REAL_TARGETS:
+                    self.emit("narrowing-cast", node, scope,
+                              detail=f"astype:{tgt}",
+                              message=f"'.astype({tgt})' silently drops "
+                                      "imaginary parts / narrows precision "
+                                      "outside a blessed codec boundary "
+                                      "(PR-4 bug class)")
+                continue
+            d = _dotted(node.func)
+            if d in ("jnp.asarray", "np.asarray", "jnp.array", "np.array") \
+                    and len(node.args) >= 2:
+                tgt = _unparse(node.args[1])
+                if tgt in _NARROW_REAL_TARGETS:
+                    self.emit("narrowing-cast", node, scope,
+                              detail=f"{d}:{tgt}",
+                              message=f"'{d}(..., {tgt})' is an implicit "
+                                      "real/narrowing cast outside a blessed "
+                                      "codec boundary (PR-4 bug class)")
+
+    def rule_unguarded_scatter(self):
+        for node in ast.walk(self.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _SCATTER_METHODS
+                    and isinstance(node.func.value, ast.Subscript)
+                    and isinstance(node.func.value.value, ast.Attribute)
+                    and node.func.value.value.attr == "at"):
+                continue
+            idx = node.func.value.slice
+            fn = self.fn_of_node.get(node) or self.module_fn
+            if not self._dynamic_index(idx, fn):
+                continue
+            kwargs = {kw.arg: kw.value for kw in node.keywords}
+            uniq = kwargs.get("unique_indices")
+            if isinstance(uniq, ast.Constant) and uniq.value is True:
+                continue
+            self.emit("unguarded-scatter", node, fn.scope_name,
+                      detail=f"at[{_clean(_unparse(idx), 40)}].{node.func.attr}",
+                      message="scatter with a dynamic index and no "
+                              "unique_indices guarantee: duplicate indices "
+                              "make the update order unspecified (PR-6 "
+                              "fleet hazard) — guard, serialize, or "
+                              "allowlist with the dedup argument")
+
+    def _dynamic_index(self, idx: ast.AST, fn: _FnInfo) -> bool:
+        elts = idx.elts if isinstance(idx, ast.Tuple) else [idx]
+        scalars = set(fn.scalar_names)
+        f = fn.parent
+        while f is not None:
+            scalars |= f.scalar_names
+            f = f.parent
+        # first parameter of a loop-body function is the induction scalar
+        if fn.params and fn.traced:
+            first = (fn.node.args.args[0].arg
+                     if getattr(fn.node, "args", None) and fn.node.args.args
+                     else None)
+            if first:
+                scalars.add(first)
+        for e in elts:
+            if not self._is_scalar_index(e, fn, scalars):
+                return True
+        return False
+
+    def _is_scalar_index(self, e: ast.AST, fn: _FnInfo, scalars: set[str],
+                         depth: int = 0) -> bool:
+        """Can `e` only ever be a python/trace-time scalar index?
+
+        Scalar indices cannot carry duplicate entries, so scatters over
+        them are unique by construction.
+        """
+        if depth > 5:
+            return False
+        if isinstance(e, (ast.Constant, ast.Slice)):
+            return True
+        if isinstance(e, ast.UnaryOp):
+            return self._is_scalar_index(e.operand, fn, scalars, depth + 1)
+        if isinstance(e, ast.BinOp):
+            return (self._is_scalar_index(e.left, fn, scalars, depth + 1)
+                    and self._is_scalar_index(e.right, fn, scalars,
+                                              depth + 1))
+        if isinstance(e, ast.Call) and _dotted(e.func) in ("len", "int",
+                                                           "min", "max"):
+            return True
+        if isinstance(e, ast.Subscript):
+            # `X.shape[k]` is a python int
+            v = e.value
+            return isinstance(v, ast.Attribute) and v.attr == "shape"
+        if isinstance(e, ast.Name):
+            if e.id in scalars:
+                return True
+            binds = _lookup_assigns(fn, e.id)
+            return bool(binds) and all(
+                b is not None
+                and self._is_scalar_index(b, fn, scalars, depth + 1)
+                for b in binds)
+        return False
+
+    def rule_donated_reuse(self):
+        if not self.donating:
+            return
+        for fn in self.iter_fn_infos():
+            if not isinstance(fn.node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            self._check_donated_in_body(fn, fn.node.body)
+
+    def _check_donated_in_body(self, fn: _FnInfo, body: list[ast.stmt]):
+        donated: dict[str, int] = {}  # name -> line of the donating call
+        for stmt in body:
+            rebound = set()
+            if isinstance(stmt, ast.Assign):
+                for tgt in stmt.targets:
+                    for n in ast.walk(tgt):
+                        if isinstance(n, ast.Name):
+                            rebound.add(n.id)
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Name) and \
+                        isinstance(node.ctx, ast.Load) and node.id in donated:
+                    self.emit("donated-reuse", node, fn.scope_name,
+                              detail=f"use-after-donate:{node.id}",
+                              message=f"'{node.id}' was donated at line "
+                                      f"{donated[node.id]} and is read "
+                                      "again — the buffer is deleted by "
+                                      "donate_argnums")
+            for node in ast.walk(stmt):
+                if not isinstance(node, ast.Call):
+                    continue
+                callee = _dotted(node.func)
+                short = callee.split(".")[-1] if callee else None
+                if short in self.donating:
+                    for pos in self.donating[short]:
+                        if pos < len(node.args) and \
+                                isinstance(node.args[pos], ast.Name):
+                            nm = node.args[pos].id
+                            if nm not in rebound:
+                                donated[nm] = node.lineno
+            donated = {k: v for k, v in donated.items() if k not in rebound}
+
+    def rule_unhashable_static(self):
+        targets = dict(self.static_jits)
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            d = _dotted(node.func)
+            short = d.split(".")[-1] if d else None
+            if short in self.lru_cached:
+                for a in list(node.args) + [kw.value for kw in node.keywords]:
+                    if self._unhashable_expr(a):
+                        fn = self.fn_of_node.get(node) or self.module_fn
+                        self.emit("unhashable-static", node, fn.scope_name,
+                                  detail=f"lru:{short}:{_clean(_unparse(a), 30)}",
+                                  message=f"unhashable/array argument "
+                                          f"'{_clean(_unparse(a), 40)}' to "
+                                          f"lru_cached '{short}'")
+                continue
+            if short not in targets:
+                continue
+            spec = targets[short]
+            argnums = spec.get("static_argnums") or ()
+            argnames = spec.get("static_argnames") or ()
+            fn = self.fn_of_node.get(node) or self.module_fn
+            for i, a in enumerate(node.args):
+                if i in argnums and self._unhashable_expr(a):
+                    self.emit("unhashable-static", node, fn.scope_name,
+                              detail=f"jit:{short}:pos{i}",
+                              message=f"unhashable value at static position "
+                                      f"{i} of jitted '{short}'")
+            for kw in node.keywords:
+                if kw.arg in argnames and self._unhashable_expr(kw.value):
+                    self.emit("unhashable-static", node, fn.scope_name,
+                              detail=f"jit:{short}:{kw.arg}",
+                              message=f"unhashable value for static arg "
+                                      f"'{kw.arg}' of jitted '{short}'")
+
+    def _unhashable_expr(self, a: ast.AST) -> bool:
+        if isinstance(a, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                          ast.DictComp, ast.SetComp)):
+            return True
+        if isinstance(a, ast.Call):
+            d = _dotted(a.func)
+            return _root(d) in ("jnp",) or d in ("list", "dict", "set")
+        return False
+
+
+def _int_tuple(node: ast.AST) -> tuple[int, ...]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                out.append(e.value)
+        return tuple(out)
+    return ()
+
+
+def _static_spec(node: ast.AST):
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        vals = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant):
+                vals.append(e.value)
+        return tuple(vals)
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    return ()
+
+
+def _lookup_assigns(fn: _FnInfo, name: str):
+    f: Optional[_FnInfo] = fn
+    while f is not None:
+        if name in f.assigns:
+            return f.assigns[name]
+        if name in f.params:
+            return []
+        f = f.parent
+    return []
+
+
+# names always available without a binding
+_BUILTIN_NAMES = set(dir(__builtins__)) | {
+    "True", "False", "None", "self", "cls", "__name__", "__file__",
+}
+
+
+def _scope_in(self: _FnInfo, other: _FnInfo) -> bool:
+    f: Optional[_FnInfo] = self
+    while f is not None:
+        if f is other:
+            return True
+        f = f.parent
+    return False
+
+
+_FnInfo.scope_in = _scope_in  # type: ignore[attr-defined]
+
+
+def lint_source(source: str, path: str) -> list[Finding]:
+    """Lint one module's source text; `path` is the repo-relative name."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as exc:
+        return [Finding("syntax-error", path, exc.lineno or 1, 0, "<module>",
+                        "syntax", f"cannot parse: {exc.msg}")]
+    analyzer = _Analyzer(tree, path.replace(os.sep, "/"), source)
+    return analyzer.run()
+
+
+def iter_py_files(paths: Iterable[str], root: str) -> Iterable[str]:
+    for p in paths:
+        full = os.path.join(root, p) if not os.path.isabs(p) else p
+        if os.path.isfile(full) and full.endswith(".py"):
+            yield full
+        elif os.path.isdir(full):
+            for dirpath, dirnames, filenames in os.walk(full):
+                dirnames[:] = [d for d in dirnames
+                               if d not in ("__pycache__", ".git")]
+                for f in sorted(filenames):
+                    if f.endswith(".py"):
+                        yield os.path.join(dirpath, f)
+
+
+def lint_paths(paths: Iterable[str], root: str = ".") -> list[Finding]:
+    """Lint every .py file under `paths` (files or directories)."""
+    findings: list[Finding] = []
+    for full in iter_py_files(paths, root):
+        rel = os.path.relpath(full, root).replace(os.sep, "/")
+        with open(full, "r", encoding="utf-8") as fh:
+            findings.extend(lint_source(fh.read(), rel))
+    return findings

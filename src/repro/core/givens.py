@@ -17,10 +17,8 @@ The unit is bit-accurate w.r.t. the architectures of Figs. 2-7; `N` and
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any
 
-import jax
 import jax.numpy as jnp
 
 from . import converters as conv

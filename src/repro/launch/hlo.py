@@ -19,7 +19,6 @@ from __future__ import annotations
 import re
 from collections import defaultdict
 
-import numpy as np
 
 __all__ = ["collective_bytes", "DTYPE_BYTES", "parse_shape_bytes"]
 

@@ -18,7 +18,6 @@ mesh — ZeRO-3-style sharding extends across pods; batch shards the same axes.
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import numpy as np

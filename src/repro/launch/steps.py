@@ -8,7 +8,6 @@ The same builders drive real training/serving when given real arrays.
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

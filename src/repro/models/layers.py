@@ -8,8 +8,6 @@ Conventions:
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ scan over the pattern period with a small Python loop inside.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

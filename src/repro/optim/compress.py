@@ -13,8 +13,6 @@ collective on the 'pod' axis — visible (and counted) in the dry-run HLO.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

@@ -103,6 +103,7 @@ class QRDEngine:
         A = jnp.asarray(A)
         kind = A.dtype.kind
         if kind in "biu":
+            # lint: allow[narrowing-cast] bool/int -> float64 upcast only
             A = A.astype(jnp.float64)
         elif kind == "c":
             if not config.is_complex():

@@ -46,7 +46,15 @@ def validate_lam(lam, what="forgetting factor"):
     `repro.serve.RLSFleet`) funnels through here so no path accepts a
     non-positive λ.
     """
-    arr = np.asarray(lam, dtype=np.float64)
+    raw = np.asarray(lam)
+    if raw.dtype.kind == "c":
+        # np.asarray(complex, float64) would silently discard the
+        # imaginary part, letting e.g. 0.9+0.5j pass as 0.9.
+        raise TypeError(f"{what} must be real, got complex {lam!r}")
+    if raw.dtype.kind not in "fiu":
+        raise TypeError(f"{what} must be numeric, got {raw.dtype}")
+    # lint: allow[narrowing-cast] real/int-only here, complex rejected above
+    arr = raw.astype(np.float64)
     if arr.size == 0:
         raise ValueError(f"{what} must be non-empty")
     if not np.all((arr > 0.0) & (arr <= 1.0)):

@@ -373,18 +373,24 @@ class RLSFleet:
                 raise ValueError(f"admit of occupied slot(s) {busy.tolist()}"
                                  " — evict first")
         lam_arr = validate_lam(self.lam if lam is None else lam)
-        lam_arr = np.broadcast_to(lam_arr, ids.shape).astype(np.float64)
+        # validate_lam returns float64 (and rejects complex), so a bare
+        # broadcast is dtype-safe here.
+        lam_arr = np.broadcast_to(lam_arr, ids.shape)
         delta = self.delta if delta is None else float(delta)
         init = jnp.eye(self.n, self.n + 1, dtype=self.dtype) * delta
         rows = jnp.broadcast_to(init, (ids.size, self.n, self.n + 1))
         jids = jnp.asarray(ids)
         st = self.state
+        # unique_indices: `free` slots are distinct by construction and
+        # _check_ids raises on duplicate caller ids, so XLA may skip the
+        # serialized-scatter fallback.
         self.state = FleetState(
-            work=st.work.at[jids].set(rows),
-            lam=st.lam.at[jids].set(jnp.asarray(lam_arr)),
-            occupied=st.occupied.at[jids].set(True),
-            generation=st.generation.at[jids].add(1),
-            updates=st.updates.at[jids].set(0),
+            work=st.work.at[jids].set(rows, unique_indices=True),
+            lam=st.lam.at[jids].set(jnp.asarray(lam_arr),
+                                    unique_indices=True),
+            occupied=st.occupied.at[jids].set(True, unique_indices=True),
+            generation=st.generation.at[jids].add(1, unique_indices=True),
+            updates=st.updates.at[jids].set(0, unique_indices=True),
         )
         self._place()
         return ids
@@ -399,9 +405,10 @@ class RLSFleet:
             raise ValueError(f"evict of unoccupied slot(s) {idle.tolist()}")
         jids = jnp.asarray(ids)
         st = self.state
+        # unique_indices: _check_ids raises on duplicate ids.
         self.state = st._replace(
-            occupied=st.occupied.at[jids].set(False),
-            generation=st.generation.at[jids].add(1),
+            occupied=st.occupied.at[jids].set(False, unique_indices=True),
+            generation=st.generation.at[jids].add(1, unique_indices=True),
         )
         self._place()
         return ids
@@ -472,10 +479,12 @@ class RLSFleet:
         (slot,) = self.admit(slot_ids=[slot], lam=float(arrays["lam"]))
         row = np.concatenate([R, z[:, None]], axis=1).astype(self.dtype)
         st = self.state
+        # unique_indices: `slot` is a single admitted slot id.
         self.state = st._replace(
-            work=st.work.at[slot].set(jnp.asarray(row)),
+            work=st.work.at[slot].set(jnp.asarray(row),
+                                      unique_indices=True),
             updates=st.updates.at[slot].set(
-                jnp.int32(int(arrays["updates"]))),
+                jnp.int32(int(arrays["updates"])), unique_indices=True),
         )
         self._place()
         return slot

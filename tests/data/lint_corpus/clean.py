@@ -1,0 +1,58 @@
+# expect-finding: none
+# The fixed counterparts of every seeded bug — must lint clean.
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def build_rotation_kernel(cfg):
+    comp = np.int64(2) ** cfg.p        # host scalar: the PR-5 fix
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...] * comp
+
+    def run(x):
+        return pl.pallas_call(kernel, out_shape=x)(x)
+
+    return run
+
+
+@jax.jit
+def step(x, w):
+    scale = jnp.sum(x)                 # stays on device
+    return x * scale + w
+
+
+def write_rows(buf, slot_ids, rows):
+    # uniqueness established by the caller; assert it to XLA
+    return buf.at[slot_ids].set(rows, unique_indices=True)
+
+
+def solve_rows(R, y):
+    n = R.shape[-1]
+    x = jnp.zeros_like(y)
+    for row in range(n):               # python scalar index: no scatter risk
+        x = x.at[row].set(y[row] / R[row, row])
+    return x
+
+
+def make_driver(step_fn):
+    donating = jax.jit(step_fn, donate_argnums=(0,))
+
+    def drive(state, xs):
+        state = donating(state, xs)    # rebound: old buffer never reread
+        return state.sum()
+
+    return drive
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def reshape(x, shape):
+    return x.reshape(shape)
+
+
+def call(x):
+    return reshape(x, (4, 4))          # tuple: hashable static

@@ -1,0 +1,14 @@
+# expect-finding: donated-reuse
+# Reading a buffer after passing it at a donated position: the step's
+# donate_argnums=(0,) invalidates `state` at the call.
+import jax
+
+
+def make_driver(step_fn):
+    step = jax.jit(step_fn, donate_argnums=(0,))
+
+    def drive(state, xs):
+        new_state = step(state, xs)
+        return state.sum() + new_state.sum()   # `state` is gone
+
+    return drive

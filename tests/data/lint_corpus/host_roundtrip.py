@@ -1,0 +1,23 @@
+# expect-finding: host-roundtrip
+# float()/.item()/np.* on a tracer inside a jitted body: concretization
+# error at trace time at best, a silent host sync at worst.
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def step(x, w):
+    scale = float(jnp.sum(x))          # concretizes the tracer
+    return x * scale + w
+
+
+@jax.jit
+def norm(x):
+    m = jnp.max(jnp.abs(x))
+    return x / m.item()                # host round-trip
+
+
+@jax.jit
+def mix(x):
+    return np.sqrt(x) + 1.0            # numpy on a tracer

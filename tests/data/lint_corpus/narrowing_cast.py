@@ -1,0 +1,14 @@
+# expect-finding: narrowing-cast
+# Minimized PR-4 reproduction: complex MIMO operands silently cast to a
+# real dtype (ComplexWarning at best), outside the blessed encode/decode
+# boundary modules.
+import jax.numpy as jnp
+
+
+def snapshot(X, d):
+    snap = jnp.concatenate([X, d[:, None]], axis=1)
+    return snap.astype(jnp.float64)    # drops Im(X) without a word
+
+
+def downcast(acc):
+    return jnp.asarray(acc, jnp.float32)

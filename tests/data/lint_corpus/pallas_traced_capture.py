@@ -1,0 +1,21 @@
+# expect-finding: pallas-traced-capture
+# Minimized PR-5 reproduction: the gain-compensation constant was built
+# with jnp inside the kernel builder, so the pallas_call kernel closure
+# captured a committed jax array.  Mosaic rejects captured array
+# constants; interpret mode silently hides the bug.
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def build_rotation_kernel(cfg):
+    # BUG: traced/committed array constant captured by the closure.
+    # The fix is np.int64(...) — computed on host, embedded as a scalar.
+    comp = jnp.int64(2) ** cfg.p
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...] * comp
+
+    def run(x):
+        return pl.pallas_call(kernel, out_shape=x)(x)
+
+    return run

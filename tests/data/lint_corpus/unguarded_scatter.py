@@ -1,0 +1,13 @@
+# expect-finding: unguarded-scatter
+# Minimized PR-6 reproduction: scatter over a caller-supplied slot-id
+# array.  Padded batches share a sentinel id, so duplicates are real and
+# the update order is unspecified.
+import jax.numpy as jnp
+
+
+def write_rows(buf, slot_ids, rows):
+    return buf.at[slot_ids].set(rows, mode="drop")
+
+
+def bump(counts, slot_ids):
+    return counts.at[slot_ids].add(1)

@@ -1,0 +1,15 @@
+# expect-finding: unhashable-static
+# List literal passed for a static jit parameter: static args are cache
+# keys and must be hashable — this raises at call time.
+import jax
+
+
+def reshape(x, shape):
+    return x.reshape(shape)
+
+
+reshape_j = jax.jit(reshape, static_argnums=(1,))
+
+
+def call(x):
+    return reshape_j(x, [4, 4])

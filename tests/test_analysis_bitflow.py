@@ -1,0 +1,201 @@
+"""Bit-width dataflow verifier: proof, negative-control, and lane tests.
+
+Three layers:
+
+1. the full-datapath proof discharges every obligation for every paper
+   configuration (the CI contract behind ``python -m repro.analysis``);
+2. negative controls: deliberately over-wide inputs must FAIL checks —
+   a verifier that cannot fail proves nothing;
+3. differential containment: for concrete int64 edge values, the
+   abstract transfer functions must contain the value computed by the
+   real dual-int32 lane primitives in `kernels/packed_lanes.py`.
+   (Randomized spec-level differentials live in
+   test_analysis_bitflow_properties.py under the hypothesis dev extra.)
+"""
+import numpy as np
+import pytest
+
+from repro.analysis.bitflow import (Alu, paper_configs, verify_all,
+                                    verify_config)
+from repro.analysis.domain import (INT64_MAX, INT64_MIN, M64, ProofLog,
+                                   const, interval)
+
+
+def _signed(u):
+    u &= M64
+    return u - (1 << 64) if u >> 63 else u
+
+
+# -- 1. the proof itself ------------------------------------------------------
+
+def test_all_paper_configs_prove():
+    rep = verify_all()
+    assert rep.ok, rep.failed[:5]
+    # 18 configs x full datapath + the lane lemmas: a meaningful corpus
+    assert len(rep.configs) >= 15
+    assert sum(len(c["checks"]) for c in rep.configs) > 4000
+
+
+def test_proven_widths_match_format_constants():
+    """The report is the software analogue of the paper's tables: the
+    proven occupancies must land on (and inside) the architectural
+    widths N, w = N+2, and the IEEE field sizes."""
+    rep = verify_all()
+    for c in rep.configs:
+        n = int(c["name"].split("-n")[1].split("-")[0])
+        s = c["stages"]
+        assert s["expand-occupancy"]["bits"] <= n
+        assert s["expand-occupancy"]["capacity"] == n
+        assert s["cordic-w-occupancy"]["capacity"] == n + 2   # w = N+2
+        assert s["cordic-w-occupancy"]["bits"] <= n + 2
+        man_cap = s["man-occupancy"]["capacity"]
+        assert man_cap in (10, 23)                            # half/single
+        assert s["man-occupancy"]["bits"] <= man_cap
+        assert s["exp-occupancy"]["capacity"] in (5, 8)
+
+
+def test_lane_lemmas_prove():
+    rep = verify_all(configs=paper_configs()[:1])
+    ops = {c.op for c in rep.lane_checks}
+    assert "mul32-mid-no-wrap" in ops
+    assert "funnel-shift-defined" in ops
+    assert all(c.ok for c in rep.lane_checks)
+
+
+def test_report_round_trips_to_json():
+    import json
+    rep = verify_all(configs=paper_configs()[:1])
+    back = json.loads(json.dumps(rep.as_dict()))
+    assert back["ok"] is True
+    assert back["failed"] == 0
+
+
+# -- 2. negative controls -----------------------------------------------------
+
+def test_admit64_flags_overflow():
+    log = ProofLog()
+    alu = Alu(log)
+    big = const(INT64_MAX)
+    alu.add64(big, big)                 # 2^64-2: cannot fit
+    assert not log.ok
+    assert any(c.op == "add64" and not c.ok for c in log.checks)
+
+
+def test_admit64_wraps_like_hardware():
+    """On failure the result must mirror concrete modular semantics."""
+    log = ProofLog()
+    alu = Alu(log)
+    w = alu.add64(const(INT64_MAX), const(1))
+    assert not log.ok
+    assert w.contains(_signed(INT64_MAX + 1))   # == INT64_MIN
+
+
+def test_mul_overflow_detected():
+    log = ProofLog()
+    alu = Alu(log)
+    alu.mul64(const(1 << 40), const(1 << 40))
+    assert not log.ok
+
+
+def test_unmasked_wide_shift_fails_rne_confinement():
+    """rshift_rne64 with an unclamped shift range and no masking bound
+    must fail the half-bit confinement obligation."""
+    log = ProofLog()
+    alu = Alu(log)
+    alu.rshift_rne64(interval(0, 1 << 40), interval(0, 100),
+                     masked_above=None)
+    assert any(c.op == "rne-half-confined" and not c.ok
+               for c in log.checks)
+
+
+def test_oversized_config_rejected():
+    """N > 50 breaks the float64-frexp ilog2 exactness domain; the
+    verifier must refuse rather than silently prove nonsense."""
+    from repro.core.givens import GivensConfig
+    with pytest.raises(ValueError):
+        verify_config(GivensConfig(n=55, hub=False))
+
+
+# -- 3. differential vs the real int32 lanes (vectorized jax calls) -----------
+
+def _edge_values():
+    rng = np.random.default_rng(20260808)
+    vals = [0, 1, -1, 2, -2, INT64_MAX, INT64_MIN, INT64_MAX - 1,
+            INT64_MIN + 1, (1 << 32) - 1, 1 << 32, -(1 << 32),
+            (1 << 31) - 1, 1 << 31, 0x5555555555555555,
+            _signed(0xAAAAAAAAAAAAAAAA)]
+    vals += [int(x) for x in rng.integers(INT64_MIN, INT64_MAX, 48,
+                                          dtype=np.int64)]
+    return vals
+
+
+def test_lane_primitives_contained_in_abstract():
+    pl = pytest.importorskip("repro.kernels.packed_lanes")
+    import jax.numpy as jnp
+
+    vals = _edge_values()
+    pairs = [(a, b) for a in vals[:16] for b in vals[:16]]
+    pairs += list(zip(vals, reversed(vals)))
+    A = np.array([p[0] for p in pairs], dtype=np.int64)
+    B = np.array([p[1] for p in pairs], dtype=np.int64)
+
+    def to_lanes(X):
+        return (jnp.asarray((X >> 32) & 0xFFFFFFFF, jnp.uint32),
+                jnp.asarray(X & 0xFFFFFFFF, jnp.uint32))
+
+    def from_lanes(pair):
+        h = np.asarray(pair[0], np.uint64)
+        l = np.asarray(pair[1], np.uint64)
+        return [(int(hh) << 32) | int(ll) for hh, ll in zip(h, l)]
+
+    la, lb = to_lanes(A), to_lanes(B)
+    sh = np.abs(A) % 64
+    lsh = jnp.asarray(sh, jnp.int32)   # shifts are plain int32, not lanes
+
+    concrete = {
+        "add64": from_lanes(pl.add64(la, lb)),
+        "sub64": from_lanes(pl.sub64(la, lb)),
+        "mul64": from_lanes(pl.mul64(la, lb)),
+        "and64": from_lanes(pl.and64(la, lb)),
+        "or64": from_lanes(pl.or64(la, lb)),
+        "xor64": from_lanes(pl.xor64(la, lb)),
+        "shl64": from_lanes(pl.shl64(la, lsh)),
+        "shr64": from_lanes(pl.shr64(la, lsh)),
+        "sar64": from_lanes(pl.sar64(la, lsh)),
+        "rshift_rne64": from_lanes(pl.rshift_rne64(la, lsh)),
+    }
+
+    for i, (a, b) in enumerate(pairs):
+        s = int(sh[i])
+        alu = Alu(ProofLog())
+        wa, wb, ws = const(a), const(b), const(s)
+        abstract = {
+            "add64": alu.add64(wa, wb),
+            "sub64": alu.sub64(wa, wb),
+            "mul64": alu.mul64(wa, wb),
+            "and64": alu.and64(wa, wb),
+            "or64": alu.or64(wa, wb),
+            "xor64": alu.xor64(wa, wb),
+            "shl64": alu.shl64(wa, ws),
+            "shr64": alu.shr64(wa, ws),
+            "sar64": alu.sar64(wa, ws),
+            "rshift_rne64": alu.rshift_rne64(wa, ws, masked_above=63),
+        }
+        for op, words in abstract.items():
+            got = _signed(concrete[op][i])
+            assert words.contains(got), (
+                f"{op}(a={a:#x}, b={b:#x}, s={s}): concrete {got:#x} "
+                f"escapes abstract {words}")
+
+
+def test_lane_ilog2_contained():
+    pl = pytest.importorskip("repro.kernels.packed_lanes")
+    import jax.numpy as jnp
+    vals = [v for v in _edge_values() if v > 0]
+    A = np.array(vals, dtype=np.int64)
+    la = (jnp.asarray((A >> 32) & 0xFFFFFFFF, jnp.uint32),
+          jnp.asarray(A & 0xFFFFFFFF, jnp.uint32))
+    ks = np.asarray(pl.ilog2_64(la))
+    for v, k in zip(vals, ks):
+        alu = Alu(ProofLog())
+        assert alu.ilog2_64(const(v)).contains(int(k))

@@ -1,0 +1,110 @@
+"""Hypothesis differential tests: abstract transfer fns vs the int64 spec.
+
+The soundness contract of `repro.analysis.domain`: for every concrete
+input in an abstract input, the concrete result of the mirrored
+primitive lies inside the abstract result.  Deterministic edge-case and
+real-lane differentials live in test_analysis_bitflow.py (hypothesis is
+a dev extra).
+"""
+import pytest
+
+from repro.analysis import domain as D
+from repro.analysis.bitflow import Alu
+from repro.analysis.domain import (INT64_MAX, INT64_MIN, M64, ProofLog,
+                                   const, interval)
+
+pytest.importorskip("hypothesis", reason="dev extra: see requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+i64 = st.integers(min_value=INT64_MIN, max_value=INT64_MAX)
+small_shift = st.integers(min_value=0, max_value=70)
+
+
+def _signed(u):
+    u &= M64
+    return u - (1 << 64) if u >> 63 else u
+
+
+@given(a=i64, b=i64)
+@settings(max_examples=300, deadline=None)
+def test_add_sub_mul_containment(a, b):
+    log = ProofLog()
+    alu = Alu(log)
+    wa, wb = const(a), const(b)
+    assert alu.add64(wa, wb).contains(_signed(a + b))
+    assert alu.sub64(wa, wb).contains(_signed(a - b))
+    assert alu.mul64(wa, wb).contains(_signed(a * b))
+
+
+@given(a=i64, b=i64)
+@settings(max_examples=300, deadline=None)
+def test_bitwise_containment(a, b):
+    alu = Alu(ProofLog())
+    wa, wb = const(a), const(b)
+    assert alu.and64(wa, wb).contains(_signed(a & b))
+    assert alu.or64(wa, wb).contains(_signed(a | b))
+    assert alu.xor64(wa, wb).contains(_signed(a ^ b))
+    assert alu.not64(wa).contains(~a)
+
+
+@given(v=i64, s=small_shift)
+@settings(max_examples=300, deadline=None)
+def test_shift_containment(v, s):
+    """Concrete lanes clamp shifts to [0, 63]; mirror that here."""
+    alu = Alu(ProofLog())
+    wv, ws = const(v), const(s)
+    sc = min(s, 63)
+    assert alu.shl64(wv, ws).contains(_signed((v & M64) << sc))
+    assert alu.shr64(wv, ws).contains(_signed((v & M64) >> sc))
+    assert alu.sar64(wv, ws).contains(v >> sc)
+
+
+@given(v=i64, s=st.integers(min_value=0, max_value=63))
+@settings(max_examples=300, deadline=None)
+def test_rshift_rne_containment(v, s):
+    alu = Alu(ProofLog())
+    res = alu.rshift_rne64(const(v), const(s), masked_above=63)
+    # spec: arithmetic shift + round-to-nearest-even on dropped bits
+    if s == 0:
+        expect = v
+    else:
+        q, half = v >> s, 1 << (s - 1)
+        rem = v & ((1 << s) - 1)
+        if rem > half or (rem == half and q & 1):
+            q += 1
+        expect = q
+    assert res.contains(_signed(expect))
+
+
+@given(v=st.integers(min_value=1, max_value=INT64_MAX))
+@settings(max_examples=300, deadline=None)
+def test_ilog2_containment(v):
+    alu = Alu(ProofLog())
+    assert alu.ilog2_64(const(v)).contains(v.bit_length() - 1)
+
+
+@given(lo=i64, hi=i64, v=i64)
+@settings(max_examples=300, deadline=None)
+def test_interval_transfer_monotone(lo, hi, v):
+    """Interval (not just singleton) inputs must contain any member's
+    image — the actual soundness property the proofs rely on."""
+    lo, hi = min(lo, hi), max(lo, hi)
+    if not (lo <= v <= hi):
+        v = lo
+    w = interval(lo, hi)
+    alu = Alu(ProofLog())
+    assert alu.neg64(w).contains(_signed(-v))
+    assert alu.abs64(w).contains(_signed(abs(v)))
+    assert D.join(w, const(0)).contains(v)
+
+
+@given(lo=i64, hi=i64, v=i64, s=st.integers(min_value=0, max_value=63))
+@settings(max_examples=200, deadline=None)
+def test_interval_shift_containment(lo, hi, v, s):
+    lo, hi = min(lo, hi), max(lo, hi)
+    if not (lo <= v <= hi):
+        v = hi
+    w = interval(lo, hi)
+    alu = Alu(ProofLog())
+    assert alu.sar64(w, const(s)).contains(v >> s)
+    assert alu.shr64(w, const(s)).contains(_signed((v & M64) >> s))

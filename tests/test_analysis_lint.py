@@ -1,0 +1,240 @@
+"""Hazard linter tests: seeded-bug corpus, allowlist policy, dead-code.
+
+The corpus under tests/data/lint_corpus/ holds one minimized fixture per
+rule, each a faithful reduction of a bug this repo actually shipped
+(PR 4 complex casts, PR 5 pallas closure capture, PR 6 scatter hazard).
+Every fixture must be flagged by exactly its declared rule, and the
+fixed counterparts in clean.py must stay silent — both directions guard
+the rules against rot.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis.allowlist import (AllowlistError, load_allowlist,
+                                      parse_allowlist)
+from repro.analysis.deadcode import find_dead_modules
+from repro.analysis.lint import RULES, lint_paths, lint_source
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+CORPUS = os.path.join(REPO, "tests", "data", "lint_corpus")
+
+
+def _expected_rules(path):
+    with open(path, "r", encoding="utf-8") as fh:
+        first = fh.readline()
+    assert first.startswith("# expect-finding:"), path
+    spec = first.split(":", 1)[1].strip()
+    return set() if spec == "none" else {r.strip() for r in spec.split(",")}
+
+
+# -- seeded-bug corpus --------------------------------------------------------
+
+def _corpus_files():
+    return sorted(f for f in os.listdir(CORPUS) if f.endswith(".py"))
+
+
+def test_corpus_covers_every_lint_rule():
+    covered = set()
+    for name in _corpus_files():
+        covered |= _expected_rules(os.path.join(CORPUS, name))
+    # dead-module is exercised via a synthetic tree below, not a fixture
+    assert covered == set(RULES) - {"dead-module"}
+
+
+@pytest.mark.parametrize("name", _corpus_files())
+def test_corpus_fixture_flagged_by_its_rule(name):
+    path = os.path.join(CORPUS, name)
+    expected = _expected_rules(path)
+    with open(path, "r", encoding="utf-8") as fh:
+        findings = lint_source(fh.read(), f"tests/data/lint_corpus/{name}")
+    got = {f.rule for f in findings}
+    if not expected:            # clean.py: the fixed patterns stay silent
+        assert got == set(), [f.render() for f in findings]
+    else:
+        assert expected <= got, (
+            f"{name}: expected {expected}, linter found {got or 'nothing'}")
+        assert got <= expected, (
+            f"{name}: unexpected extra findings "
+            f"{[f.render() for f in findings if f.rule not in expected]}")
+
+
+def test_pr5_traced_capture_reintroduction_fails_lint():
+    """Reintroducing the PR-5 bug — computing the gain-compensation
+    constant with jnp inside the kernel builder — must be caught."""
+    src = textwrap.dedent("""
+        import jax.numpy as jnp
+        import numpy as np
+        from jax.experimental import pallas as pl
+        from repro.core import cordic
+
+        def make_rotation(cfg, iters):
+            p = min(78 - (cfg.n + 2), 46)
+            comp = jnp.round(2.0 ** p / cordic.GAIN_TABLE[iters]
+                             ).astype(jnp.int64)
+
+            def kernel(x_ref, y_ref, o_ref):
+                o_ref[...] = x_ref[...] * comp + y_ref[...]
+
+            def apply(x, y):
+                return pl.pallas_call(kernel, out_shape=x)(x, y)
+            return apply
+    """)
+    findings = lint_source(src, "src/repro/kernels/cordic_givens.py")
+    assert any(f.rule == "pallas-traced-capture"
+               and "comp" in f.detail for f in findings), \
+        [f.render() for f in findings]
+    # and the PR-5 fix (numpy constant) passes
+    fixed = src.replace("jnp.round", "np.round").replace(
+        ".astype(jnp.int64)", ".astype(np.int64)")
+    fixed_findings = lint_source(fixed, "src/repro/kernels/cordic_givens.py")
+    assert not any(f.rule == "pallas-traced-capture"
+                   for f in fixed_findings), \
+        [f.render() for f in fixed_findings]
+
+
+def test_pr4_complex_narrowing_reintroduction_fails_lint():
+    src = textwrap.dedent("""
+        import jax.numpy as jnp
+
+        def snapshot(X, d, work_dtype):
+            snap = jnp.concatenate([X, d[:, None]], axis=1)
+            return snap.astype(jnp.float64)
+    """)
+    findings = lint_source(src, "src/repro/serve/fleet.py")
+    assert any(f.rule == "narrowing-cast" for f in findings)
+
+
+def test_inline_waiver_requires_justification():
+    base = "import jax.numpy as jnp\n\ndef f(x):\n"
+    waived = base + ("    # lint: allow[narrowing-cast] validated upstream\n"
+                     "    return x.astype(jnp.float32)\n")
+    bare = base + ("    # lint: allow[narrowing-cast]\n"
+                   "    return x.astype(jnp.float32)\n")
+    f1 = [f for f in lint_source(waived, "m.py")
+          if f.rule == "narrowing-cast"]
+    f2 = [f for f in lint_source(bare, "m.py")
+          if f.rule == "narrowing-cast"]
+    assert f1 and f1[0].waived            # justified marker waives
+    assert f2 and not f2[0].waived        # bare marker does not
+
+
+# -- repo sweep ---------------------------------------------------------------
+
+def test_repo_sweep_has_no_unwaived_findings():
+    """The CI contract: every finding in src/ is either fixed or in the
+    checked-in allowlist with a justification."""
+    findings = lint_paths(["src"], REPO)
+    findings += find_dead_modules(REPO)
+    allow = load_allowlist()
+    active, waived, stale = allow.split(findings)
+    assert active == [], [f.render() for f in active]
+    assert stale == [], [e.pattern for e in stale]
+
+
+def test_cli_exits_zero_on_clean_tree():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "src", "--no-bitflow"],
+        cwd=REPO, capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_fails_on_seeded_bug():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis",
+         "tests/data/lint_corpus/unguarded_scatter.py",
+         "--no-bitflow", "--no-deadcode", "--allow-stale"],
+        cwd=REPO, capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")})
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "unguarded-scatter" in proc.stdout
+
+
+# -- allowlist policy ---------------------------------------------------------
+
+def test_allowlist_entry_requires_justification():
+    with pytest.raises(AllowlistError):
+        parse_allowlist("narrowing-cast:src/a.py:f:astype:jnp.float32\n")
+    with pytest.raises(AllowlistError):
+        parse_allowlist("narrowing-cast:src/a.py:f:astype:jnp.float32  #\n")
+
+
+def test_allowlist_brackets_are_literal():
+    al = parse_allowlist(
+        "unguarded-scatter:src/m.py:f:at[slot_ids].set  # server dedup\n")
+    findings = lint_source(
+        "def f(buf, slot_ids, rows):\n"
+        "    return buf.at[slot_ids].set(rows)\n", "src/m.py")
+    active, waived, stale = al.split(findings)
+    assert active == [] and len(waived) == 1 and stale == []
+
+
+def test_allowlist_glob_and_stale_detection():
+    al = parse_allowlist("narrowing-cast:src/m.py:*  # whole module waived\n"
+                         "narrowing-cast:src/other.py:g:*  # never matches\n")
+    findings = lint_source(
+        "import jax.numpy as jnp\n"
+        "def f(x):\n    return x.astype(jnp.float32)\n", "src/m.py")
+    active, waived, stale = al.split(findings)
+    assert active == []
+    assert len(waived) == 1
+    assert [e.lineno for e in stale] == [2]
+
+
+def test_checked_in_allowlist_parses():
+    al = load_allowlist()
+    assert al.entries, "checked-in allowlist should not be empty"
+    for e in al.entries:
+        assert e.justification
+
+
+# -- dead-code over a synthetic tree -----------------------------------------
+
+def _mini_repo(tmp_path, extra=None):
+    src = tmp_path / "src" / "repro"
+    (src / "configs").mkdir(parents=True)
+    (src / "__init__.py").write_text("from . import used\n")
+    (src / "used.py").write_text("X = 1\n")
+    (src / "orphan.py").write_text("Y = 2\n")
+    (src / "configs" / "__init__.py").write_text(
+        'import importlib\n'
+        'def load(m):\n'
+        '    return importlib.import_module(f"repro.configs.{m}")\n')
+    (src / "configs" / "tiny.py").write_text("CFG = {}\n")
+    for rel, body in (extra or {}).items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(body)
+    return tmp_path
+
+
+def test_dead_module_detected(tmp_path):
+    root = _mini_repo(tmp_path)
+    dead = {f.detail for f in find_dead_modules(str(root))}
+    assert dead == {"repro.orphan"}
+
+
+def test_dynamic_fstring_import_keeps_package_alive(tmp_path):
+    root = _mini_repo(tmp_path)
+    dead = {f.detail for f in find_dead_modules(str(root))}
+    assert "repro.configs.tiny" not in dead
+
+
+def test_ci_entry_point_keeps_module_alive(tmp_path):
+    root = _mini_repo(tmp_path, extra={
+        ".github/workflows/ci.yml":
+            "run: python -m repro.orphan --check\n"})
+    dead = {f.detail for f in find_dead_modules(str(root))}
+    assert "repro.orphan" not in dead
+
+
+def test_own_docstring_does_not_keep_module_alive(tmp_path):
+    root = _mini_repo(tmp_path)
+    (root / "src" / "repro" / "orphan.py").write_text(
+        '"""Usage: python -m repro.orphan"""\nY = 2\n')
+    dead = {f.detail for f in find_dead_modules(str(root))}
+    assert "repro.orphan" in dead

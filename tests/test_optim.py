@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.optim import (adamw_init, adamw_update, ef_compress, ef_init,
+from repro.optim import (adamw_init, adamw_update, ef_compress,
                          dequantize_int8, qmuon_init, qmuon_update,
                          quantize_int8, warmup_cosine)
 from repro.optim.qmuon import _orth_qr

@@ -10,7 +10,6 @@ adds the adversarial search and is skipped without the dev extra.
 import numpy as np
 import pytest
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels import packed_lanes as pl

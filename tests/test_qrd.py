@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import (GivensConfig, GivensUnit, QRDEngine, qr_cordic,
-                        qr_fixed, qr_givens_float, qr_jnp, snr_db,
+                        qr_fixed, qr_givens_float, snr_db,
                         givens_schedule)
 
 

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import applicable_cells, ARCH_IDS, SHAPES, get_config
+from repro.configs import applicable_cells, ARCH_IDS, get_config
 from repro.launch.hlo import collective_bytes, parse_shape_bytes
 
 

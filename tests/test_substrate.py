@@ -1,6 +1,5 @@
 """Data pipeline, checkpointing, cluster runtime (fault tolerance)."""
 import os
-import time
 
 import numpy as np
 import jax.numpy as jnp
