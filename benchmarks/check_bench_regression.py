@@ -37,6 +37,14 @@ import sys
 DEFAULT_FACTOR = 2.0
 DEFAULT_MIN_ROOFLINE = 0.02
 
+#: Rows every fresh run must contain (enforced by `main`, i.e. CI).
+#: "New rows never fail" means the coverage gate alone cannot notice a
+#: *lane* silently dropping out of the bench before its rows ever land
+#: in a committed baseline — the tiled-datapath acceptance rows
+#: (DESIGN.md §14: panel 64x64, TSQR 4096x32) are pinned here so a
+#: refactor that stops measuring them fails loudly.
+REQUIRED_ROWS = ("tiled:64x64", "tiled:4096x32")
+
 
 def _gate_metric(doc: dict):
     """('warm_s', None) for v2 docs, ('end_to_end_s', warning) for v1."""
@@ -47,11 +55,22 @@ def _gate_metric(doc: dict):
 
 
 def compare(baseline: dict, fresh: dict, factor: float,
-            min_roofline: float = DEFAULT_MIN_ROOFLINE):
-    """Return (failures, report_lines) for two BENCH_qrd.json documents."""
+            min_roofline: float = DEFAULT_MIN_ROOFLINE,
+            required: tuple = ()):
+    """Return (failures, report_lines) for two BENCH_qrd.json documents.
+
+    ``required`` lists row keys the *fresh* document must contain
+    independent of the baseline (`REQUIRED_ROWS` when invoked as the CI
+    gate via `main`; empty for library callers comparing arbitrary
+    documents).
+    """
     base_rows = baseline.get("results", {})
     fresh_rows = fresh.get("results", {})
     failures, lines = [], []
+    for key in required:
+        if key not in fresh_rows:
+            failures.append(f"{key}: required row missing from fresh run")
+            lines.append(f"FAIL {key}: required row missing")
     metric, warning = _gate_metric(baseline)
     f_metric, f_warning = _gate_metric(fresh)
     gate = metric if metric == f_metric else "end_to_end_s"
@@ -126,7 +145,7 @@ def main(argv=None):
     with open(args.fresh) as fh:
         fresh = json.load(fh)
     failures, lines = compare(baseline, fresh, args.factor,
-                              args.min_roofline)
+                              args.min_roofline, required=REQUIRED_ROWS)
     print(f"# bench regression check (factor {args.factor:.1f}x, "
           f"roofline floor {args.min_roofline:.3f}): "
           f"{args.fresh} vs {args.baseline}")

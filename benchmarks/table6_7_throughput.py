@@ -154,6 +154,89 @@ def measured_qrd_rates(batch=64, m=4,
     return out
 
 
+def measured_tiled_qrd_rates():
+    """Production-shape QRD throughput on the tiled routes (DESIGN.md §14).
+
+    Two acceptance shapes, keyed ``tiled:{m}x{n}`` (the
+    `check_bench_regression.REQUIRED_ROWS` set — CI fails if either
+    stops being measured):
+
+    * ``tiled:64x64`` — the panel route on ``blockfp_pallas``: the
+      whole 64-row tile stays kernel-resident, columns sweep in panels,
+      full Q computed.  Four matrices per batch keep the warm time
+      measurable without bloating the interpret-mode compile.
+    * ``tiled:4096x32`` — the TSQR tree on ``blockfp_pallas``:
+      32 leaf tiles reduced over 5 tree levels, Q-free (the
+      least-squares workload; the Q composition is benchmarked by its
+      own cost term in `repro.launch.perfmodel.tsqr_qrd_cost`).
+
+    Rows carry ``tiling``/``tile_m``/``panel_n``/``compute_q`` so
+    `repro.launch.roofline.roofline_for_row` scores them against the
+    *tiled* cost models (trailing-panel re-reads and tree work included
+    in the bound).
+    """
+    from repro import qrd as api
+    from repro.kernels.ops import auto_interpret
+    from repro.launch.roofline import roofline_for_row
+
+    rng = np.random.default_rng(0)
+    interp = auto_interpret(None)
+    shapes = (
+        # key suffix,  m,    n,  batch, tiling,  compute_q
+        ("64x64",      64,   64, 4,     "panel", True),
+        ("4096x32",    4096, 32, 1,     "tsqr",  False),
+    )
+    out = {}
+    for label, m, n, batch, tiling, compute_q in shapes:
+        A = rng.standard_normal((batch, m, n))
+        eng = api.QRDEngine(api.QRDConfig(backend="blockfp_pallas",
+                                          dtype="float64", tiling=tiling))
+        cold, warm = _cold_warm(lambda: eng(A, compute_q=compute_q))
+        resolved = eng._resolve_tuned(eng.config, m, n)
+        from repro.qrd import tiled as _tiled
+        tile_m, panel_n = _tiled.resolve_tiles(resolved, eng.capabilities)
+        row = {
+            "backend": "blockfp_pallas", "schedule": "col",
+            "tiling": tiling, "tile_m": tile_m, "panel_n": panel_n,
+            "batch": batch, "m": m, "n": n, "compute_q": compute_q,
+            "qrd_per_s": batch / warm,
+            "cold_s": cold, "warm_s": warm,
+            "end_to_end_s": cold,        # v1 alias (cold time)
+            "interpret_mode": interp,
+            "iters": 24,
+        }
+        terms = roofline_for_row(row)
+        if terms is not None:
+            row["roofline_fraction"] = terms["roofline_fraction"]
+            row["roofline_bound_qrd_per_s"] = terms["bound_qrd_per_s"]
+            row["roofline_dominant"] = terms["dominant"]
+        out[f"tiled:{label}"] = row
+    return out
+
+
+def run_tiled_autotune_demo(m=64, n=64, batch=4):
+    """Tune the panel width for the 64x64 panel route; record the sweep.
+
+    Narrow two-candidate search (each candidate pays a full
+    interpret-mode trace+compile, ~20 s on CI) — enough to demonstrate
+    the tiled tuner end-to-end and to persist a winner the
+    ``tiled:64x64`` row's engine picks up on the next run (the row's
+    config leaves ``panel_n=None``).
+    """
+    from repro.kernels import autotune
+
+    entry = autotune.tune_tiled("blockfp_pallas", m, n, batch,
+                                tiling="panel", dtype="float64",
+                                warm_reps=2, panel_ns=(4, 8))
+    return {"backend": "blockfp_pallas", "tiling": "panel",
+            "m": m, "n": n, "batch": batch,
+            "panel_n": entry.panel_n, "tile_m": entry.tile_m,
+            "warm_s": entry.warm_s,
+            "cache_key": autotune.cache_key("blockfp_pallas", "col", m, n,
+                                            "float64", "panel"),
+            "candidates": list(entry.candidates)}
+
+
 def measured_solve_rates(batch=64, m=6, n=3,
                          combos=(("jnp", "col"),
                                  ("givens_float", "col"),
@@ -412,6 +495,21 @@ def main(full=False):
     print(f"# wavefront 8x8 end-to-end speedup vs sequential blocked: "
           f"{speedup_8x8:.1f}x")
 
+    # Tiled routes (DESIGN.md §14): tune the panel width first so the
+    # tiled:64x64 row below dispatches on the persisted winner, then
+    # measure the two required production shapes.
+    tuned_tiled = run_tiled_autotune_demo()
+    print("# tiled autotune (64x64 panel): panel_n,warm_s")
+    print(f"panel_n={tuned_tiled['panel_n']},{tuned_tiled['warm_s']:.4f}")
+    print("# tiled QRD routes: key,qrd_per_s,warm_s,cold_s,tiling,tile_m,"
+          "panel_n,roofline_fraction")
+    tiled_rows = measured_tiled_qrd_rates()
+    for key, r in tiled_rows.items():
+        print(f"{key},{r['qrd_per_s']:.2f},{r['warm_s']:.4f},"
+              f"{r['cold_s']:.2f},{r['tiling']},{r['tile_m']},"
+              f"{r['panel_n']},"
+              f"{r.get('roofline_fraction', float('nan')):.2e}")
+
     # Solve-path rows (DESIGN.md §9): the least-squares workload on the
     # registry-dispatched engine — triangularize [A | b], back-substitute.
     print("# solve paths (6x3 + rhs): backend/schedule,solve_per_s,"
@@ -444,9 +542,10 @@ def main(full=False):
               f"{r['warm_s']:.4f},{r['cold_s']:.3f}")
 
     rate = measured_kernel_rate()
+    tuned["tiled"] = tuned_tiled
     write_bench_json(qrd, qrd8, solve, speedup_8x8, rate,
                      complex_rows={**cqrd, **csolve}, autotune=tuned,
-                     fleet_rows=fleet_rows)
+                     fleet_rows=fleet_rows, tiled_rows=tiled_rows)
     csv_row("table6_7_throughput", 1e6 / rate,
             f"model_speedup_vs_[32]={ours/gen:.1f}x;"
             f"pallas_interp_rot_per_s={rate:.0f};"
@@ -457,13 +556,16 @@ def main(full=False):
             f"solve_jnp_per_s={solve['solve:jnp/col']['solve_per_s']:.1f};"
             f"complex_qrd_per_s={cqrd['complex:cordic/col']['qrd_per_s']:.1f};"
             f"wavefront_8x8_speedup={speedup_8x8:.1f}x;"
+            f"tiled_64x64_per_s={tiled_rows['tiled:64x64']['qrd_per_s']:.1f};"
+            f"tiled_4096x32_per_s="
+            f"{tiled_rows['tiled:4096x32']['qrd_per_s']:.2f};"
             f"fleet_updates_per_s="
             f"{fleet_rows['fleet:131072x4 (b256)']['updates_per_s']:.0f}")
 
 
 def write_bench_json(qrd4, qrd8, solve, speedup_8x8, rot_per_s,
                      complex_rows=None, autotune=None, fleet_rows=None,
-                     path=BENCH_JSON):
+                     tiled_rows=None, path=BENCH_JSON):
     """Emit the machine-readable perf trajectory (BENCH_qrd.json).
 
     Schema version 2: one record per (backend, schedule, m) row with
@@ -471,8 +573,9 @@ def write_bench_json(qrd4, qrd8, solve, speedup_8x8, rot_per_s,
     ``cold_s`` = trace + compile + first run, aliased as the v1
     ``end_to_end_s``), per-row ``interpret_mode`` / ``tile_b`` (the old
     top-level interpret flag is gone — rows can differ once a compiled
-    backend exists), ``roofline_fraction`` for modeled rows, and the
-    ``autotune`` comparison section.  These are the numbers future PRs
+    backend exists), ``roofline_fraction`` for modeled rows, the
+    ``autotune`` comparison section, and the ``tiled:{m}x{n}``
+    production-shape rows (required by the regression gate).  These are the numbers future PRs
     diff against: `benchmarks.check_bench_regression` fails CI when any
     row's warm time regresses more than 2x vs the committed baseline,
     or a compiled row falls below the roofline floor.
@@ -486,7 +589,8 @@ def write_bench_json(qrd4, qrd8, solve, speedup_8x8, rot_per_s,
                     **{f"{k} (6x3)": v for k, v in solve.items()},
                     **{f"{k} ({v['m']}x{v.get('n', v['m'])})": v
                        for k, v in (complex_rows or {}).items()},
-                    **(fleet_rows or {})},
+                    **(fleet_rows or {}),
+                    **(tiled_rows or {})},
         "wavefront_8x8_end_to_end_speedup": speedup_8x8,
     }
     if autotune is not None:

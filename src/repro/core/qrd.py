@@ -36,14 +36,22 @@ from . import cordic
 from .givens import GivensConfig, GivensUnit
 
 __all__ = ["qr_cordic", "qr_cordic_pallas", "qr_blockfp_pallas",
+           "qr_cordic_panel", "qr_blockfp_panel",
            "qr_cordic_wavefront", "qr_blockfp_wavefront",
            "qr_cordic_complex", "qr_cordic_complex_pallas",
            "qr_cordic_complex_wavefront",
            "qr_givens_float", "qr_jnp", "qr_fixed", "qr_blocked_sharded",
            "QRDEngine", "snr_db", "givens_schedule", "sameh_kuck_schedule"]
 
+#: Bound on the host-side schedule memoization.  Schedules are derived
+#: per *tile* (the tiled layer never asks for a full tall-skinny m ~ 10k
+#: schedule — that would be a multi-MB tuple per shape), so a small LRU
+#: covers every shape a process realistically touches while capping
+#: worst-case host memory (DESIGN.md §14).
+SCHEDULE_CACHE_SIZE = 128
 
-@lru_cache(maxsize=None)
+
+@lru_cache(maxsize=SCHEDULE_CACHE_SIZE)
 def givens_schedule(m: int, n: int):
     """Column-major zeroing order for an m x n matrix (memoized).
 
@@ -61,7 +69,7 @@ def givens_schedule(m: int, n: int):
                  for j in range(k + 1, m))
 
 
-@lru_cache(maxsize=None)
+@lru_cache(maxsize=SCHEDULE_CACHE_SIZE)
 def sameh_kuck_schedule(m: int, n: int):
     """Sameh–Kuck parallel pairing schedule [Sameh & Kuck, JACM 1978].
 
@@ -240,6 +248,68 @@ def qr_blockfp_pallas(A, compute_q=True, iters=24, hub=True, frac=24,
     out = _kops.givens_block_apply(work, tuple(steps), iters=iters, hub=hub,
                                    frac=frac, interpret=interpret,
                                    tile_b=tile_b)
+    return _split_qr(out, m, n, compute_q)
+
+
+def qr_cordic_panel(A, unit: GivensUnit, compute_q=True, panel_n=8,
+                    interpret=None, tile_b=None):
+    """Tiled panel QRD over packed words: production m at kernel speed.
+
+    The scaling form of `qr_cordic_pallas` (DESIGN.md §14): the flat
+    kernel unrolls the whole schedule into one straight-line body, which
+    stops tracing beyond toy m; here the triangularization proceeds
+    panel by panel with the rotation control words exported from each
+    panel factorization and replayed over the trailing panels
+    (`ops.qr_packed_panel`).  Column-major order is preserved exactly,
+    so (Q, R) are **bit-identical** to `qr_cordic` / `qr_cordic_pallas`
+    with the default schedule (IEEE and HUB).
+
+    Parameters
+    ----------
+    A : (..., m, n) array_like
+        Batch of input matrices (converted to float64).
+    unit : GivensUnit
+        The configured rotator.
+    panel_n : int
+        Panel width (autotuner dimension).
+
+    Returns
+    -------
+    (Q, R) : float64 arrays (Q is None when ``compute_q=False``).
+    """
+    from repro.kernels import ops as _kops
+    A = jnp.asarray(A, jnp.float64)
+    m, n = A.shape[-2], A.shape[-1]
+    P = unit.encode(_augment(A, compute_q))
+    Pout = _kops.qr_packed_panel(P, cfg=unit.cfg, n_cols=n, panel_n=panel_n,
+                                 interpret=interpret, tile_b=tile_b)
+    out = unit.decode(Pout)
+    return _split_qr(out, m, n, compute_q)
+
+
+def qr_blockfp_panel(A, compute_q=True, iters=24, hub=True, frac=24,
+                     panel_n=8, interpret=None, tile_b=None):
+    """Tiled panel QRD on the int32 block-FP datapath (the fast path).
+
+    The scaling form of `qr_blockfp_pallas`: quantize once, sweep the
+    panels with exported/replayed control words, decode once
+    (`ops.givens_block_apply_panel`).  Bit-identical to
+    `qr_blockfp_pallas` with the default schedule.  ``frac=24`` supports
+    m ≤ 128 (2 CORDIC growth bits + √m column-norm growth inside int32).
+
+    Parameters as `qr_blockfp_pallas` plus ``panel_n`` (panel width).
+
+    Returns
+    -------
+    (Q, R) : float64 arrays (Q is None when ``compute_q=False``).
+    """
+    from repro.kernels import ops as _kops
+    A = jnp.asarray(A, jnp.float64)
+    m, n = A.shape[-2], A.shape[-1]
+    work = _augment(A, compute_q)
+    out = _kops.givens_block_apply_panel(work, n_cols=n, iters=iters, hub=hub,
+                                         frac=frac, panel_n=panel_n,
+                                         interpret=interpret, tile_b=tile_b)
     return _split_qr(out, m, n, compute_q)
 
 

@@ -40,8 +40,9 @@ import time
 import numpy as np
 
 __all__ = ["TuneEntry", "TUNABLE_BACKENDS", "cache_path", "device_kind",
-           "cache_key", "lookup", "tune", "candidate_tile_bs",
-           "candidate_layouts", "clear_memo"]
+           "cache_key", "lookup", "tune", "tune_tiled",
+           "candidate_tile_bs", "candidate_layouts", "candidate_panel_ns",
+           "candidate_tile_ms", "clear_memo"]
 
 TUNABLE_BACKENDS = ("cordic_pallas", "blockfp_pallas")
 
@@ -60,23 +61,38 @@ _SCHEMA_VERSION = 1
 
 @dataclasses.dataclass(frozen=True)
 class TuneEntry:
-    """One persisted winner: the parameters `lookup` hands the engine."""
+    """One persisted winner: the parameters `lookup` hands the engine.
+
+    ``panel_n`` / ``tile_m`` are the tiled-route knobs (`tune_tiled`);
+    flat entries leave them None and serialize without them, so cache
+    files written before the tiled routes existed still load.
+    """
 
     tile_b: int
     table_layout: str | None
     warm_s: float
     candidates: tuple = ()
+    panel_n: int | None = None
+    tile_m: int | None = None
 
     def to_json(self):
-        return {"tile_b": self.tile_b, "table_layout": self.table_layout,
-                "warm_s": self.warm_s, "candidates": list(self.candidates)}
+        d = {"tile_b": self.tile_b, "table_layout": self.table_layout,
+             "warm_s": self.warm_s, "candidates": list(self.candidates)}
+        if self.panel_n is not None:
+            d["panel_n"] = self.panel_n
+        if self.tile_m is not None:
+            d["tile_m"] = self.tile_m
+        return d
 
     @classmethod
     def from_json(cls, d):
+        pn, tm = d.get("panel_n"), d.get("tile_m")
         return cls(tile_b=int(d["tile_b"]),
                    table_layout=d.get("table_layout"),
                    warm_s=float(d.get("warm_s", 0.0)),
-                   candidates=tuple(d.get("candidates", ())))
+                   candidates=tuple(d.get("candidates", ())),
+                   panel_n=None if pn is None else int(pn),
+                   tile_m=None if tm is None else int(tm))
 
 
 # --------------------------------------------------------------------------
@@ -99,8 +115,11 @@ def device_kind() -> str:
 
 
 def cache_key(backend: str, schedule: str, m: int, n: int,
-              dtype: str) -> str:
-    return f"{backend}/{schedule}/m{m}/n{n}/{dtype}"
+              dtype: str, tiling: str | None = None) -> str:
+    """Cache key; tiled-route entries get a ``/tiled-<route>`` suffix so
+    they never collide with (or shadow) a flat entry at the same shape."""
+    key = f"{backend}/{schedule}/m{m}/n{n}/{dtype}"
+    return key if tiling is None else f"{key}/tiled-{tiling}"
 
 
 # path -> (mtime_ns, parsed doc); lookup() re-reads only on mtime change
@@ -142,12 +161,14 @@ def _store(path: str, device: str, key: str, entry: TuneEntry):
 
 
 def lookup(backend: str, schedule: str, m: int, n: int, dtype: str,
-           path: str | None = None) -> TuneEntry | None:
+           path: str | None = None,
+           tiling: str | None = None) -> TuneEntry | None:
     """Cache-only lookup (never tunes): the engine's dispatch-time hook.
 
     Returns the persisted `TuneEntry` for this (device kind, backend,
-    schedule, m, n, dtype) or None on a miss.  Cost on the hot path is
-    one ``os.stat`` (the parsed file is memoized by mtime).
+    schedule, m, n, dtype[, tiled route]) or None on a miss.  Cost on
+    the hot path is one ``os.stat`` (the parsed file is memoized by
+    mtime).
     """
     doc = _load(path or cache_path())
     if not doc:
@@ -155,7 +176,7 @@ def lookup(backend: str, schedule: str, m: int, n: int, dtype: str,
     per_dev = doc.get(device_kind())
     if not per_dev:
         return None
-    raw = per_dev.get(cache_key(backend, schedule, m, n, dtype))
+    raw = per_dev.get(cache_key(backend, schedule, m, n, dtype, tiling))
     if raw is None:
         return None
     try:
@@ -196,6 +217,30 @@ def candidate_layouts(schedule: str) -> tuple:
     """Stage-table layouts worth timing: only the wavefront path has
     stage tables at all."""
     return ("split", "stacked") if schedule == "sameh_kuck" else (None,)
+
+
+def candidate_panel_ns(n: int) -> tuple:
+    """Panel widths worth timing for the tiled routes.
+
+    Powers of two in the lane-friendly range, capped at the column
+    count — a panel wider than n degenerates to the flat schedule with
+    padding.  Never empty: a narrow problem tunes at its own width.
+    """
+    cands = tuple(w for w in (4, 8, 16) if w <= n)
+    return cands if cands else (max(1, n),)
+
+
+def candidate_tile_ms(m: int, n: int, max_m: int = 128) -> tuple:
+    """Leaf heights worth timing for the tsqr route.
+
+    Powers of two up to the backend's row capacity ``max_m``, strictly
+    below m (a single leaf is just the panel route) and at least ``2n``
+    (shorter leaves do less annihilation per launch than the tree nodes
+    they feed).  Never empty: the row capacity itself always survives.
+    """
+    cands = tuple(t for t in (32, 64, 128)
+                  if t <= max_m and t < m and t >= 2 * n)
+    return cands if cands else (min(max_m, max(2, m - 1)),)
 
 
 # --------------------------------------------------------------------------
@@ -274,4 +319,66 @@ def tune(backend: str, schedule: str, m: int, n: int, batch: int, *,
                       warm_s=best["warm_s"], candidates=tuple(rows))
     _store(path or cache_path(), device_kind(),
            cache_key(backend, schedule, m, n, dtype), entry)
+    return entry
+
+
+def tune_tiled(backend: str, m: int, n: int, batch: int, *, tiling: str,
+               dtype: str = "float64", givens=None, compute_q: bool = True,
+               path: str | None = None, warm_reps: int = 3, timer=None,
+               max_tile_m: int = 128, seed: int = 0,
+               panel_ns: tuple | None = None,
+               tile_ms: tuple | None = None) -> TuneEntry:
+    """Search the tiled-route knobs for one problem shape and persist.
+
+    ``tiling='panel'`` searches ``panel_n`` (`candidate_panel_ns`);
+    ``tiling='tsqr'`` searches ``tile_m x panel_n``
+    (`candidate_tile_ms`).  Each candidate is timed through a real
+    `repro.qrd.QRDEngine` with the route and knobs pinned explicitly —
+    nothing consults the cache being filled, and an explicit
+    ``panel_n`` / ``tile_m`` in a user's `QRDConfig` always wins over
+    the stored entry at dispatch (the engine only fills fields left
+    None).  The winner is stored under the ``/tiled-<route>`` cache key
+    and returned with the full candidate table for the benchmark
+    report's autotune section.  ``panel_ns`` / ``tile_ms`` override the
+    candidate generators — large shapes pay a full trace+compile per
+    candidate, so cost-sensitive callers (the CI bench) narrow the
+    sweep explicitly.
+    """
+    from repro.qrd import QRDConfig, QRDEngine
+
+    if backend not in TUNABLE_BACKENDS:
+        raise ValueError(f"backend {backend!r} is not tunable; "
+                         f"expected one of {TUNABLE_BACKENDS}")
+    if tiling not in ("panel", "tsqr"):
+        raise ValueError(f"tiling {tiling!r} is not tunable; "
+                         "expected 'panel' or 'tsqr'")
+    if timer is None:
+        timer = _default_timer
+
+    if panel_ns is None:
+        panel_ns = candidate_panel_ns(n)
+    if tile_ms is None:
+        tile_ms = (candidate_tile_ms(m, n, max_tile_m) if tiling == "tsqr"
+                   else (None,))
+
+    kwargs = {} if givens is None else {"givens": givens}
+    rng = np.random.default_rng(seed)
+    A = np.asarray(rng.standard_normal((batch, m, n)), dtype=np.float64)
+
+    rows = []
+    for tm in tile_ms:
+        for pw in panel_ns:
+            cfg = QRDConfig(backend=backend, dtype=dtype, tiling=tiling,
+                            panel_n=pw, tile_m=tm, **kwargs)
+            eng = QRDEngine(cfg)
+            warm = float(timer(lambda X: eng(X, compute_q=compute_q), A,
+                               warm_reps))
+            rows.append({"tile_m": tm, "panel_n": pw, "warm_s": warm})
+
+    best = min(rows, key=lambda r: r["warm_s"])
+    entry = TuneEntry(tile_b=0, table_layout=None, warm_s=best["warm_s"],
+                      candidates=tuple(rows), panel_n=best["panel_n"],
+                      tile_m=best["tile_m"])
+    _store(path or cache_path(), device_kind(),
+           cache_key(backend, "col", m, n, dtype, tiling), entry)
     return entry

@@ -34,7 +34,8 @@ from jax.experimental import pallas as pl
 from repro.core.cordic import GAIN_TABLE
 
 __all__ = ["vectoring_call", "rotation_call", "fused_call",
-           "fused_rotate_block", "fused_rotate_pairs", "comp_q30",
+           "fused_rotate_block", "fused_rotate_pairs", "fused_rotate_ctrl",
+           "fused_replay", "comp_q30",
            "packed_to_lanes", "lanes_to_packed", "TILE_B", "TILE_L"]
 
 TILE_B = 8     # sublane tile (int32 native tile is (8, 128))
@@ -257,6 +258,61 @@ def fused_rotate_pairs(x, y, lead, *, iters: int, hub: bool, comp: int):
         xl, yl = _microrotation(xl, yl, i, d_pos, hub)
         sig = sig | (d_pos.astype(jnp.int32) << i)
     fb = flip[..., None]                             # (TB, P, 1) -> e lanes
+    x = jnp.where(fb, _negate(x, hub), x)
+    y = jnp.where(fb, _negate(y, hub), y)
+    for i in range(iters):
+        d_pos = ((sig[..., None] >> i) & 1) == 1
+        x, y = _microrotation(x, y, i, d_pos, hub)
+    return _gain_mul_q30(x, comp), _gain_mul_q30(y, comp)
+
+
+def fused_rotate_ctrl(x, y, lead, *, iters: int, hub: bool, comp: int):
+    """`fused_rotate_pairs` for one pair, exporting the control words.
+
+    The panel-factorization building block (DESIGN.md §14): identical
+    vectoring recurrence and replay as `fused_rotate_block`, but the
+    leading pair is selected by the ``lead`` one-hot (the panel kernels
+    rotate at uniform panel width, like the wavefront path) and the
+    derived ``(flip, sigma)`` words are *returned* so the caller can
+    replay the whole rotation set over trailing panels later
+    (`fused_replay`) — the paper's compute-once/replay-everywhere
+    control-word contract, extended across kernel launches.
+
+    x, y : (TB, pw) int32 pivot/target rows at uniform panel width.
+    lead : (1, pw) 0/1 one-hot of the leading (annihilated) column.
+
+    Returns ``(rx, ry, flip, sig)`` — rotated rows plus (TB,) int32
+    control words.  Lanes at and right of `lead` match
+    `fused_rotate_block` on the ragged slice exactly; left lanes must be
+    restored by the caller (wavefront convention).
+    """
+    sel = lead.astype(x.dtype)                       # (1, pw) 0/1
+    xl = jnp.sum(x * sel, axis=-1, dtype=x.dtype)    # (TB,) leading pair
+    yl = jnp.sum(y * sel, axis=-1, dtype=y.dtype)
+    flip = xl < 0
+    xl = jnp.where(flip, _negate(xl, hub), xl)
+    yl = jnp.where(flip, _negate(yl, hub), yl)
+    sig = jnp.zeros_like(xl)
+    for i in range(iters):
+        d_pos = yl < 0
+        xl, yl = _microrotation(xl, yl, i, d_pos, hub)
+        sig = sig | (d_pos.astype(jnp.int32) << i)
+    rx, ry = fused_replay(x, y, flip.astype(jnp.int32), sig,
+                          iters=iters, hub=hub, comp=comp)
+    return rx, ry, flip.astype(jnp.int32), sig
+
+
+def fused_replay(x, y, flip, sig, *, iters: int, hub: bool, comp: int):
+    """Replay exported `(flip, sigma)` control words over two row blocks.
+
+    x, y : (TB, L) int32 rows; flip, sig : (TB,) int32 control words from
+    `fused_rotate_ctrl` (flip as 0/1).  Replaying sigma on the pair that
+    produced it reproduces the vectoring output bit for bit, and on any
+    other column applies the exact same micro-rotation sequence — the
+    trailing-panel update is therefore bit-identical to having rotated
+    the full-width rows in one shot.
+    """
+    fb = (flip != 0)[..., None]                      # (TB, 1) -> L lanes
     x = jnp.where(fb, _negate(x, hub), x)
     y = jnp.where(fb, _negate(y, hub), y)
     for i in range(iters):

@@ -30,10 +30,18 @@ __all__ = ["vectoring_fixed", "rotation_fixed", "givens_rotate_rows_fixed",
            "givens_rotate_rows_fused", "qr_packed", "qr_packed_wavefront",
            "qr_packed_complex", "qr_packed_complex_wavefront",
            "givens_block_apply", "givens_block_apply_wavefront",
+           "qr_packed_panel", "givens_block_apply_panel", "panel_steps",
            "rls_block_steps", "auto_interpret", "compiled_backend_available"]
 
+#: Memoization bound for host-side schedule/table caches.  The tiled layer
+#: (DESIGN.md §14) derives schedules *per tile* (tile_m ≤ 128 rows), never
+#: per full matrix — a tall-skinny m ~ 10k schedule would be a multi-MB
+#: host table — so a small bounded LRU holds every shape a process
+#: realistically touches while capping worst-case host memory.
+SCHEDULE_CACHE_SIZE = 128
 
-@functools.lru_cache(maxsize=None)
+
+@functools.lru_cache(maxsize=SCHEDULE_CACHE_SIZE)
 def rls_block_steps(n: int, block: int):
     """Annihilation schedule for a QRD-RLS block update (memoized).
 
@@ -297,7 +305,7 @@ def qr_packed_complex_wavefront(P, *, cfg, stages, interpret=None,
     return out.reshape(batch + (m, e, 2))
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=SCHEDULE_CACHE_SIZE)
 def _stage_tables(stages, m):
     """Stage index tables for the wavefront kernels (memoized).
 
@@ -486,3 +494,165 @@ def givens_block_apply_wavefront(W, stages, *, iters=24, hub=True, frac=24,
                                        tile_b=tile_b,
                                        table_layout=table_layout)
     return _blockfp_decode(out, ex, frac).reshape(batch + (m, e))
+
+
+# ---------------------------------------------------------------------------
+# Tiled panel QR drivers (DESIGN.md §14): panel-at-a-time triangularization
+# with exported control words replayed over trailing panels.
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=SCHEDULE_CACHE_SIZE)
+def panel_steps(mr: int, ncols: int):
+    """Panel-local column-major step tables (memoized, bounded).
+
+    The column-major schedule restricted to one panel: ``mr`` resident
+    rows (global rows ``c0..m-1``, panel-relative), annihilating local
+    columns ``0..ncols-1`` in `givens_schedule` order — so concatenating
+    every panel's steps (offset by its ``c0``) reproduces the flat
+    column-major schedule exactly, which is what makes the panel path
+    bit-identical to the flat kernels.
+
+    Returns three read-only (S,) int32 numpy arrays: pivot rows, target
+    rows, columns (all panel-local).
+    """
+    trips = [(c, r, c) for c in range(min(mr - 1, ncols))
+             for r in range(c + 1, mr)]
+    piv = np.asarray([t[0] for t in trips], np.int32)
+    tgt = np.asarray([t[1] for t in trips], np.int32)
+    col = np.asarray([t[2] for t in trips], np.int32)
+    for a in (piv, tgt, col):
+        a.setflags(write=False)
+    return piv, tgt, col
+
+
+def _panel_sweep(P, n_cols, pw, factor_fn, apply_fn):
+    """Shared panel-driver loop over a flattened (B, m, e) working batch.
+
+    For each panel (static Python loop — one factor + one apply trace per
+    panel): factor the resident (mr, nc) tile while exporting its control
+    words, then replay them over the trailing region, chunked to G
+    panel-width tiles on the apply kernel's grid.  Rows above ``c0`` are
+    final after their panel (column-major order) and never re-enter a
+    kernel.  The last trailing chunk is zero-padded to width ``pw`` —
+    rotations are columnwise, so pad columns never feed back into real
+    ones and are sliced off after the call.
+    """
+    m, e = P.shape[-2:]
+    for c0 in range(0, min(n_cols, m - 1), pw):
+        nc = min(pw, n_cols - c0)
+        mr = m - c0
+        piv, tgt, col = panel_steps(mr, nc)
+        if piv.shape[0] == 0:
+            continue
+        out, flip, sig = factor_fn(P[:, c0:, c0:c0 + nc], piv, tgt, col)
+        P = P.at[:, c0:, c0:c0 + nc].set(out)
+        tw = e - (c0 + nc)
+        if tw > 0:
+            T = _pad_to(P[:, c0:, c0 + nc:], pw, 2)
+            G = T.shape[-1] // pw
+            T = T.reshape(-1, mr, G, pw).transpose(0, 2, 1, 3)
+            T = apply_fn(T, piv, tgt, flip, sig)
+            T = T.transpose(0, 2, 1, 3).reshape(-1, mr, G * pw)[:, :, :tw]
+            P = P.at[:, c0:, c0 + nc:].set(T)
+    return P
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "n_cols", "panel_n", "interpret",
+                                    "tile_b"))
+def qr_packed_panel(P, *, cfg, n_cols, panel_n=8, interpret=None,
+                    tile_b=None):
+    """Tiled panel QR over packed FP words (bit-exact path).
+
+    The scaling counterpart of `qr_packed`: instead of unrolling the full
+    schedule into one straight-line kernel body (which stops tracing
+    beyond toy m), the triangularization proceeds panel by panel —
+    `qrd_blocked.panel_factor_packed_call` scans the panel's steps with a
+    resident (tile_b, mr, panel_n) tile and exports the (flip, sigma)
+    control words, `qrd_blocked.panel_apply_packed_call` replays them
+    over the trailing panels on a (batch, panel) grid.  Column-major
+    order is preserved exactly, so the result is **bit-identical** to
+    `qr_packed` on `givens_schedule(m, n)` (IEEE and HUB).
+
+    Parameters
+    ----------
+    P : (..., m, e) int64
+        Packed FP words of the augmented working matrices.
+    cfg : GivensConfig
+        Static unit configuration.  int64 words — interpret mode only,
+        like `qr_packed`; the compiled tiled path is the block-FP driver
+        (`givens_block_apply_panel`).
+    n_cols : int
+        Number of leading columns to annihilate (the matrix's n; the
+        remaining ``e - n`` columns — identity columns for Q — only ever
+        ride the trailing updates).
+    panel_n : int
+        Panel width (autotuner dimension, DESIGN.md §14).
+
+    Returns
+    -------
+    (..., m, e) int64 — triangularized packed words.
+    """
+    interpret = _auto_interpret(interpret)
+    tile_b = _resolve_tile_b(tile_b)
+    batch = P.shape[:-2]
+    m, e = P.shape[-2:]
+    Pf = P.astype(jnp.int64).reshape((-1, m, e))
+
+    def factor(tile, piv, tgt, col):
+        return qb.panel_factor_packed_call(tile, piv, tgt, col, cfg=cfg,
+                                           interpret=interpret,
+                                           tile_b=tile_b)
+
+    def apply_(T, piv, tgt, flip, sig):
+        return qb.panel_apply_packed_call(T, piv, tgt, flip, sig, cfg=cfg,
+                                          interpret=interpret, tile_b=tile_b)
+
+    Pf = _panel_sweep(Pf, n_cols, panel_n, factor, apply_)
+    return Pf.reshape(batch + (m, e))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_cols", "iters", "hub", "frac",
+                                    "panel_n", "interpret", "tile_b"))
+def givens_block_apply_panel(W, *, n_cols, iters=24, hub=True, frac=24,
+                             panel_n=8, interpret=None, tile_b=None):
+    """Tiled panel QR on the int32 block-FP datapath (the fast path).
+
+    `givens_block_apply` at production shapes: quantize **once** (the
+    per-(matrix, column) shared exponents are invariant under the whole
+    rotation set, so the panel/trailing split needs no re-quantization),
+    sweep the panels with `qrd_blocked.panel_factor_blockfp_call` /
+    `panel_apply_blockfp_call`, decode once.  Bit-identical to
+    `givens_block_apply` on `givens_schedule(m, n)` — same encode, same
+    step order, same int32 recurrence.
+
+    Capacity: frac + 2 CORDIC growth bits + log2(√m) column-norm growth
+    must stay inside signed int32 — frac=24 supports m ≤ 128 (29.5 bits;
+    the `blockfp_pallas` backend advertises ``max_shape=(128, 128)``).
+
+    Parameters as `givens_block_apply` plus ``n_cols`` / ``panel_n`` (see
+    `qr_packed_panel`).
+
+    Returns
+    -------
+    (..., m, e) float64 — the triangularized working matrices.
+    """
+    interpret = _auto_interpret(interpret)
+    tile_b = _resolve_tile_b(tile_b)
+    W = jnp.asarray(W, jnp.float64)
+    batch = W.shape[:-2]
+    m, e = W.shape[-2:]
+    X, ex = _blockfp_encode(W.reshape((-1, m, e)), frac)
+
+    def factor(tile, piv, tgt, col):
+        return qb.panel_factor_blockfp_call(tile, piv, tgt, col, iters=iters,
+                                            hub=hub, interpret=interpret,
+                                            tile_b=tile_b)
+
+    def apply_(T, piv, tgt, flip, sig):
+        return qb.panel_apply_blockfp_call(T, piv, tgt, flip, sig,
+                                           iters=iters, hub=hub,
+                                           interpret=interpret, tile_b=tile_b)
+
+    X = _panel_sweep(X, n_cols, panel_n, factor, apply_)
+    return _blockfp_decode(X, ex, frac).reshape(batch + (m, e))

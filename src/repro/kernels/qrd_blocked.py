@@ -86,14 +86,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.givens import GivensConfig, GivensUnit
-from .cordic_givens import (TILE_B, comp_q30, fused_rotate_block,
+from .cordic_givens import (TILE_B, comp_q30, fused_replay,
+                            fused_rotate_block, fused_rotate_ctrl,
                             fused_rotate_pairs)
 from .packed_lanes import LaneUnit
 
 __all__ = ["qr_packed_call", "qr_blockfp_call", "qr_packed_wavefront_call",
            "qr_blockfp_wavefront_call", "qr_packed_complex_call",
            "qr_packed_complex_wavefront_call", "qr_packed_lanes_call",
-           "qr_packed_lanes_wavefront_call", "TILE_B", "TABLE_LAYOUTS",
+           "qr_packed_lanes_wavefront_call", "panel_factor_packed_call",
+           "panel_apply_packed_call", "panel_factor_blockfp_call",
+           "panel_apply_blockfp_call", "TILE_B", "TABLE_LAYOUTS",
            "HBM_PASSES_PER_QRD"]
 
 TABLE_LAYOUTS = ("split", "stacked")
@@ -696,4 +699,296 @@ def qr_blockfp_call(X, *, iters: int, hub: bool, steps,
         out_shape=jax.ShapeDtypeStruct((Bp, m, e), jnp.int32),
         interpret=interpret,
     )(X)
+    return out[:B]
+
+
+# ---------------------------------------------------------------------------
+# Tiled panel QR (DESIGN.md §14): factor a resident (TB, mr, pw) panel while
+# *exporting* its rotation control words, then replay them over the trailing
+# panels with a second kernel whose grid is batched over the trailing-panel
+# axis — the paper's compute-once/replay-everywhere contract extended across
+# kernel launches.  The step machinery is a `lax.scan` over (S,) local step
+# tables (pivot row, target row, column — all panel-relative), NOT the
+# unrolled straight-line body of the flat kernels: a 64-wide panel carries
+# hundreds of steps and the scan keeps the trace at one body.
+#
+# Bit-exactness: with the column-major schedule the panel decomposition
+# replays the *identical* rotation sequence as the flat kernel — each
+# rotation is elementwise in the column axis once its (flip, sigma) word is
+# fixed, so deferring the trailing-panel columns to the apply kernel cannot
+# change a single bit (tests assert equality against `qr_packed_call`).
+# The uniform-width rotate + left-lane restore is the wavefront convention
+# (`_wavefront_scan`); replaying sigma on the lead reproduces vectoring
+# bit for bit.
+# ---------------------------------------------------------------------------
+def _panel_factor_packed_kernel(piv_ref, tgt_ref, col_ref, p_ref,
+                                o_ref, f_ref, s_ref, *, cfg: GivensConfig):
+    """Factor the resident (TB, mr, pw) packed panel, exporting controls.
+
+    One scan step per schedule entry: gather the pivot/target rows by the
+    traced step index, vector on the lead column (one-hot contraction),
+    rotate the pair at uniform panel width, restore the left-of-lead
+    lanes, force the structural zero, scatter back — and emit the step's
+    (flip, sigma) words into the (TB, S) control outputs.
+    """
+    unit = GivensUnit(cfg)
+    P = p_ref[...]                       # (TB, mr, pw) int64 packed words
+    pw = P.shape[-1]
+    colid = jax.lax.broadcasted_iota(jnp.int32, (1, pw), 1)
+
+    def body(P, tab):
+        piv, tgt, col = tab
+        x = P[:, piv]                    # (TB, pw)
+        y = P[:, tgt]
+        lead = colid == col              # (1, pw)
+        active = colid >= col
+        sel = lead.astype(x.dtype)
+        xl = jnp.sum(x * sel, axis=-1)   # (TB,) leading pair
+        yl = jnp.sum(y * sel, axis=-1)
+        _, _, (flip, sig) = unit.vector(xl, yl)
+        rx, ry = unit.rotate(x, y, (flip[..., None], sig[..., None]))
+        rx = jnp.where(active, rx, x)    # untouched left lanes
+        ry = jnp.where(active, ry, y)
+        ry = jnp.where(lead, 0, ry)      # structural zero
+        P = P.at[:, piv].set(rx)  # lint: allow[unguarded-scatter] piv != tgt per step by schedule
+        P = P.at[:, tgt].set(ry)
+        return P, (flip, sig)
+
+    tables = (piv_ref[...], tgt_ref[...], col_ref[...])
+    P, (flips, sigs) = jax.lax.scan(body, P, tables)
+    o_ref[...] = P
+    f_ref[...] = jnp.transpose(flips)    # (S, TB) -> (TB, S)
+    s_ref[...] = jnp.transpose(sigs)
+
+
+def panel_factor_packed_call(P, piv, tgt, col, *, cfg: GivensConfig,
+                             interpret: bool = True, tile_b: int = TILE_B):
+    """Panel factorization over packed FP words, exporting control words.
+
+    Parameters
+    ----------
+    P : (B, mr, pw) int64
+        Packed FP words of one panel — the ``mr`` resident rows are the
+        not-yet-finalized rows of the full working matrix (global rows
+        ``c0..m-1`` for the panel starting at column ``c0``), ``pw`` its
+        columns.  Ragged ``B`` is padded with zero matrices, as
+        everywhere here.
+    piv, tgt, col : (S,) int32
+        Panel-local step tables (`ops.panel_steps`) — the column-major
+        schedule restricted to this panel, rows relative to the panel.
+    cfg : GivensConfig
+        Static unit configuration.  int64 lanes: interpret mode only,
+        like `qr_packed_call`.
+
+    Returns
+    -------
+    (out, flip, sig)
+        ``out`` (B, mr, pw) int64 — the factored panel (upper-triangular
+        head over zeros); ``flip``/``sig`` (B, S) int64 — the exported
+        per-step control words, replayable over any trailing panel via
+        `panel_apply_packed_call`.
+    """
+    P, B = _pad_batch(P, tile_b)
+    Bp, mr, pw = P.shape
+    S = piv.shape[0]
+    grid = (Bp // tile_b,)
+    spec = pl.BlockSpec((tile_b, mr, pw), lambda b: (b, 0, 0))
+    cspec = pl.BlockSpec((tile_b, S), lambda b: (b, 0))
+    tspec = pl.BlockSpec((S,), lambda b: (0,))
+    kernel = functools.partial(_panel_factor_packed_kernel, cfg=cfg)
+    out, flip, sig = pl.pallas_call(
+        kernel, grid=grid,
+        in_specs=[tspec, tspec, tspec, spec],
+        out_specs=[spec, cspec, cspec],
+        out_shape=[jax.ShapeDtypeStruct((Bp, mr, pw), jnp.int64),
+                   jax.ShapeDtypeStruct((Bp, S), jnp.int64),
+                   jax.ShapeDtypeStruct((Bp, S), jnp.int64)],
+        interpret=interpret,
+    )(jnp.asarray(piv), jnp.asarray(tgt), jnp.asarray(col), P)
+    return out[:B], flip[:B], sig[:B]
+
+
+def _panel_apply_packed_kernel(piv_ref, tgt_ref, f_ref, s_ref, t_ref, o_ref,
+                               *, cfg: GivensConfig):
+    """Replay a panel's exported control words on one trailing tile.
+
+    The resident tile is one (TB, mr, pw) trailing-panel block; every
+    element is active (the rotation set touches whole rows right of the
+    factored panel), so no column masks are needed — just the scan over
+    the (piv, tgt, flip, sigma) step stream.
+    """
+    unit = GivensUnit(cfg)
+    T = t_ref[...][:, 0]                 # (TB, 1, mr, pw) -> (TB, mr, pw)
+    flips = jnp.transpose(f_ref[...])    # (TB, S) -> (S, TB) scan stream
+    sigs = jnp.transpose(s_ref[...])
+
+    def body(T, tab):
+        piv, tgt, flip, sig = tab
+        rx, ry = unit.rotate(T[:, piv], T[:, tgt],
+                             (flip[..., None], sig[..., None]))
+        T = T.at[:, piv].set(rx)  # lint: allow[unguarded-scatter] piv != tgt per step by schedule
+        T = T.at[:, tgt].set(ry)
+        return T, None
+
+    T, _ = jax.lax.scan(body, T, (piv_ref[...], tgt_ref[...], flips, sigs))
+    o_ref[...] = T[:, None]
+
+
+def panel_apply_packed_call(T, piv, tgt, flip, sig, *, cfg: GivensConfig,
+                            interpret: bool = True, tile_b: int = TILE_B):
+    """Replay exported panel controls over the trailing panels.
+
+    The grid is (batch tiles, trailing panels): each cell replays the
+    full (S,) rotation set on one (tile_b, mr, pw) trailing block — the
+    trailing-panel axis rides the Pallas grid, not just ``tile_b``, so
+    wide trailing regions parallelize across cells instead of growing
+    the resident tile.
+
+    Parameters
+    ----------
+    T : (B, G, mr, pw)
+        The trailing region, chunked into G panel-width tiles (zero-pad
+        the last chunk; rotations are columnwise, so pad columns never
+        feed back into real ones).
+    piv, tgt : (S,) int32 — panel-local step row tables.
+    flip, sig : (B, S) int64 — control words from
+        `panel_factor_packed_call`.
+
+    Returns
+    -------
+    (B, G, mr, pw) int64 — the updated trailing region.
+    """
+    T, B = _pad_batch(T, tile_b)
+    flip, _ = _pad_batch(flip, tile_b)
+    sig, _ = _pad_batch(sig, tile_b)
+    Bp, G, mr, pw = T.shape
+    S = piv.shape[0]
+    grid = (Bp // tile_b, G)
+    spec = pl.BlockSpec((tile_b, 1, mr, pw), lambda b, g: (b, g, 0, 0))
+    cspec = pl.BlockSpec((tile_b, S), lambda b, g: (b, 0))
+    tspec = pl.BlockSpec((S,), lambda b, g: (0,))
+    kernel = functools.partial(_panel_apply_packed_kernel, cfg=cfg)
+    out = pl.pallas_call(
+        kernel, grid=grid,
+        in_specs=[tspec, tspec, cspec, cspec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((Bp, G, mr, pw), jnp.int64),
+        interpret=interpret,
+    )(jnp.asarray(piv), jnp.asarray(tgt), flip, sig, T)
+    return out[:B]
+
+
+def _panel_factor_blockfp_kernel(piv_ref, tgt_ref, col_ref, x_ref,
+                                 o_ref, f_ref, s_ref, *, iters: int,
+                                 hub: bool, comp: int):
+    """Block-FP mirror of `_panel_factor_packed_kernel` (int32 datapath).
+
+    `fused_rotate_ctrl` runs `fused_rotate_block`'s exact vectoring
+    recurrence with the lead selected by one-hot and the (flip, sigma)
+    words exported — int32 throughout (sigma ≤ 30 bits), so this panel
+    kernel compiles wherever the flat block-FP kernel does.
+    """
+    X = x_ref[...]                       # (TB, mr, pw) int32 significands
+    pw = X.shape[-1]
+    colid = jax.lax.broadcasted_iota(jnp.int32, (1, pw), 1)
+
+    def body(X, tab):
+        piv, tgt, col = tab
+        x = X[:, piv]
+        y = X[:, tgt]
+        lead = colid == col
+        active = colid >= col
+        rx, ry, flip, sig = fused_rotate_ctrl(x, y, lead, iters=iters,
+                                              hub=hub, comp=comp)
+        rx = jnp.where(active, rx, x)    # untouched left lanes
+        ry = jnp.where(active, ry, y)
+        ry = jnp.where(lead, 0, ry)      # structural zero
+        X = X.at[:, piv].set(rx)  # lint: allow[unguarded-scatter] piv != tgt per step by schedule
+        X = X.at[:, tgt].set(ry)
+        return X, (flip, sig)
+
+    tables = (piv_ref[...], tgt_ref[...], col_ref[...])
+    X, (flips, sigs) = jax.lax.scan(body, X, tables)
+    o_ref[...] = X
+    f_ref[...] = jnp.transpose(flips)
+    s_ref[...] = jnp.transpose(sigs)
+
+
+def panel_factor_blockfp_call(X, piv, tgt, col, *, iters: int, hub: bool,
+                              interpret: bool = True, tile_b: int = TILE_B):
+    """Panel factorization over int32 block-FP significands.
+
+    Parameters as `panel_factor_packed_call` with ``X : (B, mr, pw)
+    int32`` significands (per-column shared exponents are invariant
+    under the whole rotation set, so the panel/trailing split needs no
+    re-quantization).  Returns ``(out, flip, sig)`` with (B, S) int32
+    control words.
+    """
+    X, B = _pad_batch(X, tile_b)
+    Bp, mr, pw = X.shape
+    assert iters <= 30
+    S = piv.shape[0]
+    grid = (Bp // tile_b,)
+    spec = pl.BlockSpec((tile_b, mr, pw), lambda b: (b, 0, 0))
+    cspec = pl.BlockSpec((tile_b, S), lambda b: (b, 0))
+    tspec = pl.BlockSpec((S,), lambda b: (0,))
+    kernel = functools.partial(_panel_factor_blockfp_kernel, iters=iters,
+                               hub=hub, comp=comp_q30(iters))
+    out, flip, sig = pl.pallas_call(
+        kernel, grid=grid,
+        in_specs=[tspec, tspec, tspec, spec],
+        out_specs=[spec, cspec, cspec],
+        out_shape=[jax.ShapeDtypeStruct((Bp, mr, pw), jnp.int32),
+                   jax.ShapeDtypeStruct((Bp, S), jnp.int32),
+                   jax.ShapeDtypeStruct((Bp, S), jnp.int32)],
+        interpret=interpret,
+    )(jnp.asarray(piv), jnp.asarray(tgt), jnp.asarray(col), X)
+    return out[:B], flip[:B], sig[:B]
+
+
+def _panel_apply_blockfp_kernel(piv_ref, tgt_ref, f_ref, s_ref, t_ref, o_ref,
+                                *, iters: int, hub: bool, comp: int):
+    """Block-FP mirror of `_panel_apply_packed_kernel` (`fused_replay`)."""
+    T = t_ref[...][:, 0]                 # (TB, 1, mr, pw) -> (TB, mr, pw)
+    flips = jnp.transpose(f_ref[...])
+    sigs = jnp.transpose(s_ref[...])
+
+    def body(T, tab):
+        piv, tgt, flip, sig = tab
+        rx, ry = fused_replay(T[:, piv], T[:, tgt], flip, sig,
+                              iters=iters, hub=hub, comp=comp)
+        T = T.at[:, piv].set(rx)  # lint: allow[unguarded-scatter] piv != tgt per step by schedule
+        T = T.at[:, tgt].set(ry)
+        return T, None
+
+    T, _ = jax.lax.scan(body, T, (piv_ref[...], tgt_ref[...], flips, sigs))
+    o_ref[...] = T[:, None]
+
+
+def panel_apply_blockfp_call(T, piv, tgt, flip, sig, *, iters: int,
+                             hub: bool, interpret: bool = True,
+                             tile_b: int = TILE_B):
+    """Replay exported panel controls over int32 block-FP trailing panels.
+
+    Parameters as `panel_apply_packed_call` with int32 operands.
+    """
+    T, B = _pad_batch(T, tile_b)
+    flip, _ = _pad_batch(flip, tile_b)
+    sig, _ = _pad_batch(sig, tile_b)
+    Bp, G, mr, pw = T.shape
+    assert iters <= 30
+    S = piv.shape[0]
+    grid = (Bp // tile_b, G)
+    spec = pl.BlockSpec((tile_b, 1, mr, pw), lambda b, g: (b, g, 0, 0))
+    cspec = pl.BlockSpec((tile_b, S), lambda b, g: (b, 0))
+    tspec = pl.BlockSpec((S,), lambda b, g: (0,))
+    kernel = functools.partial(_panel_apply_blockfp_kernel, iters=iters,
+                               hub=hub, comp=comp_q30(iters))
+    out = pl.pallas_call(
+        kernel, grid=grid,
+        in_specs=[tspec, tspec, cspec, cspec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((Bp, G, mr, pw), jnp.int32),
+        interpret=interpret,
+    )(jnp.asarray(piv), jnp.asarray(tgt), flip, sig, T)
     return out[:B]

@@ -37,7 +37,8 @@ from __future__ import annotations
 import dataclasses
 
 __all__ = ["DeviceSpec", "QRDCost", "DEVICE_SPECS", "device_spec",
-           "qrd_cost", "roofline", "roofline_fraction",
+           "qrd_cost", "panel_qrd_cost", "tsqr_qrd_cost",
+           "roofline", "roofline_fraction",
            "OPS_PER_MICROROTATION", "OPS_GAIN", "OPS_CONVERT",
            "WORD_FACTOR"]
 
@@ -120,6 +121,19 @@ class QRDCost:
         return self.ops / self.hbm_bytes if self.hbm_bytes else float("inf")
 
 
+def _datapath_terms(backend: str, iters: int, word: str | None):
+    """Shared datapath constants: (weighted ops per rotated element,
+    working-word itemsize in bytes) for the named backend."""
+    packed = backend in ("cordic", "cordic_pallas")
+    per_elem = iters * OPS_PER_MICROROTATION + OPS_GAIN
+    if packed:
+        per_elem += OPS_CONVERT
+    if word is None:
+        word = "int64" if (packed or backend == "fixed") else "int32"
+    itemsize = 8 if (packed or backend == "fixed") else 4
+    return per_elem * WORD_FACTOR[word], itemsize
+
+
 def _active_elements(m: int, n: int, e: int) -> float:
     """Sum over the schedule of the elements both rows rotate.
 
@@ -162,16 +176,9 @@ def qrd_cost(m: int, n: int, *, compute_q: bool = True, iters: int = 24,
     elems = _active_elements(m, n, e)
     rotations = sum(m - 1 - c for c in range(min(m - 1, n)))
 
-    packed = backend in ("cordic", "cordic_pallas")
-    per_elem = iters * OPS_PER_MICROROTATION + OPS_GAIN
-    if packed:
-        per_elem += OPS_CONVERT
-    if word is None:
-        word = "int64" if packed else ("int64" if backend == "fixed"
-                                       else "int32")
-    ops = elems * per_elem * WORD_FACTOR[word]
+    ops_per_elem, itemsize = _datapath_terms(backend, iters, word)
+    ops = elems * ops_per_elem
 
-    itemsize = 8 if (packed or backend == "fixed") else 4
     if hbm_passes is None:
         if backend == "cordic":          # host loop: round-trip per step
             hbm_passes = 2.0 * rotations
@@ -180,6 +187,71 @@ def qrd_cost(m: int, n: int, *, compute_q: bool = True, iters: int = 24,
             hbm_passes = float(HBM_PASSES_PER_QRD)
     bytes_ = hbm_passes * m * e * itemsize
     bytes_ += 2.0 * m * e * 8            # float64 encode read + decode write
+    return QRDCost(ops=ops, hbm_bytes=bytes_)
+
+
+def panel_qrd_cost(m: int, n: int, *, compute_q: bool = True, iters: int = 24,
+                   backend: str = "blockfp_pallas", panel_n: int = 8,
+                   word: str | None = None) -> QRDCost:
+    """Analytic cost of the tiled *panel* route (`repro.qrd.tiled`).
+
+    The rotation set is identical to the flat schedule, but the
+    dataflow differs on both roofline axes and the model must say so:
+
+    * **ops** — every rotation spans the full ``panel_n``-wide factor
+      tile (masked lanes still burn ALU slots) and the trailing region
+      padded up to whole panel tiles, instead of exactly the live
+      ``e − col`` suffix.
+    * **bytes** — the factor tile and the trailing panels round-trip
+      HBM *once per panel sweep*, so the matrix sees ≈ ``n / panel_n``
+      passes where the flat kernel's contract is
+      `repro.kernels.qrd_blocked.HBM_PASSES_PER_QRD` total.  This is
+      the price of unbounded columns; the roofline fraction of a
+      ``tiled:`` row is judged against this heavier bound, not the
+      flat one.
+    """
+    e = n + (m if compute_q else 0)
+    ops_per_elem, itemsize = _datapath_terms(backend, iters, word)
+    elems = 0.0
+    bytes_ = 0.0
+    for c0 in range(0, min(n, m - 1), panel_n):
+        nc = min(panel_n, n - c0)
+        mr = m - c0
+        tw = e - c0 - nc
+        twp = -(-tw // panel_n) * panel_n if tw > 0 else 0
+        rot = sum(mr - 1 - c for c in range(min(mr - 1, nc)))
+        elems += rot * 2.0 * (nc + twp)
+        bytes_ += 2.0 * mr * (nc + twp) * itemsize   # sweep in + out
+    bytes_ += 2.0 * m * e * 8            # float64 encode read + decode write
+    return QRDCost(ops=elems * ops_per_elem, hbm_bytes=bytes_)
+
+
+def tsqr_qrd_cost(m: int, n: int, *, compute_q: bool = True, iters: int = 24,
+                  backend: str = "blockfp_pallas", tile_m: int = 128,
+                  panel_n: int = 8, word: str | None = None) -> QRDCost:
+    """Analytic cost of the tiled *tsqr* route (`repro.qrd.tiled`).
+
+    ``L = ceil(m / tile_m)`` leaf factorizations of ``(tile_m, n)`` plus
+    ``L − 1`` tree-node factorizations of stacked ``(2n, n)`` R pairs,
+    each costed on the panel model (the tiled driver runs every node
+    through the panel kernels).  With Q the composition adds the float64
+    einsum work — ``ceil(log2 L)`` levels of per-leaf ``(n, n)`` factor
+    updates and the final ``(tile_m, n) @ (n, n)`` per leaf — plus one
+    HBM round-trip of the leaf-Q stack (``L · tile_m · n`` float64
+    elements held between the leaf launch and the composition).
+    """
+    L = -(-m // tile_m)
+    leaf = panel_qrd_cost(tile_m, n, compute_q=compute_q, iters=iters,
+                          backend=backend, panel_n=panel_n, word=word)
+    node = panel_qrd_cost(2 * n, n, compute_q=compute_q, iters=iters,
+                          backend=backend, panel_n=panel_n, word=word)
+    ops = L * leaf.ops + (L - 1) * node.ops
+    bytes_ = L * leaf.hbm_bytes + (L - 1) * node.hbm_bytes
+    if compute_q:
+        levels = max(1, (L - 1).bit_length())
+        ops += levels * L * 2.0 * n ** 3         # per-level B updates
+        ops += L * 2.0 * tile_m * n ** 2         # final Q_leaf @ B
+        bytes_ += 2.0 * L * tile_m * n * 8       # leaf-Q stack round-trip
     return QRDCost(ops=ops, hbm_bytes=bytes_)
 
 

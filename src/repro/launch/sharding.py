@@ -27,7 +27,8 @@ from .mesh import data_axes, dp_size
 
 __all__ = ["param_specs", "opt_specs", "batch_specs", "cache_specs",
            "to_shardings", "qrd_batch_spec", "qrd_stage_table_spec",
-           "shard_qrd_batch", "fleet_slot_spec", "shard_fleet"]
+           "shard_qrd_batch", "tsqr_node_spec", "shard_tsqr_nodes",
+           "fleet_slot_spec", "shard_fleet"]
 
 _FSDP = "__fsdp__"  # placeholder resolved to the mesh's data axes
 
@@ -254,6 +255,36 @@ def shard_qrd_batch(A, mesh):
         return jax.device_put(A, NamedSharding(mesh, P()))
     spec = qrd_batch_spec(A.ndim, A.shape[0], mesh)
     return jax.device_put(A, NamedSharding(mesh, spec))
+
+
+def tsqr_node_spec(ndim, nodes, mesh) -> P:
+    """PartitionSpec for a flattened TSQR node batch: node axis over data axes.
+
+    A TSQR tree level is a stack of independent small QRDs — leaf tiles
+    ``(batch*leaves, tile_m, n)`` at level 0, stacked R-pairs
+    ``(batch*pairs, 2n, n)`` above — so each level shards exactly like a
+    batched QRD operand over its flattened node axis.  This *is*
+    `qrd_batch_spec` applied per tree level (one rule: a tree level is a
+    batched annihilation); the alias exists so the tiled driver reads as
+    tree code and documents that the node count halves per level, which
+    means upper levels may fall back to replication when the shrunken
+    node count stops dividing the data-axis product.
+    """
+    return qrd_batch_spec(ndim, nodes, mesh)
+
+
+def shard_tsqr_nodes(X, mesh):
+    """Place a flattened TSQR node stack with its node axis sharded on `mesh`.
+
+    Applied by the tiled QRD driver (`repro.qrd.tiled`) before each tree
+    level's batched factorization so leaf QRs and R-pair reductions run
+    data-parallel; the surviving R factors are tiny (n x n) and gather
+    implicitly through GSPMD when pairs recombine at the next level.
+    """
+    if X.ndim < 3:
+        return jax.device_put(X, NamedSharding(mesh, P()))
+    spec = tsqr_node_spec(X.ndim, X.shape[0], mesh)
+    return jax.device_put(X, NamedSharding(mesh, spec))
 
 
 def fleet_slot_spec(ndim, slots, mesh) -> P:

@@ -113,10 +113,12 @@ def register_builtin_backends(overwrite=False):
         ("cordic_pallas", _build_cordic_pallas, BackendCapabilities(
             bit_exact=True, wavefront=True, sharding=True,
             dtypes=("float64", "complex128"),
+            max_shape=(128, 128), supports_tiling=True,
             description="kernel-resident unit, bit-identical to 'cordic'; "
                         "'sameh_kuck' routes onto the wavefront datapath")),
         ("blockfp_pallas", _build_blockfp_pallas, BackendCapabilities(
             bit_exact=False, wavefront=True, sharding=True,
+            max_shape=(128, 128), supports_tiling=True,
             description="int32 block-FP blocked kernel (fast TPU path)")),
         ("fixed", _build_fixed, BackendCapabilities(
             bit_exact=False, wavefront=False, sharding=False,

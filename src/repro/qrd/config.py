@@ -72,6 +72,24 @@ class QRDConfig:
         concatenated (3S, Pmax) operand — fewer kernel parameters, one
         contiguous DMA).  ``None`` resolves from the autotune cache like
         ``tile_b``.
+    tiling : str, optional
+        Route selection for the tiled QR layer (DESIGN.md §14):
+        ``None``/``'auto'`` picks per-shape (flat for small single-tile
+        operands, panel factorization for dense m up to the backend's
+        ``max_shape``, TSQR tree reduction for tall-skinny / oversized
+        m); ``'flat'`` forces the single-tile path (raises a shape error
+        beyond ``max_shape`` instead of failing inside the kernel);
+        ``'panel'`` / ``'tsqr'`` force the respective tiled route —
+        requires the backend's ``supports_tiling`` capability.
+    tile_m : int, optional
+        Row-block height of the TSQR leaves (and the resident row count
+        cap of the panel path).  ``None`` resolves from the autotune
+        cache, falling back to the backend's ``max_shape`` rows; an
+        explicit value always wins.
+    panel_n : int, optional
+        Column width of one panel in the panel/TSQR factorization.
+        ``None`` resolves from the autotune cache, falling back to the
+        built-in default (8); an explicit value always wins.
     mesh : jax.sharding.Mesh, optional
         When set, the engine places the operand's leading batch axis
         across the mesh's data axes before dispatch
@@ -95,10 +113,14 @@ class QRDConfig:
     interpret: bool | None = None
     tile_b: int | None = None
     table_layout: str | None = None
+    tiling: str | None = None
+    tile_m: int | None = None
+    panel_n: int | None = None
     mesh: Any = dataclasses.field(default=None, compare=False, repr=False)
 
     SCHEDULES = ("col", "sameh_kuck")
     TABLE_LAYOUTS = (None, "split", "stacked")
+    TILINGS = (None, "auto", "flat", "panel", "tsqr")
 
     def __post_init__(self):
         # Normalize dtype-likes (jnp.complex64, np.dtype('float32'), ...) to
@@ -192,6 +214,21 @@ class QRDConfig:
                 f"expected one of {self.TABLE_LAYOUTS}")
         if self.tile_b is not None and self.tile_b < 1:
             raise ValueError(f"tile_b must be >= 1, got {self.tile_b}")
+        if self.tiling not in self.TILINGS:
+            raise ValueError(f"unknown tiling {self.tiling!r}; "
+                             f"expected one of {self.TILINGS}")
+        if self.tile_m is not None and self.tile_m < 2:
+            raise ValueError(f"tile_m must be >= 2, got {self.tile_m}")
+        if self.panel_n is not None and self.panel_n < 1:
+            raise ValueError(f"panel_n must be >= 1, got {self.panel_n}")
+        if (self.tiling in ("panel", "tsqr")
+                and not caps.supports_tiling):
+            tiled = [n for n, c in registry.list_backends().items()
+                     if c.supports_tiling]
+            raise ValueError(
+                f"backend {self.backend!r} has no tiled datapath "
+                f"(tiling={self.tiling!r}); tiling-capable backends: "
+                f"{', '.join(tiled)}")
         if self.schedule not in caps.schedules:
             raise ValueError(
                 f"backend {self.backend!r} does not support "

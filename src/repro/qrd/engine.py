@@ -126,25 +126,51 @@ class QRDEngine:
 
     @staticmethod
     def _resolve_tuned(config: QRDConfig, m: int, n: int) -> QRDConfig:
-        """Fill ``tile_b``/``table_layout`` from the autotune cache.
+        """Fill tuned kernel parameters from the autotune cache.
 
-        Only fires for the tunable Pallas backends when the config left
-        ``tile_b=None`` (an explicit value always wins).  Runs *before*
-        jitted-callable cache-key formation so a cache entry appearing
-        between calls misses the LRU instead of silently running the
-        stale tile.  Cost on a tuned run is one ``os.stat``
-        (`repro.kernels.autotune.lookup` memoizes the file by mtime).
+        Only fires for the tunable Pallas backends, and only for fields
+        the config left ``None`` (an explicit value always wins):
+        ``tile_b``/``table_layout`` from the flat entry, and — when the
+        shape routes onto a tiled datapath — ``panel_n``/``tile_m``
+        from the ``/tiled-<route>`` entry (`autotune.tune_tiled`).
+        Runs *before* jitted-callable cache-key formation so a cache
+        entry appearing between calls misses the LRU instead of
+        silently running the stale tile.  Cost on a tuned run is one
+        ``os.stat`` (`repro.kernels.autotune.lookup` memoizes the file
+        by mtime).
         """
-        if (config.tile_b is not None
-                or config.backend not in autotune.TUNABLE_BACKENDS):
+        if config.backend not in autotune.TUNABLE_BACKENDS:
             return config
-        hit = autotune.lookup(config.backend, config.schedule, m, n,
-                              config.dtype)
-        if hit is None:
-            return config
-        layout = (config.table_layout if config.table_layout is not None
-                  else hit.table_layout)
-        return config.replace(tile_b=hit.tile_b, table_layout=layout)
+        if config.tile_b is None:
+            hit = autotune.lookup(config.backend, config.schedule, m, n,
+                                  config.dtype)
+            if hit is not None:
+                layout = (config.table_layout
+                          if config.table_layout is not None
+                          else hit.table_layout)
+                config = config.replace(tile_b=hit.tile_b,
+                                        table_layout=layout)
+        if config.panel_n is None or config.tile_m is None:
+            from . import registry, tiled
+            caps = registry.get_backend(config.backend).capabilities
+            if not caps.supports_tiling:
+                return config
+            try:
+                route = tiled.resolve_route(config, m, n, caps)
+            except ValueError:
+                return config      # dispatch re-raises the clear error
+            if route in ("panel", "tsqr"):
+                hit = autotune.lookup(config.backend, "col", m, n,
+                                      config.dtype, tiling=route)
+                if hit is not None:
+                    updates = {}
+                    if config.panel_n is None and hit.panel_n is not None:
+                        updates["panel_n"] = hit.panel_n
+                    if config.tile_m is None and hit.tile_m is not None:
+                        updates["tile_m"] = hit.tile_m
+                    if updates:
+                        config = config.replace(**updates)
+        return config
 
     def _dispatch(self, A, compute_q, config: QRDConfig | None = None):
         """Registry dispatch with the bounded jitted-callable LRU.
@@ -157,6 +183,16 @@ class QRDEngine:
         complex datapath where capable and raise ``TypeError`` otherwise.
         `_resolve_tuned` then fills autotuned tile parameters before the
         cache key is formed.
+
+        Shapes beyond the flat kernels' `BackendCapabilities.max_shape`
+        route onto the tiled datapaths (`repro.qrd.tiled`): panel sweeps
+        when the rows still fit one tile, TSQR tree reduction for
+        tall-skinny operands.  `tiled.resolve_route` is deterministic in
+        ``(m, n, config)`` — the cache key needs no route component —
+        and raises a ``ValueError`` naming ``max_shape`` and the tiled
+        alternatives when no route can hold the operand (instead of the
+        opaque Pallas failure oversized shapes used to hit).  Note the
+        TSQR route returns *economy* factors (``Q (m, n), R (n, n)``).
         """
         if config is None:
             config = self.config
@@ -168,8 +204,15 @@ class QRDEngine:
         key = (m, n, bool(compute_q), config.cache_key())
         fn = self._fn_cache.pop(key, None)
         if fn is None:
+            from . import tiled
             spec = config.validate()
-            fn = jax.jit(spec.builder(config, m, n, bool(compute_q)))
+            route = tiled.resolve_route(config, m, n, spec.capabilities)
+            if route == "flat":
+                fn = jax.jit(spec.builder(config, m, n, bool(compute_q)))
+            else:
+                fn = jax.jit(tiled.build_tiled(route, config, m, n,
+                                               bool(compute_q),
+                                               spec.capabilities))
         self._fn_cache[key] = fn           # (re-)insert as most-recent
         while len(self._fn_cache) > self._max_cache:
             self._fn_cache.popitem(last=False)

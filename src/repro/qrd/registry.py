@@ -62,6 +62,21 @@ class BackendCapabilities:
         complex-capable: `QRDConfig` validation rejects complex dtypes on
         backends without one, and `QRDEngine` routes complex operands
         onto the complex datapath only where one is declared.
+    max_shape : tuple[int, int] or None
+        Largest ``(m, n)`` a *single flat* (one-tile) factorization may
+        have on this backend, or ``None`` for "unbounded" (host loops and
+        jnp reference paths).  Bounded backends are the kernel-resident
+        ones: one matrix tile must fit VMEM, and the int32 block-FP
+        datapath additionally caps m by fixed-point headroom (frac + 2
+        CORDIC guard bits + log2(sqrt(m)) column-growth must stay inside
+        a signed 32-bit word — DESIGN.md §14).  The engine consults this
+        to auto-route oversized operands onto the tiled layer and to
+        raise a shape error naming the capacity instead of letting the
+        kernel fail deep inside Pallas.
+    supports_tiling : bool
+        The backend's kernels compose with the tiled panel/TSQR layer
+        (`repro.qrd.tiled`): its rotation control words can be exported
+        from a panel factorization and replayed across trailing panels.
     description : str
         One line for docs and error messages.
     """
@@ -71,12 +86,20 @@ class BackendCapabilities:
     wavefront: bool = False
     sharding: bool = False
     dtypes: tuple[str, ...] = ("float64",)
+    max_shape: tuple[int, int] | None = None
+    supports_tiling: bool = False
     description: str = ""
 
     @property
     def supports_complex(self) -> bool:
         """Whether the backend declares a complex datapath."""
         return any(d.startswith("complex") for d in self.dtypes)
+
+    def fits_flat(self, m: int, n: int) -> bool:
+        """Whether an ``(m, n)`` operand fits one flat (untiled) kernel call."""
+        if self.max_shape is None:
+            return True
+        return m <= self.max_shape[0] and n <= self.max_shape[1]
 
 
 @dataclasses.dataclass(frozen=True)

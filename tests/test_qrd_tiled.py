@@ -1,0 +1,368 @@
+"""Tiled QRD routes: panel bit-identity, TSQR tree reduction, routing.
+
+DESIGN.md §14 contracts:
+
+* the panel route replays the *identical* rotation sequence as the flat
+  column-major schedule (panel step tables concatenate to
+  `repro.core.qrd.givens_schedule`), so the packed datapath is
+  bit-identical to the flat kernels and to the host reference loop —
+  IEEE and HUB both;
+* the tsqr route's R is bit-identical to a host-composed tree reference
+  running the same padded tree through `repro.core.qrd.qr_cordic` one
+  node at a time; Q (float composition) matches to f64-rounding;
+* the float-path factors of both routes stay within the golden
+  tolerances vs ``np.linalg.qr`` on tall-skinny shapes, ragged last
+  tiles included;
+* `repro.qrd.tiled.resolve_route` is deterministic, keeps small shapes
+  on the flat path, and raises the documented capacity ``ValueError``
+  (naming ``max_shape`` and the tiled alternatives) instead of the old
+  opaque Pallas failure;
+* the tiled autotune entries round-trip and the engine fills
+  ``panel_n``/``tile_m`` from them only when the config left them None.
+
+The big acceptance shapes (64x64 panel, 4096x32 tsqr through
+``engine()``/``engine.solve()``) are marked ``slow`` — interpret-mode
+trace+compile dominates them; the fast lane still covers every contract
+at small shapes.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qrd as q
+from repro.core.givens import GivensConfig, GivensUnit
+from repro.kernels import autotune, ops
+from repro.qrd import QRDConfig, QRDEngine, get_backend, tiled
+
+
+def _caps(backend="blockfp_pallas"):
+    return get_backend(backend).capabilities
+
+
+# --------------------------------------------------------------------------
+# Route resolution (pure, no jit)
+# --------------------------------------------------------------------------
+def test_auto_small_shapes_stay_flat():
+    caps = _caps()
+    cfg = QRDConfig(backend="blockfp_pallas")
+    for m, n in ((4, 4), (8, 8), (32, 32), (32, 4)):
+        assert tiled.resolve_route(cfg, m, n, caps) == "flat"
+
+
+def test_auto_routes_panel_and_tsqr():
+    caps = _caps()
+    cfg = QRDConfig(backend="blockfp_pallas")
+    assert tiled.resolve_route(cfg, 64, 64, caps) == "panel"
+    assert tiled.resolve_route(cfg, 4096, 32, caps) == "tsqr"
+    # decisively tall-skinny routes tsqr even under the row capacity
+    assert tiled.resolve_route(cfg, 40, 4, caps) == "tsqr"
+    # wide-but-short exceeds FLAT_LIMIT columns: panel streams them
+    assert tiled.resolve_route(cfg, 16, 200, caps) == "panel"
+
+
+def test_forced_tiling_is_honored():
+    caps = _caps()
+    cfg = QRDConfig(backend="blockfp_pallas", tiling="panel")
+    assert tiled.resolve_route(cfg, 4, 4, caps) == "panel"
+    cfg = QRDConfig(backend="blockfp_pallas", tiling="tsqr")
+    assert tiled.resolve_route(cfg, 40, 4, caps) == "tsqr"
+    cfg = QRDConfig(backend="blockfp_pallas", tiling="flat")
+    assert tiled.resolve_route(cfg, 32, 32, caps) == "flat"
+
+
+def test_non_tiling_backends_always_flat():
+    caps = _caps("cordic")
+    cfg = QRDConfig(backend="cordic")
+    assert tiled.resolve_route(cfg, 10000, 64, caps) == "flat"
+    assert caps.fits_flat(10000, 64)       # max_shape=None: no cap
+
+
+def test_capacity_error_names_max_shape_and_alternatives():
+    caps = _caps()
+    cfg = QRDConfig(backend="blockfp_pallas", tiling="flat")
+    with pytest.raises(ValueError, match=r"max_shape=\(128, 128\)"):
+        tiled.resolve_route(cfg, 200, 4, caps)
+    with pytest.raises(ValueError, match="tiling='tsqr'"):
+        tiled.resolve_route(cfg, 200, 4, caps)
+    # auto dead-end: too many rows AND too wide for tsqr nodes
+    cfg = QRDConfig(backend="blockfp_pallas")
+    with pytest.raises(ValueError, match="max_shape"):
+        tiled.resolve_route(cfg, 200, 200, caps)
+
+
+def test_sameh_kuck_and_complex_reject_tiled_routes():
+    caps = _caps("cordic_pallas")
+    cfg = QRDConfig(backend="cordic_pallas", schedule="sameh_kuck",
+                    tiling="panel")
+    with pytest.raises(ValueError, match="sameh_kuck"):
+        tiled.resolve_route(cfg, 64, 64, caps)
+    cfg = QRDConfig(backend="cordic_pallas", dtype="complex128",
+                    tiling="tsqr")
+    with pytest.raises(ValueError, match="complex"):
+        tiled.resolve_route(cfg, 4096, 32, caps)
+
+
+def test_engine_raises_capacity_error_at_dispatch():
+    eng = QRDEngine(QRDConfig(backend="blockfp_pallas", tiling="flat"))
+    with pytest.raises(ValueError, match="max_shape"):
+        eng(np.zeros((200, 4)))
+    with pytest.raises(ValueError, match="tiling='panel'"):
+        eng.solve(np.zeros((200, 4)), np.zeros(200))
+
+
+def test_config_validates_tiling_fields():
+    with pytest.raises(ValueError, match="unknown tiling"):
+        QRDConfig(backend="blockfp_pallas", tiling="bogus").validate()
+    with pytest.raises(ValueError, match="tile_m"):
+        QRDConfig(backend="blockfp_pallas", tile_m=1).validate()
+    with pytest.raises(ValueError, match="no tiled datapath"):
+        QRDConfig(backend="cordic", tiling="panel").validate()
+    QRDConfig(backend="blockfp_pallas", tiling="tsqr",
+              tile_m=64, panel_n=8).validate()
+
+
+# --------------------------------------------------------------------------
+# Panel route: bit-identity with the flat schedule (kernel level)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("hub", [False, True])
+def test_panel_packed_bit_identical_to_flat(hub):
+    rng = np.random.default_rng(0)
+    m, n = 12, 6
+    A = jnp.asarray(rng.standard_normal((2, m, n)))
+    unit = GivensUnit(GivensConfig(hub=hub))
+    P = unit.encode(q._augment(A, True))
+    flat = ops.qr_packed(P, cfg=unit.cfg, steps=q.givens_schedule(m, n))
+    for pw in (3, 8):      # ragged and aligned panel widths
+        pan = ops.qr_packed_panel(P, cfg=unit.cfg, n_cols=n, panel_n=pw)
+        assert bool(jnp.all(pan == flat)), f"hub={hub} pw={pw}"
+
+
+@pytest.mark.parametrize("hub", [False, True])
+def test_panel_blockfp_bit_identical_to_flat(hub):
+    rng = np.random.default_rng(1)
+    m, n = 12, 6
+    W = q._augment(jnp.asarray(rng.standard_normal((2, m, n))), True)
+    flat = ops.givens_block_apply(W, q.givens_schedule(m, n), hub=hub)
+    pan = ops.givens_block_apply_panel(W, n_cols=n, hub=hub, panel_n=4)
+    assert bool(jnp.all(pan == flat))
+
+
+def test_panel_steps_concatenate_to_flat_schedule():
+    m, n = 9, 5
+    flat = q.givens_schedule(m, n)
+    got = []
+    for c0 in range(0, min(n, m - 1), 2):
+        nc = min(2, n - c0)
+        piv, tgt, col = ops.panel_steps(m - c0, nc)
+        got += [(int(p) + c0, int(t) + c0, int(c) + c0)
+                for p, t, c in zip(piv, tgt, col)]
+    assert tuple(got) == flat
+
+
+# --------------------------------------------------------------------------
+# Panel route through the engine: bit-identical to the host reference
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("hub", [False, True])
+def test_engine_panel_matches_host_reference_bitwise(hub):
+    rng = np.random.default_rng(2)
+    # 24x10 at panel_n=4: three panels (ragged last) — big enough to
+    # exercise trailing-panel replay, small enough that the interpret
+    # -mode flat reference kernel stays in CI budget.
+    m, n = 24, 10
+    A = rng.standard_normal((m, n))
+    eng = QRDEngine(QRDConfig(backend="cordic_pallas",
+                              givens=GivensConfig(hub=hub), tiling="panel",
+                              panel_n=4))
+    Q, R = eng(A)
+    # Reference: the flat kernel path (itself bit-identical to the
+    # qr_cordic host loop — see test_qrd_blocked).  Eager qr_cordic at
+    # this size dispatches thousands of tiny per-primitive XLA compiles
+    # (CPU-compiler segfault territory late in a long suite).
+    unit = GivensUnit(GivensConfig(hub=hub))
+    Qr, Rr = q.qr_cordic_pallas(jnp.asarray(A), unit)
+    assert np.array_equal(np.asarray(R), np.asarray(Rr))
+    assert np.array_equal(np.asarray(Q), np.asarray(Qr))
+
+
+# --------------------------------------------------------------------------
+# TSQR tree: R bit-identical to the host-composed tree reference
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("hub", [False, True])
+def test_tsqr_r_bit_identical_to_host_tree(hub):
+    rng = np.random.default_rng(3)
+    m, n, tm = 40, 4, 12          # ragged last leaf (40 = 3*12 + 4)
+    A = rng.standard_normal((m, n))
+    eng = QRDEngine(QRDConfig(backend="cordic_pallas",
+                              givens=GivensConfig(hub=hub),
+                              tiling="tsqr", tile_m=tm))
+    Q, R = eng(A)
+    unit = GivensUnit(GivensConfig(hub=hub))
+    Qr, Rr = tiled.tsqr_host_reference(
+        A, lambda X: q.qr_cordic(jnp.asarray(X), unit), tm)
+    assert np.array_equal(np.asarray(R), Rr)
+    # Q is float composition: XLA vs host BLAS sum orders differ
+    np.testing.assert_allclose(np.asarray(Q), Qr, atol=1e-12)
+    assert np.abs(np.asarray(Q) @ np.asarray(R) - A).max() < 1e-4
+
+
+def test_tsqr_returns_economy_factors():
+    rng = np.random.default_rng(4)
+    m, n = 40, 4
+    A = rng.standard_normal((2, m, n))
+    eng = QRDEngine(QRDConfig(backend="blockfp_pallas", tiling="tsqr",
+                              tile_m=12))
+    Q, R = eng(A)
+    assert Q.shape == (2, m, n) and R.shape == (2, n, n)
+    _, R_only = eng(A, compute_q=False)
+    assert R_only.shape == (2, n, n)
+
+
+# --------------------------------------------------------------------------
+# Float-path golden tolerances vs np.linalg.qr (tall-skinny, ragged)
+# --------------------------------------------------------------------------
+def _sign_normalize(Q, R):
+    """Fix the QR sign ambiguity: make every R diagonal non-negative."""
+    s = np.sign(np.diagonal(R, axis1=-2, axis2=-1))
+    s = np.where(s == 0, 1.0, s)
+    return Q * s[..., None, :], R * s[..., None]
+
+
+@pytest.mark.parametrize("tiling,m,n,tm", [("tsqr", 40, 4, 12),
+                                           ("panel", 33, 5, None)])
+def test_float_factors_match_numpy_golden(tiling, m, n, tm):
+    rng = np.random.default_rng(5)
+    A = rng.standard_normal((m, n))
+    eng = QRDEngine(QRDConfig(backend="blockfp_pallas", tiling=tiling,
+                              tile_m=tm, panel_n=3))
+    Q, R = eng(A)
+    Qn, Rn = np.linalg.qr(A)                        # economy reference
+    Qg, Rg = _sign_normalize(np.asarray(Q)[:, :n], np.asarray(R)[:n, :])
+    Qn, Rn = _sign_normalize(Qn, Rn)
+    np.testing.assert_allclose(Rg, Rn, atol=1e-3 * np.abs(Rn).max())
+    np.testing.assert_allclose(Qg, Qn, atol=2e-3)
+    orth = np.asarray(Q)[:, :n]
+    assert np.abs(orth.T @ orth - np.eye(n)).max() < 1e-3
+
+
+def test_solve_routes_through_tsqr():
+    rng = np.random.default_rng(6)
+    m, n = 40, 4
+    A = rng.standard_normal((m, n))
+    b = rng.standard_normal(m)
+    eng = QRDEngine(QRDConfig(backend="cordic_pallas", tiling="tsqr",
+                              tile_m=12))
+    x, resid = eng.solve(A, b, return_residuals=True)
+    xr, res, *_ = np.linalg.lstsq(A, b, rcond=None)
+    np.testing.assert_allclose(np.asarray(x), xr, atol=1e-4)
+    np.testing.assert_allclose(float(resid), np.sqrt(res[0]), rtol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# Acceptance shapes (slow lane): 64x64 panel, 4096x32 tsqr end-to-end
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+def test_engine_64x64_end_to_end():
+    rng = np.random.default_rng(7)
+    A = rng.standard_normal((64, 64))
+    eng = QRDEngine(QRDConfig(backend="blockfp_pallas"))   # auto -> panel
+    Q, R = eng(A)
+    assert Q.shape == (64, 64) and R.shape == (64, 64)
+    assert np.abs(np.asarray(Q) @ np.asarray(R) - A).max() < 2e-3
+    assert np.abs(np.asarray(Q).T @ np.asarray(Q) - np.eye(64)).max() < 1e-3
+
+
+@pytest.mark.slow
+def test_engine_4096x32_tsqr_end_to_end():
+    rng = np.random.default_rng(8)
+    m, n = 4096, 32
+    A = rng.standard_normal((m, n))
+    eng = QRDEngine(QRDConfig(backend="blockfp_pallas"))   # auto -> tsqr
+    Q, R = eng(A)
+    assert Q.shape == (m, n) and R.shape == (n, n)
+    assert np.abs(np.asarray(Q) @ np.asarray(R) - A).max() < 2e-3
+    assert np.abs(np.asarray(Q).T @ np.asarray(Q) - np.eye(n)).max() < 1e-3
+
+
+# --------------------------------------------------------------------------
+# Tiled autotune: persistence, engine linkage, explicit-wins
+# --------------------------------------------------------------------------
+@pytest.fixture
+def cache(tmp_path, monkeypatch):
+    path = str(tmp_path / "qrd_autotune.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    autotune.clear_memo()
+    yield path
+    autotune.clear_memo()
+
+
+def test_tiled_candidates_model():
+    assert autotune.candidate_panel_ns(64) == (4, 8, 16)
+    assert autotune.candidate_panel_ns(2) == (2,)
+    assert autotune.candidate_tile_ms(4096, 32) == (64, 128)
+    assert autotune.candidate_tile_ms(4096, 4, max_m=128) == (32, 64, 128)
+    assert autotune.candidate_tile_ms(40, 32) != ()    # never empty
+
+
+def test_tune_tiled_persists_and_lookup_roundtrips(cache):
+    calls = []
+
+    def fake_timer(fn, A, reps):
+        calls.append(1)
+        return float(len(calls))      # first candidate wins
+
+    entry = autotune.tune_tiled("blockfp_pallas", 4096, 32, 1,
+                                tiling="tsqr", timer=fake_timer)
+    assert entry.tile_m == 64 and entry.panel_n == 4
+    assert len(entry.candidates) == len(calls)
+    hit = autotune.lookup("blockfp_pallas", "col", 4096, 32, "float64",
+                          tiling="tsqr")
+    assert hit is not None
+    assert (hit.tile_m, hit.panel_n) == (64, 4)
+    # the flat key at the same shape is untouched
+    assert autotune.lookup("blockfp_pallas", "col", 4096, 32,
+                           "float64") is None
+
+
+def test_tuned_entry_json_backcompat():
+    old = {"tile_b": 8, "table_layout": None, "warm_s": 0.1}
+    entry = autotune.TuneEntry.from_json(old)
+    assert entry.panel_n is None and entry.tile_m is None
+    assert "panel_n" not in entry.to_json()
+
+
+def test_engine_fills_tuned_tiled_knobs(cache):
+    autotune.tune_tiled("blockfp_pallas", 40, 4, 1, tiling="tsqr",
+                        timer=lambda fn, A, reps: 1.0,
+                        tile_ms=(16,), panel_ns=(2,))
+    # lookup keys include the dtype: pin it to the tune_tiled default
+    eng = QRDEngine(QRDConfig(backend="blockfp_pallas", tiling="tsqr",
+                              dtype="float64"))
+    resolved = eng._resolve_tuned(eng.config, 40, 4)
+    assert (resolved.tile_m, resolved.panel_n) == (16, 2)
+    # explicit values always win over the cache
+    explicit = QRDConfig(backend="blockfp_pallas", tiling="tsqr",
+                         dtype="float64", tile_m=24, panel_n=4)
+    resolved = eng._resolve_tuned(explicit, 40, 4)
+    assert (resolved.tile_m, resolved.panel_n) == (24, 4)
+
+
+# --------------------------------------------------------------------------
+# Sharding specs for tree levels
+# --------------------------------------------------------------------------
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+def test_tsqr_node_spec_shards_node_axis():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.sharding import tsqr_node_spec
+    mesh = FakeMesh({"data": 16, "model": 16})
+    assert tsqr_node_spec(3, 32, mesh) == P(("data",), None, None)
+    # node counts that stop dividing replicate (upper tree levels)
+    assert tsqr_node_spec(3, 3, mesh) == P(None, None, None)
